@@ -1,0 +1,47 @@
+"""Fig. 5 reproduction: throughput vs #CSDs × batch size for the three NLP
+apps, via the pull-scheduler simulation calibrated to the paper's
+single-node rates.  Emits CSV rows and validates the paper's endpoints."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.apps import APPS
+from repro.core.scheduler import PullScheduler, make_cluster, optimal_batch_ratio
+
+CSD_COUNTS = (0, 9, 18, 27, 36)
+BATCH_SCALES = (0.5, 1.0, 2.0)
+
+
+def run(emit=print):
+    emit("table,app,n_csds,batch_size,throughput,csd_fraction,speedup,"
+         "paper_speedup")
+    results = {}
+    for app in APPS.values():
+        ratio = optimal_batch_ratio(app.host_rate, app.csd_rate)
+        items = app.total_items
+        base_nodes = make_cluster(app.host_rate, app.csd_rate, 0,
+                                  host_overhead=0.05, csd_overhead=0.02)
+        base = PullScheduler(base_nodes, app.batch_size, ratio,
+                             poll_interval=0.05).run(items).throughput
+        for scale in BATCH_SCALES:
+            batch = max(1, int(app.batch_size * scale))
+            for n in CSD_COUNTS:
+                nodes = make_cluster(app.host_rate, app.csd_rate, n,
+                                     host_overhead=0.05, csd_overhead=0.02)
+                sched = PullScheduler(nodes, batch, ratio, poll_interval=0.05)
+                r = sched.run(items)
+                speed = r.throughput / base
+                paper = app.paper_with_36 / app.paper_host_only \
+                    if n == 36 else float("nan")
+                emit(f"fig5,{app.name},{n},{batch},{r.throughput:.1f},"
+                     f"{r.csd_fraction:.3f},{speed:.2f},{paper:.2f}")
+                results[(app.name, n, scale)] = r
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fig. 6 reproduction: single-node throughput vs batch size (sentiment),
+host vs CSD, showing the fixed-overhead amortization the paper measured."""
+from __future__ import annotations
+
+from repro.core.scheduler import Node
+
+
+def run(emit=print):
+    emit("table,node,batch_size,throughput")
+    host = Node("host", 9_800.0, batch_overhead=2.0, is_host=True)
+    csd = Node("csd", 380.0, batch_overhead=2.0)
+    for node in (host, csd):
+        for batch in (1_000, 4_000, 10_000, 40_000, 100_000):
+            emit(f"fig6,{node.name},{batch},{node.effective_rate(batch):.1f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

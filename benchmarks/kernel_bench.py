@@ -1,0 +1,67 @@
+"""Kernel microbenchmarks: wall time of the jnp execution paths on CPU
+(the Pallas kernels are TPU-target; interpret mode timing is meaningless,
+so we time the identical-math jnp paths and report derived items/s)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6      # us
+
+
+def run(emit=print):
+    emit("table,kernel,shape,us_per_call,derived")
+    rng = np.random.default_rng(0)
+
+    B, S, H, Hkv, dh = 2, 1024, 8, 4, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, dh)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)), jnp.bfloat16)
+    fa = jax.jit(lambda q, k, v: kops.flash_attention(q, k, v, impl="jnp"))
+    us = _time(fa, q, k, v)
+    emit(f"kernels,flash_attention,B{B}xS{S}xH{H}x{dh},{us:.0f},"
+         f"{B * S / us * 1e6:.0f} tok/s")
+
+    qd = jnp.asarray(rng.normal(size=(B, H, dh)), jnp.bfloat16)
+    kpos = jnp.arange(S, dtype=jnp.int32)
+    dp = jax.jit(lambda q, k, v: kops.decode_partial(
+        q, k, v, kpos, jnp.int32(S - 1), impl="jnp"))
+    us = _time(dp, qd, k, v)
+    emit(f"kernels,isp_decode_partial,B{B}xS{S},{us:.0f},"
+         f"{B / us * 1e6:.0f} steps/s")
+
+    table = jnp.asarray(rng.normal(size=(65536, 128)), jnp.bfloat16)
+    idx = jnp.asarray(rng.integers(0, 262144, (8192,)), jnp.int32)
+    ig = jax.jit(lambda t, i: kops.isp_gather(t, i, shard_offset=65536,
+                                              impl="jnp"))
+    us = _time(ig, table, idx)
+    emit(f"kernels,isp_gather,V65536xD128xN8192,{us:.0f},"
+         f"{8192 / us * 1e6:.0f} lookups/s")
+
+    qs = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    corpus = jnp.asarray(rng.normal(size=(58_000, 128)), jnp.float32)
+    tk = jax.jit(lambda q, c: kops.topk_similarity(q, c, 10, impl="jnp"))
+    us = _time(tk, qs, corpus)
+    emit(f"kernels,topk_similarity,Q256xN58000xD128,{us:.0f},"
+         f"{256 / us * 1e6:.0f} queries/s")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

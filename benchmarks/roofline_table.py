@@ -1,0 +1,35 @@
+"""Roofline table: reads the dry-run JSONs (results/dryrun) and prints the
+per-(arch × shape × mesh) three-term roofline summary (§Roofline)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run(emit=print):
+    emit("table,arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+         "mfu,useful_ratio,GB_per_device")
+    if not RESULTS.exists():
+        emit("roofline,NO_DRYRUN_RESULTS,run python -m repro.launch.dryrun "
+             "--all,,,,,,,,")
+        return
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") != "ok":
+            continue
+        r = d["roofline"]
+        emit(f"roofline,{d['arch']},{d['shape']},{d['mesh']},"
+             f"{r['compute_s']:.4f},{r['memory_s']:.4f},"
+             f"{r['collective_s']:.4f},{r['dominant']},{r['mfu']:.4f},"
+             f"{r['useful_flops_ratio']:.3f},"
+             f"{d['bytes_per_device'] / 1e9:.1f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

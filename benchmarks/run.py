@@ -1,0 +1,36 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``python -m benchmarks.run`` prints ``name,...`` CSV for:
+  fig5    — throughput vs #CSDs × batch size (3 NLP apps)
+  fig6    — single-node batch-size sweep
+  table1  — energy per query + data-transfer reduction (incl. Fig. 7)
+  kernels — kernel microbenchmarks (us/call + derived rate)
+  roofline— per-(arch × shape × mesh) roofline terms from the dry-run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig5_throughput, fig6_batchsize, kernel_bench,
+                            roofline_table, table1_energy)
+    wanted = set(sys.argv[1:])
+
+    def want(name):
+        return not wanted or name in wanted
+
+    if want("fig5"):
+        fig5_throughput.run()
+    if want("fig6"):
+        fig6_batchsize.run()
+    if want("table1"):
+        table1_energy.run()
+    if want("kernels"):
+        kernel_bench.run()
+    if want("roofline"):
+        roofline_table.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Table I + Fig. 7 reproduction: energy per query, host-only vs 36-CSD ISP,
+plus data-transfer accounting (the 68/64/56% in-storage numbers)."""
+from __future__ import annotations
+
+from benchmarks.apps import APPS
+from repro.core.energy import energy_per_query_mj, energy_saving
+from repro.core.scheduler import PullScheduler, make_cluster, optimal_batch_ratio
+from repro.core.transfer import host_only_ledger, workload_split_ledger
+
+
+def run(emit=print):
+    emit("table,app,energy_host_mJ,energy_csd_mJ,saving,paper_host_mJ,"
+         "paper_csd_mJ,csd_fraction,link_reduction")
+    for app in APPS.values():
+        ratio = optimal_batch_ratio(app.host_rate, app.csd_rate)
+        nodes0 = make_cluster(app.host_rate, app.csd_rate, 0,
+                              host_overhead=0.05, csd_overhead=0.02)
+        nodes36 = make_cluster(app.host_rate, app.csd_rate, 36,
+                               host_overhead=0.05, csd_overhead=0.02)
+        items = app.total_items
+        t0 = PullScheduler(nodes0, app.batch_size, ratio, 0.05).run(items)
+        t36 = PullScheduler(nodes36, app.batch_size, ratio, 0.05).run(items)
+        e_host = energy_per_query_mj(t0.throughput, 0)
+        e_csd = energy_per_query_mj(t36.throughput, 36)
+        led = workload_split_ledger(app.dataset_bytes, t36.csd_fraction,
+                                    app.output_bytes)
+        base = host_only_ledger(app.dataset_bytes, app.output_bytes)
+        emit(f"table1,{app.name},{e_host:.0f},{e_csd:.0f},"
+             f"{1 - e_csd / e_host:.2f},{app.paper_energy_host_mj:.0f},"
+             f"{app.paper_energy_csd_mj:.0f},{t36.csd_fraction:.2f},"
+             f"{led.reduction_vs(base):.2f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""ISP embedding demo: "send indexes, not data" on a sharded vocab table.
+
+Shows the two execution plans for the same lookup —
+  baseline: all-gather the table to the data (the XLA default / the paper's
+            host-only configuration), vs
+  ISP:      route indexes to the owning shard, gather locally, psum rows —
+with the transfer ledger quantifying the link-byte reduction, and verifies
+they produce identical embeddings (single-process: shards emulated by
+slicing; the production shard_map path is exercised in tests/dryrun).
+
+Run:  PYTHONPATH=src python examples/isp_embedding_demo.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.transfer import embedding_plans
+from repro.kernels import ref
+
+V, D, TP = 65_536, 512, 16
+N_LOOKUPS = 8_192
+
+rng = np.random.default_rng(0)
+table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+idx = jnp.asarray(rng.integers(0, V, (N_LOOKUPS,)), jnp.int32)
+
+# dense reference (what a single giant node would do)
+want = jnp.take(table, idx, axis=0)
+
+# ISP: each shard owns V/TP rows; masked local gathers; psum completes it
+vloc = V // TP
+parts = [ref.isp_gather(table[i * vloc:(i + 1) * vloc], idx,
+                        shard_offset=i * vloc) for i in range(TP)]
+got = sum(parts)
+assert np.allclose(got, want, atol=1e-6)
+print(f"[isp] {N_LOOKUPS} lookups over {TP} shards: exact match with dense")
+
+base, isp = embedding_plans(N_LOOKUPS, V, D, tp=TP)
+print(f"[transfer] baseline (ship table): {base.total_moved/1e6:.1f} MB on the link")
+print(f"[transfer] ISP (ship indexes):    {isp.total_moved/1e6:.1f} MB on the link")
+print(f"[transfer] reduction: {isp.reduction_vs(base):.0%} — the paper's "
+      f"'data never leaves the drive', applied to a 65k-row table")
+
+# RecSSD-style fused pooling shrinks the result bytes further
+seg = jnp.asarray(rng.integers(0, 256, (N_LOOKUPS,)), jnp.int32)
+pooled = sum(ref.isp_gather_pool(table[i * vloc:(i + 1) * vloc], idx, seg, 256,
+                                 shard_offset=i * vloc) for i in range(TP))
+dense_pool = jnp.zeros((256, D)).at[seg].add(want)
+assert np.allclose(pooled, dense_pool, atol=1e-4)
+print(f"[pool] fused gather+pool returns {256*D*4/1e6:.1f} MB instead of "
+      f"{N_LOOKUPS*D*4/1e6:.1f} MB of rows — RecSSD offload, on-shard")

@@ -1,0 +1,46 @@
+"""Quickstart: the framework's public API in ~60 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config, reduced_config, get_shape, list_configs
+from repro.models import model as M
+
+print("Registered architectures:", ", ".join(list_configs()))
+
+# 1. Pick an architecture.  Full configs are the assigned production sizes;
+#    reduced_config gives the same wiring at CPU scale.
+cfg = reduced_config("gemma3-12b")
+print(f"\n{cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+      f"pattern={cfg.block_pattern} params={M.count_params(cfg):,}")
+
+# 2. Initialize and run a training step.
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+batch = {
+    "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+    "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32),
+}
+loss, metrics = M.loss_fn(params, batch, cfg)
+print(f"initial loss: {float(loss):.3f}")
+
+# 3. Serve: prefill a prompt, then decode greedily with resident KV caches.
+nxt, _ = M.prefill_fn(params, {"tokens": batch["tokens"]}, cfg)
+caches = M.init_caches(cfg, batch=2, max_len=48)
+tok = batch["tokens"][:, :1]
+for t in range(5):
+    nxt, caches = M.decode_fn(params, caches, tok, jnp.int32(t), cfg)
+    tok = nxt[:, None].astype(jnp.int32)
+print("greedy tokens:", [int(x) for x in np.asarray(nxt)])
+
+# 4. The production mesh is one function away (requires 256/512 devices —
+#    see python -m repro.launch.dryrun for the full multi-pod dry-run):
+shape = get_shape("train_4k")
+full = get_config("gemma3-12b")
+print(f"\nproduction cell: {full.name} × {shape.name} = "
+      f"{shape.tokens:,} tokens/step, {M.count_params(full):,} params")
+print("dry-run: PYTHONPATH=src python -m repro.launch.dryrun "
+      "--arch gemma3-12b --shape train_4k --mesh multipod")

@@ -1,0 +1,40 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the xLSTM-125m architecture at HALF width (≈ 100M params incl.
+embeddings) on synthetic data, with checkpointing and resume — kill it
+mid-run and rerun to see restart-exact resumption.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+from repro.config import get_config
+from repro.data import DataConfig
+from repro.models import model as M
+from repro.train.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    base = get_config("xlstm-125m")
+    cfg = dataclasses.replace(
+        base, name="xlstm-60m-demo", d_model=384, num_heads=4,
+        num_layers=8, block_pattern=("mlstm", "slstm"), scan_group=0,
+        remat="none")
+    print(f"[example] {cfg.name}: {M.count_params(cfg):,} params")
+
+    data_cfg = DataConfig(seq_len=128, global_batch=8,
+                          vocab_size=cfg.vocab_size)
+    tcfg = TrainConfig(steps=args.steps, log_every=20, ckpt_every=100,
+                       ckpt_dir=args.ckpt_dir, lr=1e-3, warmup=30)
+    state = train(cfg, data_cfg, tcfg)
+    print(f"[example] finished at step {state.step}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,375 @@
+"""Post-SPMD HLO analysis: trip-aware FLOP, byte and collective accounting.
+
+XLA's ``compiled.cost_analysis()`` counts each op once, ignoring while-loop
+trip counts — useless for scan-over-layers programs.  We therefore walk the
+optimized HLO text ourselves:
+
+  * build a per-computation symbol table (value name → shape),
+  * build a call graph (while body/condition with ``known_trip_count``,
+    fusions, calls, conditionals) and propagate execution weights,
+  * count FLOPs exactly for ``dot`` (2 · |result| · |contraction|) and
+    approximately (1 flop/elem of the result) for fused elementwise ops,
+  * count HBM bytes at fusion granularity (operands + result of each
+    non-trivial op — post-opt HLO is already fused so this approximates
+    actual traffic),
+  * count per-device collective wire bytes with ring-algorithm factors:
+      all-gather R·(g-1)/g,  reduce-scatter O·(g-1)/g,
+      all-reduce 2·O·(g-1)/g,  all-to-all O·(g-1)/g,  permute O.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s+([\w\-]+)")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_PAIR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+               "after-all", "partition-id", "replica-id", "iota", "while",
+               "conditional", "call", "custom-call"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+
+def _parse_dims(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shape(s: str) -> Tuple[Optional[str], Tuple[int, ...]]:
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return None, ()
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return m.group(1), dims
+
+
+def _shape_bytes_all(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        total += _parse_dims(m.group(2)) * _DTYPE_BYTES[dt]
+    return total
+
+
+# ops that read only a window of their (first) operand
+_SLICING = {"dynamic-slice", "slice", "gather"}
+# ops that write only a window (traffic = update read + update write)
+_WINDOW_WRITE = {"dynamic-update-slice"}
+
+
+@dataclass
+class OpRecord:
+    kind: str
+    result_bytes: int
+    operand_bytes: int
+    flops: float
+    elementwise: float = 0.0
+    wire_bytes: float = 0.0
+    coll_kind: str = ""
+    name: str = ""
+    hbm_bytes: float = 0.0          # slice-aware traffic (set at parse time)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[OpRecord] = field(default_factory=list)
+    # (callee, trip_factor)
+    calls: List[Tuple[str, int]] = field(default_factory=list)
+    fusion_bodies: List[str] = field(default_factory=list)
+    # param name -> (full_bytes, bytes actually read if all uses are slices)
+    param_reads: Dict[str, Tuple[int, Optional[int]]] = field(default_factory=dict)
+    # ordered fusion-call operand lists: op result name -> operand names
+    operand_names: Dict[str, List[str]] = field(default_factory=dict)
+    fusion_callee: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    elementwise_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    bytes_by_kind: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    count_by_kind: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_flops(self) -> float:
+        return self.flops + self.elementwise_flops
+
+    def as_dict(self) -> dict:
+        return {"dot_flops": self.flops, "elementwise_flops": self.elementwise_flops,
+                "total_flops": self.total_flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": self.collective_bytes,
+                "collective_bytes_by_kind": dict(self.bytes_by_kind),
+                "collective_count_by_kind": dict(self.count_by_kind)}
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_PAIR_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return 2
+
+
+def parse_module(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    symbols: Dict[str, str] = {}      # value -> shape string (per computation)
+
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        cm = None
+        # computation headers: "%name (params...) -> type {"; beware that
+        # parameter lists contain "/*index=5*/" comments (bare "=" is fine,
+        # only op definitions have " = ")
+        if line.endswith("{") and "->" in line and " = " not in line:
+            cm = _COMP_RE.match(line.strip())
+        if cm:
+            current = Computation(cm.group(1))
+            comps[current.name] = current
+            symbols = {}
+            continue
+        if current is None:
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        name, shape_str, kind = dm.groups()
+        symbols[name] = shape_str
+
+        # call graph edges
+        if kind == "while":
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else 1
+            bm = re.search(r"body=%?([\w\.\-]+)", line)
+            cm2 = re.search(r"condition=%?([\w\.\-]+)", line)
+            if bm:
+                current.calls.append((bm.group(1), trip))
+            if cm2:
+                current.calls.append((cm2.group(1), trip + 1))
+        elif kind == "fusion":
+            fm = re.search(r"calls=%?([\w\.\-]+)", line)
+            if fm:
+                # fusion bodies are covered by the fusion op itself (traffic =
+                # operands+result; flops ~ result elems); exclude from walk.
+                current.fusion_bodies.append(fm.group(1))
+        elif kind in ("call", "custom-call"):
+            fm = re.search(r"to_apply=%?([\w\.\-]+)", line)
+            if fm:
+                current.calls.append((fm.group(1), 1))
+        elif kind == "conditional":
+            for fm in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                  r"true_computation=%?([\w\.\-]+)|"
+                                  r"false_computation=%?([\w\.\-]+))", line):
+                names = fm.group(1) or ""
+                for n in re.findall(r"%?([\w\.\-]+)", names):
+                    current.calls.append((n, 1))
+                for g in (fm.group(2), fm.group(3)):
+                    if g:
+                        current.calls.append((g, 1))
+
+        # op record
+        args = line.split("(", 1)[1] if "(" in line else ""
+        arg_names = _OPERAND_RE.findall(args.split("metadata")[0])
+        operand_bytes = sum(_shape_bytes_all(symbols.get(a, "")) for a in arg_names)
+        result_bytes = _shape_bytes_all(shape_str)
+
+        # slice-aware HBM traffic estimate for this op
+        if kind in _SLICING:
+            hbm = 2.0 * result_bytes                 # read window + write result
+        elif kind in _WINDOW_WRITE:
+            upd = _shape_bytes_all(symbols.get(arg_names[1], "")) if len(arg_names) > 1 else result_bytes
+            hbm = 2.0 * upd                          # read update + write window
+        elif kind == "broadcast":
+            hbm = result_bytes
+        else:
+            hbm = result_bytes + operand_bytes
+
+        # track how fusion-body parameters are read (full vs sliced)
+        if kind == "parameter":
+            current.param_reads[name] = (result_bytes, 0)
+        for a in arg_names:
+            if a in current.param_reads:
+                full, sliced = current.param_reads[a]
+                if sliced is not None:
+                    if kind in _SLICING and arg_names and arg_names[0] == a:
+                        current.param_reads[a] = (full, sliced + 2 * result_bytes)
+                    elif kind in _WINDOW_WRITE and a == arg_names[0]:
+                        upd_b = _shape_bytes_all(symbols.get(arg_names[1], "")) if len(arg_names) > 1 else 0
+                        current.param_reads[a] = (full, sliced + 2 * upd_b)
+                    else:
+                        current.param_reads[a] = (full, None)   # full read
+        if kind == "fusion":
+            fm2 = re.search(r"calls=%?([\w\.\-]+)", line)
+            if fm2:
+                current.fusion_callee[name] = fm2.group(1)
+                current.operand_names[name] = arg_names
+
+        flops = 0.0
+        ew = 0.0
+        if kind == "dot":
+            _, rdims = _first_shape(shape_str)
+            cm3 = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            contract = 1
+            if cm3 and arg_names:
+                lhs_shape = symbols.get(arg_names[0], "")
+                _, ldims = _first_shape(lhs_shape)
+                for d in cm3.group(1).split(","):
+                    if d and int(d) < len(ldims):
+                        contract *= ldims[int(d)]
+            n_res = 1
+            for d in rdims:
+                n_res *= d
+            flops = 2.0 * n_res * contract
+        elif kind not in _NO_TRAFFIC and kind not in _COLLECTIVES:
+            # fused elementwise / reductions: ~1 flop per result element
+            _, rdims = _first_shape(shape_str)
+            n_res = 1
+            for d in rdims:
+                n_res *= d
+            ew = float(n_res)
+
+        rec = OpRecord(kind=kind, result_bytes=result_bytes,
+                       operand_bytes=operand_bytes, flops=flops, elementwise=ew,
+                       name=name, hbm_bytes=hbm)
+        if kind in _COLLECTIVES:
+            base_kind = kind.replace("-start", "")
+            g = _group_size(line)
+            factor = (g - 1) / g
+            ob = operand_bytes or result_bytes
+            if base_kind == "all-gather":
+                rec.wire_bytes = result_bytes * factor
+            elif base_kind == "reduce-scatter":
+                rec.wire_bytes = ob * factor
+            elif base_kind == "all-reduce":
+                rec.wire_bytes = 2.0 * ob * factor
+            elif base_kind == "all-to-all":
+                rec.wire_bytes = ob * factor
+            else:
+                rec.wire_bytes = ob
+            rec.coll_kind = base_kind
+        current.ops.append(rec)
+    return comps
+
+
+def _weights(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Execution weight per computation (roots = 1; propagate trip counts).
+
+    Fusion bodies get weight 0 (their cost is carried by the fusion op)."""
+    import functools
+    import sys
+    sys.setrecursionlimit(10000)
+
+    callers: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    called = set()
+    fused = set()
+    for c in comps.values():
+        for callee, trip in c.calls:
+            callers[callee].append((c.name, trip))
+            called.add(callee)
+        fused.update(c.fusion_bodies)
+    roots = {n for n in comps if n not in called and n not in fused}
+
+    @functools.lru_cache(maxsize=None)
+    def w(name: str) -> float:
+        if name in fused:
+            return 0.0
+        if name in roots:
+            return 1.0
+        return sum(w(cn) * trip for cn, trip in callers.get(name, []))
+
+    return {name: w(name) for name in comps}
+
+
+def analyze(hlo_text: str) -> HloStats:
+    comps = parse_module(hlo_text)
+    weights = _weights(comps)
+    stats = HloStats()
+    for name, comp in comps.items():
+        wt = weights.get(name, 1.0)
+        if wt == 0.0:
+            continue          # fusion bodies / dead computations
+        for op in comp.ops:
+            stats.flops += wt * op.flops
+            stats.elementwise_flops += wt * op.elementwise
+            if op.kind not in _NO_TRAFFIC:
+                stats.hbm_bytes += wt * _op_traffic(op, comp, comps)
+            if op.coll_kind:
+                stats.collective_bytes += wt * op.wire_bytes
+                stats.bytes_by_kind[op.coll_kind] += wt * op.wire_bytes
+                stats.count_by_kind[op.coll_kind] += wt
+    return stats
+
+
+def _op_traffic(op: OpRecord, comp: Computation, comps: Dict[str, Computation]) -> float:
+    """Slice-aware HBM traffic: fusion operands consumed only through
+    dynamic-slice/slice inside the body count their windows, not the full
+    buffer (critical for scan-over-chunks attention loops)."""
+    if op.kind != "fusion":
+        return op.hbm_bytes
+    body = comps.get(comp.fusion_callee.get(op.name, ""))
+    operands = comp.operand_names.get(op.name, [])
+    if body is None or not operands:
+        return op.hbm_bytes
+    # fusion body parameters are parameter(i) in order of operands
+    params = [o.name for o in body.ops if o.kind == "parameter"]
+    total = float(op.result_bytes)
+    # map body param order by the index in its definition order
+    for i, arg in enumerate(operands):
+        full = 0
+        sliced = None
+        if i < len(params):
+            full, sliced = body.param_reads.get(params[i], (0, None))
+        if sliced is not None and sliced < full:
+            total += sliced
+        else:
+            total += full
+    return total
+
+
+# Backwards-compatible collective-only interface ----------------------------
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    def as_dict(self) -> dict:
+        return {"bytes_by_kind": dict(self.bytes_by_kind),
+                "count_by_kind": dict(self.count_by_kind),
+                "total_bytes": self.total_bytes}
+
+
+def collective_stats(hlo_text: str, **_kw) -> CollectiveStats:
+    s = analyze(hlo_text)
+    return CollectiveStats(bytes_by_kind=dict(s.bytes_by_kind),
+                           count_by_kind=dict(s.count_by_kind))

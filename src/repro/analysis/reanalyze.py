@@ -1,0 +1,38 @@
+"""Recompute roofline terms for existing dry-run JSONs from their cached
+HLO text (used when the analyzer improves — no recompilation needed).
+
+  PYTHONPATH=src python -m repro.analysis.reanalyze [results/dryrun]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from repro.analysis.roofline import from_hlo_text, model_flops_for
+from repro.analysis.top_ops import load_hlo
+from repro.config import get_config, get_shape
+
+
+def main():
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    for j in sorted(root.glob("*.json")):
+        h = j.with_suffix("").with_suffix("")  # strip .json
+        hlo = root / (j.stem + ".hlo.zst")
+        if not hlo.exists():
+            continue
+        d = json.loads(j.read_text())
+        if d.get("status") != "ok":
+            continue
+        cfg = get_config(d["arch"])
+        shape = get_shape(d["shape"])
+        rf = from_hlo_text(load_hlo(hlo), d["chips"],
+                           model_flops_for(cfg, shape))
+        d["roofline"] = rf.as_dict()
+        j.write_text(json.dumps(d, indent=2, default=str))
+        print(f"{j.stem}: compute={rf.compute_s:.3f}s memory={rf.memory_s:.3f}s "
+              f"collective={rf.collective_s:.3f}s dom={rf.dominant} MFU={rf.mfu:.1%}")
+
+
+if __name__ == "__main__":
+    main()

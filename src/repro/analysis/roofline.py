@@ -1,0 +1,106 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+All terms are PER-DEVICE, derived from the post-SPMD per-device HLO module
+via the trip-aware parser in ``repro.analysis.hlo`` (XLA's own
+``cost_analysis`` ignores while-loop trip counts — verified; we keep its
+numbers in the JSON for reference but never use them):
+
+  compute term    = dot FLOPs / peak MXU FLOP/s   (+ elementwise / VPU)
+  memory term     = HBM bytes (fusion granularity) / HBM bandwidth
+  collective term = collective wire bytes / ICI link bandwidth
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 MXU, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.analysis.hlo import HloStats, analyze
+
+PEAK_FLOPS = 197e12          # bf16 MXU per chip
+PEAK_VPU = 12e12             # rough VPU elementwise ops/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclass
+class Roofline:
+    dot_flops: float                 # per-device
+    elementwise_flops: float         # per-device
+    hbm_bytes: float                 # per-device
+    collective_bytes: float          # per-device wire bytes
+    chips: int
+    model_flops: float = 0.0         # 6·N·D (analytic, useful work, GLOBAL)
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.dot_flops / PEAK_FLOPS + self.elementwise_flops / PEAK_VPU
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step time (max of terms — perfectly-overlapped model)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO dot FLOPs — remat/redundancy waste detector."""
+        total = self.dot_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model flops utilization at the roofline step time."""
+        if not self.model_flops or not self.step_s:
+            return 0.0
+        return self.model_flops / (self.step_s * self.chips * PEAK_FLOPS)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, dominant=self.dominant,
+                 step_s=self.step_s, useful_flops_ratio=self.useful_flops_ratio,
+                 mfu=self.mfu)
+        return d
+
+
+def from_hlo_text(hlo_text: str, chips: int, model_flops: float = 0.0) -> Roofline:
+    st = analyze(hlo_text)
+    return Roofline(dot_flops=st.flops, elementwise_flops=st.elementwise_flops,
+                    hbm_bytes=st.hbm_bytes, collective_bytes=st.collective_bytes,
+                    chips=chips, model_flops=model_flops,
+                    bytes_by_kind=dict(st.bytes_by_kind))
+
+
+def from_compiled(compiled, chips: int, model_flops: float = 0.0,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    return from_hlo_text(text, chips, model_flops)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D for training, 2·N·D for inference (per step over `tokens`)."""
+    from repro.models.model import count_flops_params
+    n = count_flops_params(cfg, active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,72 @@
+"""Hillclimbing diagnostics: rank ops by trip-weighted HBM traffic /
+collective bytes / dot flops from a cached dry-run HLO.
+
+  PYTHONPATH=src python -m repro.analysis.top_ops \
+      results/dryrun/llama3-405b__train_4k__pod.hlo.zst --kind mem -n 20
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+from collections import defaultdict
+
+import zstandard
+
+from repro.analysis.hlo import parse_module, _weights
+
+
+def load_hlo(path) -> str:
+    raw = pathlib.Path(path).read_bytes()
+    if str(path).endswith(".zst"):
+        return zstandard.ZstdDecompressor().decompress(raw, max_output_size=2_000_000_000).decode()
+    return raw.decode()
+
+
+def top_ops(hlo_text: str, kind: str = "mem", n: int = 20):
+    comps = parse_module(hlo_text)
+    weights = _weights(comps)
+    rows = []
+    for name, comp in comps.items():
+        wt = weights.get(name, 1.0)
+        if wt == 0:
+            continue
+        agg = defaultdict(lambda: [0.0, 0])   # opkind -> [value, count]
+        for op in comp.ops:
+            if kind == "mem":
+                val = wt * (op.result_bytes + op.operand_bytes)
+                if op.kind in ("parameter", "constant", "get-tuple-element",
+                               "tuple", "bitcast", "while", "iota"):
+                    continue
+            elif kind == "coll":
+                val = wt * op.wire_bytes
+                if not op.coll_kind:
+                    continue
+            else:
+                val = wt * op.flops
+                if not op.flops:
+                    continue
+            agg[op.kind][0] += val
+            agg[op.kind][1] += 1
+        for k, (v, c) in agg.items():
+            if v:
+                rows.append((v, name, k, c, wt))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--kind", default="mem", choices=["mem", "coll", "flops"])
+    ap.add_argument("-n", type=int, default=20)
+    args = ap.parse_args()
+    txt = load_hlo(args.path)
+    unit = {"mem": "GB", "coll": "GB", "flops": "GFLOP"}[args.kind]
+    for v, comp, opkind, cnt, wt in top_ops(txt, args.kind, args.n):
+        print(f"{v/1e9:12.2f} {unit:6s} {opkind:20s} x{cnt:<5d} w={wt:<8.0f} {comp[:70]}")
+
+
+if __name__ == "__main__":
+    main()

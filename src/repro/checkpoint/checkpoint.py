@@ -1,0 +1,198 @@
+"""Sharded, async, restart-safe checkpointing.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        manifest.json        # pytree structure, shapes, dtypes, file map
+        shard_<host>.npz     # this host's param/optimizer shards
+    <dir>/step_000123.done   # commit marker (atomic rename)
+
+Properties needed at 1000-node scale, implemented here at CPU scale:
+  * every host writes only its own shard file (no coordinator traffic —
+    the ISP rule applied to checkpoints);
+  * two-phase commit: the .done marker is renamed into place only after
+    all shard files are fsync'd, so a crash mid-save never corrupts the
+    latest checkpoint;
+  * async: `save(...)` snapshots to host RAM (device_get) and writes on a
+    background thread, overlapping the next training steps;
+  * elastic restore: arrays are re-sharded to whatever mesh the restoring
+    job uses (load full array per leaf, then device_put with the new
+    sharding) — a job restarted on fewer/more hosts just works.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize bfloat16 natively; store raw uint16 + dtype tag
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+
+def _encode(a: np.ndarray):
+    name = str(a.dtype)
+    if name in _EXOTIC:
+        return a.view(_EXOTIC[name][1]), name
+    return a, name
+
+
+def _decode(a: np.ndarray, name: str) -> np.ndarray:
+    if name in _EXOTIC:
+        return a.view(_EXOTIC[name][0])
+    return a
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _unflatten_like(template, flat: Dict[str, np.ndarray]):
+    leaves = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        arr = flat[key]
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(directory, step: int, tree, *, host: str = "host0",
+                    extra: Optional[dict] = None) -> pathlib.Path:
+    """Synchronous sharded save with two-phase commit."""
+    directory = pathlib.Path(directory)
+    step_dir = directory / f"step_{step:09d}"
+    tmp_dir = directory / f".tmp_step_{step:09d}_{host}"
+    tmp_dir.mkdir(parents=True, exist_ok=True)
+    step_dir.mkdir(parents=True, exist_ok=True)
+
+    flat = _flatten(tree)
+    arrays = {}
+    dtypes = {}
+    for k, v in flat.items():
+        enc, name = _encode(np.asarray(jax.device_get(v)))
+        arrays[k] = enc
+        dtypes[k] = name
+    manifest = {
+        "step": step,
+        "extra": extra or {},
+        "leaves": {k: {"shape": list(a.shape), "dtype": dtypes[k],
+                       "file": f"shard_{host}.npz"} for k, a in arrays.items()},
+    }
+    shard_path = tmp_dir / f"shard_{host}.npz"
+    with open(shard_path, "wb") as f:
+        np.savez(f, **{k.replace("/", "__"): a for k, a in arrays.items()})
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(shard_path, step_dir / f"shard_{host}.npz")
+    man_path = tmp_dir / "manifest.json"
+    man_path.write_text(json.dumps(manifest))
+    os.replace(man_path, step_dir / "manifest.json")
+    tmp_dir.rmdir()
+    done = directory / f"step_{step:09d}.done"
+    marker = directory / f".tmp_done_{step:09d}_{host}"
+    marker.write_text(str(time.time()))
+    os.replace(marker, done)                       # atomic commit
+    return step_dir
+
+
+def latest_step(directory) -> Optional[int]:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = []
+    for p in directory.glob("step_*.done"):
+        m = re.match(r"step_(\d+)\.done", p.name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory, template, *, step: Optional[int] = None,
+                       shardings=None):
+    """Restore into the template's structure; reshard to ``shardings``
+    (pytree of NamedSharding) if given — elastic restore onto a new mesh."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    step_dir = directory / f"step_{step:09d}"
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    leaves_meta = manifest.get("leaves", {})
+    flat: Dict[str, np.ndarray] = {}
+    for shard_file in sorted(step_dir.glob("shard_*.npz")):
+        with np.load(shard_file) as z:
+            for k in z.files:
+                key = k.replace("__", "/")
+                meta = leaves_meta.get(key, {})
+                flat[key] = _decode(z[k], meta.get("dtype", str(z[k].dtype)))
+    tree = _unflatten_like(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(jax.numpy.asarray, tree)
+    return tree, manifest
+
+
+class CheckpointManager:
+    """Async manager: snapshot on-thread, write off-thread, keep last K."""
+
+    def __init__(self, directory, *, keep: int = 3, host: str = "host0"):
+        self.directory = pathlib.Path(directory)
+        self.keep = keep
+        self.host = host
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree, extra: Optional[dict] = None) -> None:
+        self.wait()                                 # one in flight at a time
+        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, snapshot,
+                                host=self.host, extra=extra)
+                self._gc()
+            except BaseException as e:      # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(re.match(r"step_(\d+)\.done", p.name).group(1))
+            for p in self.directory.glob("step_*.done"))
+        for s in steps[: -self.keep]:
+            done = self.directory / f"step_{s:09d}.done"
+            done.unlink(missing_ok=True)
+            sd = self.directory / f"step_{s:09d}"
+            if sd.exists():
+                for f in sd.iterdir():
+                    f.unlink()
+                sd.rmdir()
+
+    def restore(self, template, step: Optional[int] = None, shardings=None):
+        return restore_checkpoint(self.directory, template, step=step,
+                                  shardings=shardings)

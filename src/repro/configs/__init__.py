@@ -1,0 +1,26 @@
+"""Assigned architecture configs.  Importing this package registers all archs."""
+from repro.configs import (  # noqa: F401
+    xlstm_125m,
+    hymba_1_5b,
+    gemma3_12b,
+    yi_9b,
+    starcoder2_15b,
+    llama3_405b,
+    chameleon_34b,
+    musicgen_large,
+    llama4_scout_17b_a16e,
+    deepseek_v2_236b,
+)
+
+ASSIGNED = (
+    "xlstm-125m",
+    "hymba-1.5b",
+    "gemma3-12b",
+    "yi-9b",
+    "starcoder2-15b",
+    "llama3-405b",
+    "chameleon-34b",
+    "musicgen-large",
+    "llama4-scout-17b-a16e",
+    "deepseek-v2-236b",
+)

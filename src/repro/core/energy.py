@@ -1,0 +1,75 @@
+"""Energy model — reproduces the paper's Table I and generalizes to TPU.
+
+Paper measurements (HPM-100A wall meter, AIC FB128-LX, 36 CSDs):
+  idle (no drives)          167 W
+  idle (36 CSDs)            405 W   -> 6.6 W per CSD
+  load, ISP disabled        482 W
+  load, all 36 ISP engines  492 W   -> 0.28 W marginal per active engine
+
+Table I's energy-per-query is exactly P_load / throughput — validated in
+tests against all six published numbers (5021/1662, 832/327, 51/23 mJ).
+
+For the TPU framework we provide an analytic per-step energy estimate from
+the roofline terms (DESIGN.md §2 assumption change: modeled, not metered).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+# --- paper's server constants ----------------------------------------------
+SERVER_IDLE_W = 167.0
+SERVER_IDLE_36CSD_W = 405.0
+CSD_IDLE_W = (SERVER_IDLE_36CSD_W - SERVER_IDLE_W) / 36.0   # 6.61 W
+LOAD_STORAGE_ONLY_W = 482.0
+LOAD_ALL_ISP_W = 492.0
+ISP_MARGINAL_W = (LOAD_ALL_ISP_W - LOAD_STORAGE_ONLY_W) / 36.0  # 0.28 W
+
+
+def server_power(n_isp_active: int = 0) -> float:
+    """Whole-server wall power under load with n active ISP engines."""
+    return LOAD_STORAGE_ONLY_W + ISP_MARGINAL_W * n_isp_active
+
+
+def energy_per_query_mj(throughput_qps: float, n_isp_active: int = 0) -> float:
+    """Table I metric: wall power / throughput, in millijoules."""
+    return server_power(n_isp_active) / max(throughput_qps, 1e-9) * 1e3
+
+
+def energy_saving(host_only_qps: float, isp_qps: float, n_isp: int = 36) -> float:
+    """Fractional energy-per-query saving of the ISP configuration."""
+    e_host = energy_per_query_mj(host_only_qps, 0)
+    e_isp = energy_per_query_mj(isp_qps, n_isp)
+    return 1.0 - e_isp / e_host
+
+
+# --- TPU v5e analytic model --------------------------------------------------
+# Public figures: ~200 W peak per v5e chip.  Decomposition constants chosen so
+# peak-FLOP + peak-HBM activity ≈ chip TDP; link energy per ICI byte from
+# typical SerDes ~10 pJ/bit figures.
+CHIP_IDLE_W = 60.0
+PJ_PER_FLOP = 0.45
+PJ_PER_HBM_BYTE = 45.0
+PJ_PER_LINK_BYTE = 90.0
+
+
+@dataclass
+class TpuStepEnergy:
+    compute_j: float
+    hbm_j: float
+    link_j: float
+    idle_j: float
+
+    @property
+    def total_j(self) -> float:
+        return self.compute_j + self.hbm_j + self.link_j + self.idle_j
+
+
+def tpu_step_energy(dot_flops: float, hbm_bytes: float, link_bytes: float,
+                    step_s: float, chips: int = 1) -> TpuStepEnergy:
+    """Per-device energy for one step (multiply by chips for fleet energy)."""
+    return TpuStepEnergy(
+        compute_j=dot_flops * PJ_PER_FLOP * 1e-12,
+        hbm_j=hbm_bytes * PJ_PER_HBM_BYTE * 1e-12,
+        link_j=link_bytes * PJ_PER_LINK_BYTE * 1e-12,
+        idle_j=CHIP_IDLE_W * step_s,
+    )

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, SyntheticTokenSource, MemmapTokenSource, ShardedLoader,
+    write_token_file)

@@ -1,0 +1,103 @@
+"""jit-friendly dispatch wrappers around the Pallas kernels.
+
+Every op has three implementations:
+  "pallas"  — the TPU kernel (``pl.pallas_call`` + BlockSpec).  On CPU it runs
+              in interpret mode (tests); on TPU it compiles natively.
+  "jnp"     — the scalable pure-jnp path (chunked scans) from ``ref.py``;
+              identical math, used for CPU dry-runs and as the XLA fallback.
+  "auto"    — "pallas" on TPU backends, "jnp" elsewhere.
+
+The FLOP/byte structure of the jnp path matches the kernel tiling, so
+roofline terms derived from the dry-run HLO are representative of the TPU
+execution (see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref
+
+_FORCE_IMPL: Optional[str] = None
+
+
+def set_default_impl(impl: Optional[str]) -> None:
+    """Force an implementation globally (tests / benchmarks)."""
+    global _FORCE_IMPL
+    _FORCE_IMPL = impl
+
+
+def _resolve(impl: str) -> str:
+    if _FORCE_IMPL is not None:
+        return _FORCE_IMPL
+    if impl != "auto":
+        return impl
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "jnp"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, scale: Optional[float] = None,
+                    q_chunk: int = 512, kv_chunk: int = 512, impl: str = "auto"):
+    """Chunked causal attention.  q: (B,Sq,H,dh); k/v: (B,Skv,Hkv,dh[v])."""
+    which = _resolve(impl)
+    if which == "pallas":
+        from repro.kernels import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  q_offset=q_offset, scale=scale,
+                                  interpret=jax.default_backend() != "tpu")
+    return ref.chunked_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, scale=scale,
+                                 q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
+def decode_partial(q, k, v, kpos, cur_pos, *, window: Optional[int] = None,
+                   scale: Optional[float] = None, impl: str = "auto"):
+    """Per-shard flash-decoding partial.  q: (B,H,dh); k/v: (B,S,Hkv,dh).
+
+    kpos: (S,) global positions of cache slots (-1 = empty); cur_pos: scalar.
+    Returns (acc fp32 (B,H,dhv), l (B,H), m (B,H)).
+    """
+    which = _resolve(impl)
+    if which == "pallas":
+        from repro.kernels import isp_decode
+        return isp_decode.decode_partial(q, k, v, kpos, cur_pos, window=window,
+                                         scale=scale,
+                                         interpret=jax.default_backend() != "tpu")
+    return ref.decode_partial_masked(q, k, v, kpos, cur_pos, window=window, scale=scale)
+
+
+def isp_gather(table, indices, *, shard_offset=0, shard_rows=None, weights=None,
+               impl: str = "auto"):
+    """Masked local gather of table rows for global indices (ISP primitive)."""
+    which = _resolve(impl)
+    if which == "pallas":
+        from repro.kernels import isp_gather as ig
+        return ig.isp_gather(table, indices, shard_offset=shard_offset,
+                             weights=weights,
+                             interpret=jax.default_backend() != "tpu")
+    return ref.isp_gather(table, indices, shard_offset=shard_offset,
+                          shard_rows=shard_rows, weights=weights)
+
+
+def isp_gather_pool(table, indices, segment_ids, num_segments, *,
+                    shard_offset=0, weights=None, impl: str = "auto"):
+    which = _resolve(impl)
+    if which == "pallas":
+        from repro.kernels import isp_gather as ig
+        return ig.isp_gather_pool(table, indices, segment_ids, num_segments,
+                                  shard_offset=shard_offset, weights=weights,
+                                  interpret=jax.default_backend() != "tpu")
+    return ref.isp_gather_pool(table, indices, segment_ids, num_segments,
+                               shard_offset=shard_offset, weights=weights)
+
+
+def topk_similarity(queries, corpus, k: int, *, impl: str = "auto"):
+    which = _resolve(impl)
+    if which == "pallas":
+        from repro.kernels import topk_similarity as tk
+        return tk.topk_similarity(queries, corpus, k,
+                                  interpret=jax.default_backend() != "tpu")
+    return ref.topk_similarity(queries, corpus, k)

@@ -1,0 +1,412 @@
+"""Pure-jnp reference oracles for every Pallas kernel, plus the scalable
+chunked (online-softmax) attention used as the portable execution path.
+
+Layout conventions:
+  q:      (B, Sq, H,   Dh)
+  k, v:   (B, Skv, Hkv, Dh)       H % Hkv == 0 (GQA)
+  tables: (V, D)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Naive attention oracle (small shapes only — tests)
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, scale: Optional[float] = None) -> jax.Array:
+    """Full-materialization attention.  Oracle for flash/chunked paths."""
+    B, Sq, H, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = H // Hkv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Sq, Hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (scan-based online softmax, custom VJP)
+# ---------------------------------------------------------------------------
+
+
+class _AttnCfg(NamedTuple):
+    causal: bool
+    window: Optional[int]
+    q_offset: int
+    scale: float
+    q_chunk: int
+    kv_chunk: int
+
+
+def _pad_axis(x, multiple, axis):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _kv_chunk_starts(cfg: _AttnCfg, nq_idx, skv_padded: int):
+    """Static count + dynamic starts of kv chunks visited by q chunk nq_idx."""
+    kc = cfg.kv_chunk
+    if cfg.window is None:
+        # full (causal) range: every kv chunk, masked.
+        n_chunks = skv_padded // kc
+        starts = jnp.arange(n_chunks) * kc
+    else:
+        # windowed: only chunks overlapping [q_lo - window + 1, q_hi]
+        span = cfg.window + cfg.q_chunk + kc
+        n_chunks = -(-span // kc)
+        q_hi = cfg.q_offset + (nq_idx + 1) * cfg.q_chunk   # exclusive
+        base = q_hi - n_chunks * kc
+        base = jnp.clip(base, 0, max(skv_padded - n_chunks * kc, 0))
+        base = (base // kc) * kc
+        starts = base + jnp.arange(n_chunks) * kc
+    return n_chunks, starts
+
+
+def _attend_block(qblk, kblk, vblk, qpos, kpos, skv_valid, cfg, m, l, acc):
+    """One online-softmax update.  qblk: (B,qc,Hkv,G,dh), kblk/vblk: (B,kc,Hkv,dh)."""
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk.astype(jnp.float32),
+                   kblk.astype(jnp.float32)) * cfg.scale
+    mask = kpos[None, :] < skv_valid
+    if cfg.causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if cfg.window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - cfg.window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)   # (1,qc,1,1,kc)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    l_new = l * alpha + p.sum(axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bqhgk,bkhd->bqhgd", p, vblk.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def _flash_fwd_impl(q, k, v, cfg: _AttnCfg) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,Sq,H,dh), lse (B,Sq,H) fp32)."""
+    B, Sq, H, dh = q.shape
+    dhv = v.shape[-1]
+    _, Skv, Hkv, _ = k.shape
+    g = H // Hkv
+    qc = min(cfg.q_chunk, Sq)
+    kc = min(cfg.kv_chunk, Skv)
+    cfg = cfg._replace(q_chunk=qc, kv_chunk=kc)
+    qp = _pad_axis(q, qc, 1)
+    kp = _pad_axis(k, kc, 1)
+    vp = _pad_axis(v, kc, 1)
+    if cfg.window is not None:
+        # windowed path slices a fixed number of kv chunks; guarantee the kv
+        # buffer is at least that long so starts stay distinct and in range.
+        need = (-(-(cfg.window + qc + kc) // kc)) * kc
+        if kp.shape[1] < need:
+            kp = _pad_axis(kp, need, 1)
+            vp = _pad_axis(vp, need, 1)
+    sq_p, skv_p = qp.shape[1], kp.shape[1]
+    nq = sq_p // qc
+
+    q_chunks = qp.reshape(B, nq, qc, Hkv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+
+    def q_body(_, inputs):
+        qi, qblk = inputs
+
+        def kv_body(carry, start):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_slice_in_dim(kp, start, kc, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(vp, start, kc, axis=1)
+            qpos = cfg.q_offset + qi * qc + jnp.arange(qc)
+            kpos = start + jnp.arange(kc)
+            return _attend_block(qblk, kblk, vblk, qpos, kpos, Skv, cfg, m, l, acc), None
+
+        n_chunks, starts = _kv_chunk_starts(cfg, qi, skv_p)
+        m0 = jnp.full((B, qc, Hkv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, Hkv, g), jnp.float32)
+        a0 = jnp.zeros((B, qc, Hkv, g, dhv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), starts)
+        l_safe = jnp.where(l == 0, 1.0, l)
+        out = (acc / l_safe[..., None]).astype(q.dtype)
+        lse = m + jnp.log(l_safe)
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, (jnp.arange(nq), q_chunks))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, sq_p, H, dhv)[:, :Sq]
+    lse = lses.transpose(1, 0, 2, 3, 4).reshape(B, sq_p, H)[:, :Sq]
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, dout, cfg: _AttnCfg):
+    """Flash-attention backward: recompute scores chunkwise."""
+    B, Sq, H, dh = q.shape
+    dhv = v.shape[-1]
+    _, Skv, Hkv, _ = k.shape
+    g = H // Hkv
+    qc = min(cfg.q_chunk, Sq)
+    kc = min(cfg.kv_chunk, kv := Skv)
+    cfg = cfg._replace(q_chunk=qc, kv_chunk=kc)
+    qp = _pad_axis(q, qc, 1)
+    kp = _pad_axis(k, kc, 1)
+    vp = _pad_axis(v, kc, 1)
+    if cfg.window is not None:
+        need = (-(-(cfg.window + qc + kc) // kc)) * kc
+        if kp.shape[1] < need:
+            kp = _pad_axis(kp, need, 1)
+            vp = _pad_axis(vp, need, 1)
+    op = _pad_axis(out, qc, 1)
+    dop = _pad_axis(dout, qc, 1)
+    lsep = _pad_axis(lse, qc, 1)
+    sq_p, skv_p = qp.shape[1], kp.shape[1]
+    nq = sq_p // qc
+
+    # D_i = rowsum(dout_i * out_i)  (B, Sq, H)
+    delta = jnp.sum(dop.astype(jnp.float32) * op.astype(jnp.float32), axis=-1)
+
+    def rs(x, n, c, last):  # (B, n*c, ...) -> (n, B, c, ...)
+        return x.reshape((B, n, c) + last).transpose((1, 0, 2) + tuple(range(3, 3 + len(last))))
+
+    q_chunks = rs(qp.reshape(B, sq_p, Hkv, g, dh), nq, qc, (Hkv, g, dh))
+    do_chunks = rs(dop.reshape(B, sq_p, Hkv, g, dhv), nq, qc, (Hkv, g, dhv))
+    lse_chunks = rs(lsep.reshape(B, sq_p, Hkv, g), nq, qc, (Hkv, g))
+    dl_chunks = rs(delta.reshape(B, sq_p, Hkv, g), nq, qc, (Hkv, g))
+
+    dk0 = jnp.zeros((B, skv_p, Hkv, dh), jnp.float32)
+    dv0 = jnp.zeros((B, skv_p, Hkv, dhv), jnp.float32)
+
+    def q_body(carry, inputs):
+        dk, dv = carry
+        qi, qblk, doblk, lseblk, dlblk = inputs
+
+        def kv_body(inner, start):
+            dq_acc, dk, dv = inner
+            kblk = jax.lax.dynamic_slice_in_dim(kp, start, kc, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(vp, start, kc, axis=1)
+            qpos = cfg.q_offset + qi * qc + jnp.arange(qc)
+            kpos = start + jnp.arange(kc)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * cfg.scale
+            mask = kpos[None, :] < Skv
+            if cfg.causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if cfg.window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - cfg.window
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            p = jnp.exp(s - lseblk[..., None])                        # (B,qc,Hkv,g,kc)
+            dp = jnp.einsum("bqhgd,bkhd->bqhgk", doblk.astype(jnp.float32),
+                            vblk.astype(jnp.float32))
+            ds = p * (dp - dlblk[..., None]) * cfg.scale
+            dq_acc = dq_acc + jnp.einsum("bqhgk,bkhd->bqhgd", ds, kblk.astype(jnp.float32))
+            dk_blk = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qblk.astype(jnp.float32))
+            dv_blk = jnp.einsum("bqhgk,bqhgd->bkhd", p, doblk.astype(jnp.float32))
+            upd = jax.lax.dynamic_slice_in_dim(dk, start, kc, axis=1) + dk_blk
+            dk = jax.lax.dynamic_update_slice_in_dim(dk, upd, start, axis=1)
+            upd = jax.lax.dynamic_slice_in_dim(dv, start, kc, axis=1) + dv_blk
+            dv = jax.lax.dynamic_update_slice_in_dim(dv, upd, start, axis=1)
+            return (dq_acc, dk, dv), None
+
+        n_chunks, starts = _kv_chunk_starts(cfg, qi, skv_p)
+        dq0 = jnp.zeros((B, qc, Hkv, g, dh), jnp.float32)
+        (dq, dk, dv), _ = jax.lax.scan(kv_body, (dq0, dk, dv), starts)
+        return (dk, dv), dq
+
+    (dk, dv), dqs = jax.lax.scan(
+        q_body, (dk0, dv0), (jnp.arange(nq), q_chunks, do_chunks, lse_chunks, dl_chunks))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, sq_p, H, dh)[:, :Sq]
+    return dq.astype(q.dtype), dk[:, :Skv].astype(k.dtype), dv[:, :Skv].astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash(q, k, v, cfg: _AttnCfg):
+    out, _ = _flash_fwd_impl(q, k, v, cfg)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, cfg):
+    out, lse = _flash_fwd_impl(q, k, v, cfg)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(cfg, res, dout):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, dout, cfg)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                      q_offset: int = 0, scale: Optional[float] = None,
+                      q_chunk: int = 512, kv_chunk: int = 512,
+                      return_lse: bool = False):
+    """Memory-efficient attention; differentiable (flash-style custom VJP)."""
+    scale = q.shape[-1] ** -0.5 if scale is None else scale
+    cfg = _AttnCfg(causal, window, q_offset, scale, q_chunk, kv_chunk)
+    if return_lse:
+        return _flash_fwd_impl(q, k, v, cfg)
+    return _flash(q, k, v, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention partial (ISP flash-decoding) — reference
+# ---------------------------------------------------------------------------
+
+
+def decode_partial(q, k, v, kv_valid, *, kv_offset=0, scale: Optional[float] = None):
+    """Single-step attention partial over a KV span (the per-shard ISP unit).
+
+    q: (B, H, dh); k, v: (B, S_span, Hkv, dh); kv_valid: number of valid kv
+    positions *globally*; kv_offset: global position of this span's first key.
+    Returns (acc (B,H,dh) fp32, l (B,H) fp32, m (B,H) fp32) — combinable partials.
+    """
+    B, H, dh = q.shape
+    _, S, Hkv, _ = k.shape
+    g = H // Hkv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32)) * scale
+    kpos = kv_offset + jnp.arange(S)
+    s = jnp.where((kpos < kv_valid)[None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return (acc.reshape(B, H, dh), l.reshape(B, H), m.reshape(B, H))
+
+
+def decode_partial_masked(q, k, v, kpos, cur_pos, *, window=None, scale=None):
+    """Decode partial with explicit per-slot global positions.
+
+    kpos: (S,) int32 global position of each cache slot (-1 = empty);
+    cur_pos: scalar current decode position.  Supports ring buffers.
+    Returns (acc (B,H,dhv) fp32, l (B,H), m (B,H)).
+    """
+    B, H, dh = q.shape
+    _, S, Hkv, dhv = v.shape
+    g = H // Hkv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32)) * scale
+    valid = (kpos >= 0) & (kpos <= cur_pos)
+    if window is not None:
+        valid &= kpos > cur_pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return (acc.reshape(B, H, dhv), l.reshape(B, H), m.reshape(B, H))
+
+
+def mla_decode_scores_partial(q_eff, q_rope, ckv, krope, kpos, cur_pos, *, scale):
+    """MLA absorbed decode partial over a compressed-KV span.
+
+    q_eff: (B,H,R) — q_nope already absorbed through wk_b; q_rope: (B,H,r);
+    ckv: (B,S,R); krope: (B,S,r).  Returns (acc (B,H,R), l, m) partials where
+    acc is the probability-weighted sum of ckv rows.
+    """
+    B, H, R = q_eff.shape
+    s = jnp.einsum("bhr,bsr->bhs", q_eff.astype(jnp.float32), ckv.astype(jnp.float32))
+    s = s + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                       krope.astype(jnp.float32))
+    s = s * scale
+    valid = (kpos >= 0) & (kpos <= cur_pos)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bhs,bsr->bhr", p, ckv.astype(jnp.float32))
+    return acc, l, m
+
+
+def combine_partials(acc, l, m, axis=0):
+    """Merge flash-decoding partials along ``axis`` (stacked shards)."""
+    m_glob = jnp.max(m, axis=axis, keepdims=True)
+    w = jnp.exp(m - m_glob)
+    acc = jnp.sum(acc * w[..., None], axis=axis)
+    l = jnp.sum(l * w, axis=axis)
+    l = jnp.where(l == 0, 1.0, l)
+    return acc / l[..., None]
+
+
+def decode_attention(q, k, v, kv_valid, *, scale=None):
+    """Full single-step decode attention (oracle = one partial over everything)."""
+    acc, l, m = decode_partial(q, k, v, kv_valid, scale=scale)
+    return combine_partials(acc[None], l[None], m[None], axis=0).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ISP gather (+pool) — reference
+# ---------------------------------------------------------------------------
+
+
+def isp_gather(table, indices, shard_offset: int = 0, shard_rows: Optional[int] = None,
+               weights=None):
+    """Gather rows of a (local) table shard for global ``indices``.
+
+    Rows outside [shard_offset, shard_offset + shard_rows) contribute zeros —
+    summing across shards (psum) reconstructs the full gather.  This is the
+    paper's "send indexes, not data": indices travel, table rows do not.
+
+    table: (V_local, D); indices: (...,) int32; weights: optional (...,) scale.
+    Returns (..., D) in table dtype.
+    """
+    v_local = table.shape[0] if shard_rows is None else shard_rows
+    local = indices - shard_offset
+    in_range = (local >= 0) & (local < v_local)
+    safe = jnp.clip(local, 0, v_local - 1)
+    rows = jnp.take(table, safe, axis=0)
+    rows = jnp.where(in_range[..., None], rows, jnp.zeros((), table.dtype))
+    if weights is not None:
+        rows = rows * weights[..., None].astype(rows.dtype)
+    return rows
+
+
+def isp_gather_pool(table, indices, segment_ids, num_segments: int,
+                    shard_offset: int = 0, weights=None):
+    """RecSSD-style fused gather + segment-sum pooling (on-shard aggregation).
+
+    indices/segment_ids: (N,).  Returns (num_segments, D) fp32.
+    """
+    rows = isp_gather(table, indices, shard_offset, weights=weights).astype(jnp.float32)
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+
+
+# ---------------------------------------------------------------------------
+# Cosine-similarity top-k (recommender) — reference
+# ---------------------------------------------------------------------------
+
+
+def topk_similarity(queries, corpus, k: int):
+    """queries: (Q, D); corpus: (N, D).  Returns (scores (Q,k), idx (Q,k)).
+
+    Cosine similarity via normalized dot products, fp32.
+    """
+    qn = queries.astype(jnp.float32)
+    qn = qn / jnp.maximum(jnp.linalg.norm(qn, axis=-1, keepdims=True), 1e-9)
+    cn = corpus.astype(jnp.float32)
+    cn = cn / jnp.maximum(jnp.linalg.norm(cn, axis=-1, keepdims=True), 1e-9)
+    sims = qn @ cn.T
+    return jax.lax.top_k(sims, k)

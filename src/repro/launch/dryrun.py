@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Must be run as a dedicated process (the two lines above force 512 host
+devices *before* jax initializes — never set this in conftest/pyproject).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh pod          # every live cell
+  python -m repro.launch.dryrun --all --mesh multipod     # 2-pod, 512 chips
+
+Writes results/dryrun/<arch>__<shape>__<mesh>.json with memory analysis,
+cost analysis, collective stats, and the three roofline terms.
+"""
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.config import get_config, get_shape, shape_applicable, SHAPES
+from repro.configs import ASSIGNED
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: pathlib.Path,
+             fsdp=None, verbose=True, save_hlo=True, tag=""):
+    from repro.analysis.roofline import from_compiled, model_flops_for
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import steps as S
+    from repro.sharding import make_plan, make_recipe
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = mesh.size
+    plan = make_plan(mesh, cfg, fsdp=fsdp)
+    recipe = make_recipe(plan, cfg, shape)
+
+    t0 = time.time()
+    fn, args = S.jitted_step_for(cfg, shape, recipe)
+    with mesh:
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        hlo = compiled.as_text()
+        rf = from_compiled(compiled, chips, model_flops_for(cfg, shape),
+                           hlo_text=hlo)
+
+    mem_d = {k: float(getattr(mem, k)) for k in
+             ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes")
+             if hasattr(mem, k)}
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "status": "ok",
+        "chips": chips,
+        "fsdp": plan.fsdp,
+        "batch_axes": recipe.batch_axes, "seq_axes": recipe.seq_axes,
+        "memory_analysis": mem_d,
+        "bytes_per_device": sum(mem_d.get(k, 0.0) for k in
+                                ("argument_size_in_bytes", "temp_size_in_bytes")),
+        "cost_flops": float(cost.get("flops", 0.0)),
+        "cost_bytes": float(cost.get("bytes accessed", 0.0)),
+        "roofline": rf.as_dict(),
+        "lower_s": t_lower, "compile_s": t_compile,
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: "
+              f"compute={rf.compute_s:.4f}s memory={rf.memory_s:.4f}s "
+              f"collective={rf.collective_s:.4f}s dominant={rf.dominant} "
+              f"MFU={rf.mfu:.1%} (lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        print(f"[dryrun]   memory_analysis: {mem_d}")
+    out_dir.mkdir(parents=True, exist_ok=True)
+    stem = f"{arch}__{shape_name}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    (out_dir / f"{stem}.json").write_text(json.dumps(result, indent=2, default=str))
+    if save_hlo:
+        import zstandard
+        (out_dir / f"{stem}.hlo.zst").write_bytes(
+            zstandard.ZstdCompressor(level=6).compress(hlo.encode()))
+    return result
+
+
+def all_cells():
+    for arch in ASSIGNED:
+        for shape_name in SHAPES:
+            yield arch, shape_name
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="run each cell in a fresh process (isolates RAM)")
+    ap.add_argument("--out", default=str(RESULTS))
+    ap.add_argument("--fsdp", default=None, choices=[None, "on", "off"])
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    fsdp = None if args.fsdp is None else args.fsdp == "on"
+
+    if args.all:
+        failures = []
+        for arch, shape_name in all_cells():
+            target = out_dir / f"{arch}__{shape_name}__{args.mesh}.json"
+            if target.exists():
+                print(f"[dryrun] skip existing {target.name}")
+                continue
+            if args.subprocess:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--mesh", args.mesh, "--out", str(out_dir)]
+                r = subprocess.run(cmd)
+                if r.returncode:
+                    failures.append((arch, shape_name))
+            else:
+                try:
+                    run_cell(arch, shape_name, args.mesh, out_dir, fsdp=fsdp)
+                except Exception:
+                    traceback.print_exc()
+                    failures.append((arch, shape_name))
+        if failures:
+            print("[dryrun] FAILURES:", failures)
+            return 1
+        print("[dryrun] all cells passed")
+        return 0
+
+    run_cell(args.arch, args.shape, args.mesh, out_dir, fsdp=fsdp)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

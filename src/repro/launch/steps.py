@@ -1,0 +1,216 @@
+"""Step builders: production train / prefill / decode steps with full
+sharding specs — shared by the dry-run, the training loop, and the server.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.sharding import ParallelPlan, ShardingRecipe, make_plan, make_recipe, param_specs
+
+
+# ---------------------------------------------------------------------------
+# Sharding spec pytrees
+# ---------------------------------------------------------------------------
+
+
+def params_sharding(recipe: ShardingRecipe, cfg: ModelConfig):
+    shapes = M.abstract_params(cfg)
+    return param_specs(recipe.plan, shapes)
+
+
+def opt_sharding(recipe: ShardingRecipe, cfg: ModelConfig):
+    ps = params_sharding(recipe, cfg)
+    return {"m": ps, "v": ps, "step": P()}
+
+
+def batch_sharding(recipe: ShardingRecipe, cfg: ModelConfig, shape: ShapeConfig):
+    b = recipe.batch_axes or None
+    out: Dict[str, P] = {}
+    specs = M.input_specs(cfg, shape)
+    for k, v in specs.items():
+        if k == "caches":
+            out[k] = cache_sharding(recipe, cfg, v)
+        elif k == "pos":
+            out[k] = P()
+        elif k == "embeddings":
+            out[k] = P(b, None, None)
+        else:
+            out[k] = P(b, None)
+    return out
+
+
+def _cache_leaf_spec(recipe: ShardingRecipe, names, shape) -> P:
+    """Cache leaves are stacked: (num_groups, ...)."""
+    b = recipe.batch_axes or None
+    s = recipe.seq_axes or None
+    tp = recipe.model_axis
+    name = names[-1]
+    plan = recipe.plan
+
+    def fits(dim, axes):
+        if axes is None:
+            return False
+        sz = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            sz *= plan.axis_size(a)
+        return shape[dim] % sz == 0 and sz > 1
+
+    if name in ("k", "v"):            # (ng, B, S, Hkv, dh)
+        return P(None, b if fits(1, b) else None, s if fits(2, s) else None)
+    if name in ("ckv", "krope"):      # (ng, B, S, R)
+        return P(None, b if fits(1, b) else None, s if fits(2, s) else None)
+    if name == "kpos":                # (ng, S)
+        return P(None, s if fits(1, s) else None)
+    if name == "conv":                # (ng, B, W-1, d_in)
+        return P(None, b if fits(1, b) else None, None,
+                 tp if fits(3, tp) else None)
+    if name == "ssm":                 # (ng, B, d_in, N)
+        return P(None, b if fits(1, b) else None, tp if fits(2, tp) else None)
+    # mlstm C/n/m, slstm c/n/m/h: batch only
+    return P(None, b if (len(shape) > 1 and fits(1, b)) else None)
+
+
+def cache_sharding(recipe: ShardingRecipe, cfg: ModelConfig, cache_shapes):
+    def spec(path, leaf):
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        return _cache_leaf_spec(recipe, names, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def to_named(recipe: ShardingRecipe, spec_tree):
+    if recipe.mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(recipe.mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, recipe: ShardingRecipe,
+                     opt_cfg: Optional[AdamWConfig] = None,
+                     schedule_kwargs: Optional[dict] = None,
+                     accum: Optional[int] = None):
+    opt_cfg = opt_cfg or AdamWConfig(state_dtype=cfg.optimizer_state_dtype)
+    sk = schedule_kwargs or {}
+    accum = accum if accum is not None else cfg.grad_accum
+
+    def _constrain_micro(mb):
+        if recipe.mesh is None:
+            return mb
+        b = recipe.batch_axes or None
+
+        def c(x):
+            spec = P(b) if x.ndim == 2 else P(b, None, None)
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(recipe.mesh, spec))
+
+        return jax.tree.map(c, mb)
+
+    def train_step(params, opt_state, batch):
+        if accum > 1:
+            # microbatch gradient accumulation: activation footprint / accum;
+            # the per-micro collectives overlap with the next micro's compute
+            # (XLA async) — the paper's batch-ratio idea applied to time.
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            def mb_body(carry, mbatch):
+                loss_acc, aux_acc, grads_acc = carry
+                mbatch = _constrain_micro(mbatch)
+                (loss, metrics), grads = jax.value_and_grad(
+                    M.loss_fn, has_aux=True)(params, mbatch, cfg, recipe)
+                grads_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+                return (loss_acc + loss, aux_acc + metrics["aux"], grads_acc), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, aux, grads), _ = jax.lax.scan(
+                mb_body, (jnp.float32(0.0), jnp.float32(0.0), zeros), micro)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = {"xent": loss, "aux": aux / accum,
+                       "tokens": jnp.float32(batch["labels"].size)}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                M.loss_fn, has_aux=True)(params, batch, cfg, recipe)
+        lr_scale = cosine_schedule(opt_state["step"], **sk)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg,
+                                             lr_scale)
+        return params, opt_state, {**metrics, **om, "loss": loss}
+
+    return train_step, opt_cfg
+
+
+def build_prefill_step(cfg: ModelConfig, recipe: ShardingRecipe):
+    def prefill_step(params, batch):
+        return M.prefill_fn(params, batch, cfg, recipe)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, recipe: ShardingRecipe):
+    def serve_step(params, caches, token, pos):
+        return M.decode_fn(params, caches, token, pos, cfg, recipe)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Jit wiring per (arch, shape, mesh)
+# ---------------------------------------------------------------------------
+
+
+def jitted_step_for(cfg: ModelConfig, shape: ShapeConfig, recipe: ShardingRecipe):
+    """Returns (jitted_fn, example_args (ShapeDtypeStructs)) for the cell."""
+    specs = M.input_specs(cfg, shape)
+    pspec = params_sharding(recipe, cfg)
+    pshape = M.abstract_params(cfg)
+
+    if shape.kind == "train":
+        step, opt_cfg = build_train_step(cfg, recipe)
+        ospec = opt_sharding(recipe, cfg)
+        oshape = jax.eval_shape(functools.partial(adamw_init, cfg=opt_cfg), pshape)
+        bspec = batch_sharding(recipe, cfg, shape)
+        fn = jax.jit(step,
+                     in_shardings=to_named(recipe, (pspec, ospec, bspec)),
+                     out_shardings=to_named(recipe, (pspec, ospec,
+                                                     jax.tree.map(lambda _: P(),
+                                                                  {"xent": 0, "aux": 0, "tokens": 0,
+                                                                   "grad_norm": 0, "loss": 0}))),
+                     donate_argnums=(0, 1))
+        return fn, (pshape, oshape, specs)
+
+    if shape.kind == "prefill":
+        step = build_prefill_step(cfg, recipe)
+        bspec = batch_sharding(recipe, cfg, shape)
+        cache_shapes = M.abstract_caches(cfg, shape.global_batch, shape.seq_len)
+        cspec = cache_sharding(recipe, cfg, cache_shapes)
+        b = recipe.batch_axes or None
+        fn = jax.jit(step,
+                     in_shardings=to_named(recipe, (pspec, bspec)),
+                     out_shardings=to_named(recipe, (P(b), cspec)))
+        return fn, (pshape, specs)
+
+    # decode
+    step = build_decode_step(cfg, recipe)
+    bspec = batch_sharding(recipe, cfg, shape)
+    b = recipe.batch_axes or None
+    fn = jax.jit(step,
+                 in_shardings=to_named(recipe, (pspec, bspec["caches"],
+                                                P(b, None), P())),
+                 out_shardings=to_named(recipe, (P(b), bspec["caches"])),
+                 donate_argnums=(1,))
+    return fn, (pshape, specs["caches"], specs["token"], specs["pos"])

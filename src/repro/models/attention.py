@@ -1,0 +1,234 @@
+"""Attention layers: GQA (full / sliding-window) and DeepSeek-style MLA.
+
+Three entry modes:
+  train    — full-sequence causal, no cache
+  prefill  — full-sequence causal, emits a decode cache
+  decode   — one new token per sequence against the cache (single step)
+
+Decode caches carry an explicit per-slot position array ``kpos`` (S,),
+-1 marking empty slots; sliding-window layers use a ring buffer of size
+``window``.  The decode attention itself is delegated to
+``repro.core.decode_attention`` which implements the ISP (sequence-sharded
+KV, partial-softmax combine) path when a mesh is present.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AttnConfig, ModelConfig
+from repro.kernels import ops as kops
+from repro.models.layers import KeyGen, apply_rope, dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+
+def gqa_params(cfg: ModelConfig, kg: KeyGen, dtype) -> Dict[str, Any]:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": dense_init(kg(), (d, h, dh), dtype),
+        "wk": dense_init(kg(), (d, hkv, dh), dtype),
+        "wv": dense_init(kg(), (d, hkv, dh), dtype),
+        "wo": dense_init(kg(), (h, dh, d), dtype, scale=(h * dh) ** -0.5),
+    }
+
+
+def mla_params(cfg: ModelConfig, kg: KeyGen, dtype) -> Dict[str, Any]:
+    a = cfg.attn
+    d, h = cfg.d_model, cfg.num_heads
+    qk = a.qk_nope_dim + a.qk_rope_dim
+    p: Dict[str, Any] = {
+        "wkv_a": dense_init(kg(), (d, a.kv_lora_rank + a.qk_rope_dim), dtype),
+        "kv_norm": jnp.zeros((a.kv_lora_rank,), dtype),
+        "wk_b": dense_init(kg(), (a.kv_lora_rank, h, a.qk_nope_dim), dtype),
+        "wv_b": dense_init(kg(), (a.kv_lora_rank, h, a.v_head_dim), dtype),
+        "wo": dense_init(kg(), (h, a.v_head_dim, d), dtype, scale=(h * a.v_head_dim) ** -0.5),
+    }
+    if a.q_lora_rank:
+        p["wq_a"] = dense_init(kg(), (d, a.q_lora_rank), dtype)
+        p["q_norm"] = jnp.zeros((a.q_lora_rank,), dtype)
+        p["wq_b"] = dense_init(kg(), (a.q_lora_rank, h, qk), dtype)
+    else:
+        p["wq"] = dense_init(kg(), (d, h, qk), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_gqa_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+    window = cfg.attn.window if kind == "local" else None
+    s = window if window else max_len    # ring invariant: slot = pos % window
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, s, hkv, dh), dtype),
+        "v": jnp.zeros((batch, s, hkv, dh), dtype),
+        "kpos": jnp.full((s,), -1, jnp.int32),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    a = cfg.attn
+    return {
+        "ckv": jnp.zeros((batch, max_len, a.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, a.qk_rope_dim), dtype),
+        "kpos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def _ring_update(buf, new, pos, ring: bool):
+    """Insert ``new`` (B, 1, ...) at slot pos (scalar) — ring or linear."""
+    s = buf.shape[1]
+    slot = pos % s if ring else jnp.minimum(pos, s - 1)
+    return jax.lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype), slot, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# GQA apply
+# ---------------------------------------------------------------------------
+
+
+def gqa_apply(params, x, positions, cfg: ModelConfig, kind: str, plan,
+              cache: Optional[Dict] = None, mode: str = "train"):
+    """x: (B, S, D); positions: (S,) int32 (decode: (1,) current position).
+
+    Returns (out (B,S,D), new_cache | None).
+    """
+    a = cfg.attn
+    window = a.window if kind == "local" else None
+    rope_base = a.rope_base_local if kind == "local" else a.rope_base
+    dh = cfg.resolved_head_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions[None, :], rope_base)
+    k = apply_rope(k, positions[None, :], rope_base)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        pos = positions[0]
+        ring = window is not None
+        ck = _ring_update(cache["k"], k, pos, ring)
+        cv = _ring_update(cache["v"], v, pos, ring)
+        s = ck.shape[1]
+        slot = pos % s if ring else jnp.minimum(pos, s - 1)
+        kpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
+        new_cache = {"k": ck, "v": cv, "kpos": kpos}
+        from repro.core.decode_attention import decode_attention  # avoid cycle
+        out_h = decode_attention(q[:, 0], ck, cv, kpos, pos, window=window, plan=plan)
+        out_h = out_h[:, None]                                    # (B,1,H,dh)
+    else:
+        # Repeat KV heads to full H for the batched paths: SPMD sharding of
+        # the q-head dim propagates cleanly only when the GQA group reshape
+        # is trivial (g=1).  Without this, XLA replicates all attention
+        # activations across the model axis (measured: 16x memory blow-up on
+        # llama3-405b).  Per-device cost equals q-size; the decode path and
+        # the Pallas TPU kernel keep the true GQA layout.
+        h, hkv = q.shape[2], k.shape[2]
+        k_cache, v_cache = k, v          # caches keep the true GQA layout
+        tp = plan.plan.axis_size(plan.model_axis) if (
+            plan is not None and plan.mesh is not None) else 1
+        if h != hkv and tp > 1 and h % tp == 0:
+            # only when the q-head dim actually shards over the model axis —
+            # otherwise the repeat just multiplies replicated KV bytes
+            k = jnp.repeat(k, h // hkv, axis=2)
+            v = jnp.repeat(v, h // hkv, axis=2)
+        out_h = kops.flash_attention(q, k, v, causal=True, window=window,
+                                     q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+        if mode == "prefill":
+            k, v = k_cache, v_cache
+            sq = x.shape[1]
+            if window is not None:
+                w = min(window, sq)
+                ck, cv = k[:, sq - w:], v[:, sq - w:]
+                # ring layout: slot = pos % window
+                kpos = jnp.arange(sq - w, sq, dtype=jnp.int32)
+                roll = (sq % window) if sq >= window else 0
+                ck = jnp.roll(ck, roll, axis=1)
+                cv = jnp.roll(cv, roll, axis=1)
+                kpos = jnp.roll(kpos, roll, axis=0)
+                if w < window:   # pad ring up to window for steady-state decode
+                    pad = window - w
+                    ck = jnp.pad(ck, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    cv = jnp.pad(cv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    kpos = jnp.concatenate([kpos, jnp.full((pad,), -1, jnp.int32)])
+                new_cache = {"k": ck, "v": cv, "kpos": kpos}
+            else:
+                kpos = jnp.arange(sq, dtype=jnp.int32)
+                new_cache = {"k": k, "v": v, "kpos": kpos}
+
+    out = jnp.einsum("bshk,hkd->bsd", out_h.astype(x.dtype), params["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA apply
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(params, x, cfg: ModelConfig):
+    a = cfg.attn
+    if a.q_lora_rank:
+        qa = jnp.einsum("bsd,dr->bsr", x, params["wq_a"])
+        qa = rms_norm(qa, params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", qa, params["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    return q[..., : a.qk_nope_dim], q[..., a.qk_nope_dim:]
+
+
+def mla_apply(params, x, positions, cfg: ModelConfig, plan,
+              cache: Optional[Dict] = None, mode: str = "train"):
+    a = cfg.attn
+    B, S, _ = x.shape
+    q_nope, q_rope = _mla_q(params, x, cfg)                      # (B,S,H,·)
+    q_rope = apply_rope(q_rope, positions[None, :], a.rope_base)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    ckv, k_rope = kv_a[..., : a.kv_lora_rank], kv_a[..., a.kv_lora_rank:]
+    ckv = rms_norm(ckv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions[None, :], a.rope_base)[:, :, 0]
+
+    scale = (a.qk_nope_dim + a.qk_rope_dim) ** -0.5
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None
+        pos = positions[0]
+        cckv = _ring_update(cache["ckv"], ckv, pos, ring=False)
+        ckr = _ring_update(cache["krope"], k_rope, pos, ring=False)
+        s = cckv.shape[1]
+        slot = jnp.minimum(pos, s - 1)
+        kpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
+        new_cache = {"ckv": cckv, "krope": ckr, "kpos": kpos}
+        from repro.core.decode_attention import mla_decode_attention
+        ctx = mla_decode_attention(
+            q_nope[:, 0], q_rope[:, 0], cckv, ckr, kpos, pos,
+            params["wk_b"], scale=scale, plan=plan)              # (B,H,kv_lora)
+        out_h = jnp.einsum("bhr,rhv->bhv", ctx.astype(x.dtype), params["wv_b"])[:, None]
+    else:
+        # non-absorbed prefill/train: materialize per-head k, v from ckv
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, params["wk_b"])
+        v = jnp.einsum("bsr,rhv->bshv", ckv, params["wv_b"])
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope[:, :, None, :], (B, S, cfg.num_heads, a.qk_rope_dim))], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out_h = kops.flash_attention(q, k, v, causal=True, scale=scale,
+                                     q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk)
+        if mode == "prefill":
+            new_cache = {"ckv": ckv, "krope": k_rope,
+                         "kpos": jnp.arange(S, dtype=jnp.int32)}
+
+    out = jnp.einsum("bshv,hvd->bsd", out_h.astype(x.dtype), params["wo"])
+    return out, new_cache

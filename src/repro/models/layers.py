@@ -1,0 +1,74 @@
+"""Shared neural-net layers: RMSNorm, RoPE, gated MLP, init helpers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with fp32 accumulation, output in input dtype."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, base: float) -> jax.Array:
+    """Inverse frequencies for rotary embedding; head_dim must be even."""
+    half = head_dim // 2
+    return 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, base: float) -> jax.Array:
+    """Rotary position embedding.
+
+    x: (..., S, H, Dh) with Dh even; positions: broadcastable to (..., S).
+    Uses the "rotate half" convention.
+    """
+    dh = x.shape[-1]
+    inv_freq = rope_frequencies(dh, base)                       # (dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]                      # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """Gated MLP: silu(x W_g) * (x W_u) W_d.  Weights: (D,F),(D,F),(F,D)."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape, dtype=jnp.bfloat16, scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.bfloat16, **_kw) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+@dataclasses.dataclass
+class KeyGen:
+    """Deterministic stream of PRNG keys for sequential param init."""
+
+    key: jax.Array
+
+    def __call__(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub

@@ -1,0 +1,276 @@
+"""LM assembly: embedding → scanned block groups → head.
+
+Layers are scanned in groups (``cfg.group_size``) with stacked parameters so
+HLO size is O(group) not O(depth); remat policy per config.  Entry points:
+
+  loss_fn       (params, batch, cfg, plan) -> (loss, metrics)     [train]
+  prefill_fn    (params, batch, cfg, plan) -> (next_token, caches)
+  decode_fn     (params, caches, token, pos, cfg, plan) -> (token, caches)
+  input_specs   (cfg, shape) -> pytree of ShapeDtypeStruct (dry-run stand-ins)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.core import embedding as emb
+from repro.models import blocks as blk
+from repro.models.layers import KeyGen, rms_norm, dense_init
+from repro.sharding import ParallelPlan, ShardingRecipe
+
+LOCAL = ShardingRecipe(plan=ParallelPlan(), batch_axes=(), seq_axes=())
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def group_pattern(cfg: ModelConfig) -> Tuple[str, ...]:
+    return cfg.layer_pattern[: cfg.group_size]
+
+
+def num_groups(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.group_size
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    kg = KeyGen(key)
+    params: Dict[str, Any] = {"embed": {"table": emb.embed_params(cfg, kg, dtype)}}
+    blocks: Dict[str, Any] = {}
+    for j, kind in enumerate(group_pattern(cfg)):
+        keys = jax.random.split(kg(), num_groups(cfg))
+        blocks[f"b{j}"] = jax.vmap(
+            lambda k, kind=kind: blk.block_params(cfg, kind, k, dtype))(keys)
+    params["blocks"] = blocks
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = {"w_head": dense_init(
+            kg(), (emb.padded_vocab(cfg.vocab_size), cfg.d_model), dtype)}
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStructs for params — no allocation (dry-run / spec building)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+@functools.lru_cache(maxsize=None)
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    import math
+    shapes = abstract_params(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = math.prod(leaf.shape)
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if active_only and name.startswith("we_") and cfg.moe:
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    return total
+
+
+@functools.lru_cache(maxsize=None)
+def count_flops_params(cfg: ModelConfig, active_only: bool = True) -> int:
+    """Params entering the 6ND estimate (excludes embedding table & head)."""
+    import math
+    shapes = abstract_params(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        if "embed" in names or "head" in names:
+            continue
+        n = math.prod(leaf.shape)
+        if active_only and names[-1].startswith("we_") and cfg.moe:
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _remat_policy(cfg: ModelConfig):
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+def _sp_constraint(x, cfg: ModelConfig, plan):
+    """Sequence parallelism: keep the residual stream sharded over the model
+    axis between blocks (Megatron-SP).  The saved scan carry — the dominant
+    activation residency under remat — shrinks by the TP degree; XLA turns
+    the surrounding TP all-reduces into reduce-scatter + all-gather pairs
+    (same wire bytes, 16x less HBM)."""
+    if plan is None or plan.mesh is None or plan.model_axis is None:
+        return x
+    tp = plan.plan.axis_size(plan.model_axis)
+    if tp <= 1 or x.ndim != 3 or x.shape[1] % tp:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    b = plan.batch_axes or None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(plan.mesh, P(b, plan.model_axis, None)))
+
+
+def run_blocks(params, x, positions, cfg: ModelConfig, plan, caches=None,
+               mode: str = "train"):
+    """x: (B,S,D).  Returns (x, new_caches, aux_total)."""
+    gpat = group_pattern(cfg)
+    use_sp = mode in ("train", "prefill") and blk.sp_enabled(
+        cfg, plan, x.shape[1], mode)
+
+    def body(carry, xs):
+        x, aux = carry
+        gparams, gcache = xs
+        new_gc = {}
+        for j, kind in enumerate(gpat):
+            c = None if gcache is None else gcache.get(f"b{j}")
+            # blocks keep the residual S-sharded internally (Megatron-SP);
+            # see blocks.sp_gather / sp_scatter
+            x, nc, a = blk.apply_block(gparams[f"b{j}"], x, positions, cfg,
+                                       kind, plan, c, mode)
+            aux = aux + a
+            if nc is not None:
+                new_gc[f"b{j}"] = nc
+        return (x, aux), new_gc
+
+    if mode == "train" and cfg.remat != "none":
+        body = jax.checkpoint(body, policy=_remat_policy(cfg),
+                              prevent_cse=False)
+
+    if use_sp:
+        x = _sp_constraint(x, cfg, plan)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                        (params["blocks"], caches))
+    return x, new_caches, aux
+
+
+def _head_table(params, cfg: ModelConfig):
+    return params["embed"]["table"] if cfg.tie_embeddings else params["head"]["w_head"]
+
+
+def _embed_input(params, batch, cfg: ModelConfig, plan, mode: str = "train"):
+    if "embeddings" in batch:          # modality frontend stub output
+        return batch["embeddings"].astype(_dtype(cfg))
+    sp = blk.sp_enabled(cfg, plan, batch["tokens"].shape[1], mode)
+    return emb.embed_lookup(params["embed"]["table"], batch["tokens"], plan,
+                            seq_sharded=sp)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch, cfg: ModelConfig, plan=LOCAL):
+    """batch: {tokens|embeddings, labels}.  Returns (loss, metrics)."""
+    x = _embed_input(params, batch, cfg, plan, "train")
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, _, aux = run_blocks(params, x, positions, cfg, plan, None, "train")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    labels = batch["labels"]
+    per_tok = emb.sharded_xent(x, _head_table(params, cfg), jnp.maximum(labels, 0),
+                               plan, cfg,
+                               seq_sharded=blk.sp_enabled(cfg, plan, S, "train"))
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    xent = (per_tok * mask).sum() / denom
+    aux_coef = cfg.moe.aux_loss_coef if cfg.moe else 0.0
+    aux = aux / max(cfg.num_layers // cfg.group_size, 1)
+    loss = xent + aux_coef * aux
+    return loss, {"xent": xent, "aux": aux, "tokens": denom}
+
+
+def prefill_fn(params, batch, cfg: ModelConfig, plan=LOCAL):
+    """Full-sequence prefill.  Returns (next_token (B,), caches)."""
+    x = _embed_input(params, batch, cfg, plan, "prefill")
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x, caches, _ = run_blocks(params, x, positions, cfg, plan, _abstract_none(cfg),
+                              "prefill")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    nxt = emb.greedy_sample(x[:, -1], _head_table(params, cfg), plan, cfg)
+    return nxt, caches
+
+
+def _abstract_none(cfg: ModelConfig):
+    """Scan xs placeholder when caches don't exist yet (prefill builds them)."""
+    return None
+
+
+def decode_fn(params, caches, token, pos, cfg: ModelConfig, plan=LOCAL):
+    """One decode step.  token: (B,1) int32; pos: () int32 (uniform batch pos).
+
+    Returns (next_token (B,), new_caches).
+    """
+    x = emb.embed_lookup(params["embed"]["table"], token, plan)
+    positions = pos[None].astype(jnp.int32) if pos.ndim == 0 else pos
+    x, new_caches, _ = run_blocks(params, x, positions, cfg, plan, caches, "decode")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    nxt = emb.greedy_sample(x[:, -1], _head_table(params, cfg), plan, cfg)
+    return nxt, new_caches
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked decode caches: leaves (num_groups, ...)."""
+    dtype = _dtype(cfg)
+    gpat = group_pattern(cfg)
+    ng = num_groups(cfg)
+    out = {}
+    for j, kind in enumerate(gpat):
+        one = blk.init_block_cache(cfg, kind, batch, max_len, dtype)
+        out[f"b{j}"] = jax.tree.map(
+            lambda l: jnp.zeros((ng,) + l.shape, l.dtype) if l.dtype != jnp.int32
+            else jnp.broadcast_to(l, (ng,) + l.shape).copy(), one)
+    # kpos slots must start empty (-1), zeros would alias position 0
+    def fix_kpos(path, leaf):
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        if names and names[-1] == "kpos":
+            return jnp.full(leaf.shape, -1, jnp.int32)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix_kpos, out)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.frontend:
+            return {"embeddings": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                       _dtype(cfg)),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "prefill":
+        if cfg.frontend:
+            return {"embeddings": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                       _dtype(cfg))}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a cache of S
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "caches": abstract_caches(cfg, B, S),
+    }

@@ -1,0 +1,176 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+The routed path is the paper's insight verbatim: tokens (small) are shipped
+via ``all_to_all`` to the shard that owns the expert weights (big); only the
+FFN outputs come back.  Weights never move.
+
+Two implementations:
+  * ``dense_moe``  — every expert computed for every token, masked by gates.
+    O(E) flops: test oracle + single-device fallback.
+  * ``ep_moe``     — shard_map expert-parallel: capacity-bounded scatter
+    dispatch, all_to_all over the model axis, per-shard expert FFN,
+    reverse all_to_all, gate-weighted combine.  Exact up to capacity drops.
+
+Decode uses a no-all_to_all variant (tokens replicated over the model axis;
+each shard computes only its own experts and psums) — at batch sizes of a
+few tokens/shard the index traffic would exceed the result traffic, so the
+ISP rule "ship the smaller thing" picks psum instead.
+
+Shared experts are ordinary TP MLPs handled in blocks.py (outside the EP
+region) so their d_ff shards over the model axis instead of replicating.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import KeyGen, dense_init
+
+
+def moe_params(cfg: ModelConfig, kg: KeyGen, dtype) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    p = {
+        "router": dense_init(kg(), (d, m.num_experts), jnp.float32, scale=d ** -0.5),
+        "we_gate": dense_init(kg(), (m.num_experts, d, m.d_ff_expert), dtype),
+        "we_up": dense_init(kg(), (m.num_experts, d, m.d_ff_expert), dtype),
+        "we_down": dense_init(kg(), (m.num_experts, m.d_ff_expert, d), dtype),
+    }
+    if m.num_shared_experts:
+        f = (m.d_ff_shared or m.d_ff_expert) * m.num_shared_experts
+        p["ws_gate"] = dense_init(kg(), (d, f), dtype)
+        p["ws_up"] = dense_init(kg(), (d, f), dtype)
+        p["ws_down"] = dense_init(kg(), (f, d), dtype)
+    return p
+
+
+def _router(params, x, cfg: ModelConfig):
+    """Returns (gates (..., k) fp32, experts (..., k) int32, probs (..., E))."""
+    m = cfg.moe
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, m.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, experts, probs
+
+
+def aux_load_loss(probs, experts, cfg: ModelConfig):
+    """Switch-style load-balancing loss: E * sum_e f_e * p_e."""
+    m = cfg.moe
+    e1 = jax.nn.one_hot(experts, m.num_experts, dtype=jnp.float32).sum(-2)
+    frac = e1.reshape(-1, m.num_experts).mean(0) / max(m.top_k, 1)
+    pbar = probs.reshape(-1, m.num_experts).mean(0)
+    return m.num_experts * jnp.sum(frac * pbar)
+
+
+def _expert_ffn(we_gate, we_up, we_down, xs):
+    """xs: (E, C, D) tokens grouped by expert; weights (E, D, F)/(E, F, D)."""
+    g = jnp.einsum("ecd,edf->ecf", xs, we_gate)
+    u = jnp.einsum("ecd,edf->ecf", xs, we_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xs.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, we_down)
+
+
+def dense_moe(params, x, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Oracle: all experts on all tokens, gate-masked combine."""
+    m = cfg.moe
+    gates, experts, probs = _router(params, x, cfg)
+    shape = x.shape
+    xf = x.reshape(-1, shape[-1])                                  # (T, D)
+    outs = _expert_ffn(params["we_gate"], params["we_up"], params["we_down"],
+                       jnp.broadcast_to(xf[None], (m.num_experts,) + xf.shape))
+    gf = gates.reshape(-1, m.top_k)
+    ef = experts.reshape(-1, m.top_k)
+    w = jnp.zeros((xf.shape[0], m.num_experts), jnp.float32)
+    w = jax.vmap(lambda row, e, g: row.at[e].add(g))(w, ef, gf)
+    y = jnp.einsum("te,etd->td", w.astype(x.dtype), outs)
+    return y.reshape(shape), aux_load_loss(probs, experts, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel (shard_map) path
+# ---------------------------------------------------------------------------
+
+
+def _dispatch_indices(experts, gates, num_experts: int, capacity: int):
+    """Flatten (T, k) assignments into per-expert slots.
+
+    Returns (e_idx (T*k,), slot (T*k,), keep (T*k,), gate (T*k,)).
+    Slot = position of this assignment within its expert's capacity buffer.
+    """
+    t, k = experts.shape
+    ef = experts.reshape(-1)
+    gf = gates.reshape(-1)
+    onehot = jax.nn.one_hot(ef, num_experts, dtype=jnp.int32)       # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                       # exclusive
+    slot = jnp.take_along_axis(pos, ef[:, None], axis=1)[:, 0]
+    keep = slot < capacity
+    return ef, jnp.where(keep, slot, 0), keep, gf
+
+
+def ep_moe_local(params_local, x_local, cfg: ModelConfig, axis: str):
+    """Per-shard EP MoE body (runs inside shard_map).
+
+    x_local: (T_local, D) — this shard's slice of the tokens.
+    params_local: router replicated; expert weights sharded on E over ``axis``.
+    Returns (y_local (T_local, D), aux scalar replicated).
+    """
+    m = cfg.moe
+    ep = jax.lax.psum(1, axis)                                     # EP degree
+    e_local = m.num_experts // ep
+    t_local, d = x_local.shape
+    capacity = max(1, int(t_local * m.top_k * m.capacity_factor / m.num_experts))
+
+    gates, experts, probs = _router(params_local, x_local, cfg)
+    aux = aux_load_loss(probs, experts, cfg)
+    aux = jax.lax.pmean(aux, axis)
+
+    e_idx, slot, keep, gate = _dispatch_indices(experts, gates, m.num_experts, capacity)
+    # scatter tokens into (E, C, D) send buffer
+    xk = jnp.repeat(x_local, m.top_k, axis=0)                      # (T*k, D)
+    buf = jnp.zeros((m.num_experts, capacity, d), x_local.dtype)
+    buf = buf.at[e_idx, slot].add(jnp.where(keep[:, None], xk, 0))
+    # ship tokens to the expert's home shard
+    buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=1, tiled=True)
+    # (e_local, C * ep, D): on-shard expert compute — weights never moved
+    y = _expert_ffn(params_local["we_gate"], params_local["we_up"],
+                    params_local["we_down"], buf)
+    # ship results back
+    y = jax.lax.all_to_all(y, axis, split_axis=1, concat_axis=0, tiled=True)
+    # gate-weighted combine
+    rows = y[e_idx, slot]                                          # (T*k, D)
+    rows = jnp.where(keep[:, None], rows, 0)
+    rows = rows * gate[:, None].astype(rows.dtype)
+    y_tok = rows.reshape(t_local, m.top_k, d).sum(axis=1)
+    return y_tok, aux
+
+
+def ep_moe_decode_local(params_local, x_local, cfg: ModelConfig, axis: str):
+    """Decode-time EP: tokens replicated over ``axis``; each shard runs only
+    its own experts and psums results (no all_to_all — see module docstring).
+
+    x_local: (T, D) — same tokens on every shard of ``axis``.
+    """
+    m = cfg.moe
+    ep = jax.lax.psum(1, axis)
+    e_local = m.num_experts // ep
+    shard = jax.lax.axis_index(axis)
+    lo = shard * e_local
+    t, d = x_local.shape
+
+    gates, experts, _ = _router(params_local, x_local, cfg)        # (T,k)
+    # mask assignments not owned by this shard
+    owned = (experts >= lo) & (experts < lo + e_local)
+    e_rel = jnp.clip(experts - lo, 0, e_local - 1)
+    # dense-over-local-experts compute with gate masking (T*k small at decode)
+    w = jnp.zeros((t, e_local), jnp.float32)
+    w = jax.vmap(lambda row, e, g, o: row.at[e].add(jnp.where(o, g, 0.0)))(
+        w, e_rel, gates, owned)
+    outs = _expert_ffn(params_local["we_gate"], params_local["we_up"],
+                       params_local["we_down"],
+                       jnp.broadcast_to(x_local[None], (e_local, t, d)))
+    y = jnp.einsum("te,etd->td", w.astype(x_local.dtype), outs)
+    return jax.lax.psum(y, axis)

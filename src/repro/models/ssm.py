@@ -1,0 +1,391 @@
+"""State-space / recurrent sequence mixers: Mamba, mLSTM, sLSTM.
+
+All three expose (params, x, cfg, plan, cache, mode) -> (y, new_cache) with a
+*constant-size* recurrent state — the "resident state" analogue of the
+paper's in-storage data: at decode time the state never leaves its shard.
+
+Numerics:
+  * Mamba: selective scan; chunked lax.scan with an associative_scan inside
+    each chunk (checkpointed so the backward saves only per-chunk carries).
+  * mLSTM: chunkwise-parallel matrix-memory recurrence, exactly equivalent
+    (up to fp rounding) to the stabilized per-step form; per-step form kept
+    as test oracle (``mlstm_step_ref``).
+  * sLSTM: inherently sequential (recurrent gate feedback) — scan over time
+    in chunks with checkpointed inner scans.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import KeyGen, dense_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective SSM
+# ---------------------------------------------------------------------------
+
+
+def mamba_params(cfg: ModelConfig, kg: KeyGen, dtype) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    dt_rank = s.dt_rank or -(-d // 16)
+    p = {
+        "w_in": dense_init(kg(), (d, 2 * d_in), dtype),
+        "conv_w": dense_init(kg(), (s.conv_width, d_in), dtype, scale=s.conv_width ** -0.5),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "w_x": dense_init(kg(), (d_in, dt_rank + 2 * s.state_dim), dtype),
+        "w_dt": dense_init(kg(), (dt_rank, d_in), dtype, scale=dt_rank ** -0.5),
+        "dt_bias": jnp.zeros((d_in,), jnp.float32),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, s.state_dim + 1, dtype=jnp.float32), (d_in, s.state_dim))),
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(kg(), (d_in, d), dtype),
+    }
+    return p
+
+
+def _mamba_scan_chunk(h0, a, bx):
+    """Associative scan of h_t = a_t * h_{t-1} + bx_t within a chunk.
+
+    a, bx: (L, B, d_in, N) fp32; h0: (B, d_in, N).  Returns (h_all, h_last).
+    """
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a_acc, b_acc = jax.lax.associative_scan(comb, (a, bx), axis=0)
+    h_all = a_acc * h0[None] + b_acc
+    return h_all, h_all[-1]
+
+
+def mamba_apply(params, x, cfg: ModelConfig, plan, cache: Optional[Dict] = None,
+                mode: str = "train"):
+    """x: (B, S, D).  Cache: {"conv": (B, W-1, d_in), "ssm": (B, d_in, N)}."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    d_in = s.expand * D
+    N = s.state_dim
+    W = s.conv_width
+
+    xz = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over time
+    if mode == "decode":
+        assert cache is not None
+        conv_in = jnp.concatenate([cache["conv"], xs], axis=1)      # (B, W, d_in)
+        new_conv = conv_in[:, 1:]
+    else:
+        conv_in = jnp.pad(xs, ((0, 0), (W - 1, 0), (0, 0)))
+        new_conv = conv_in[:, -(W - 1):] if W > 1 else jnp.zeros((B, 0, d_in), xs.dtype)
+    xc = sum(conv_in[:, i: i + S] * params["conv_w"][i] for i in range(W))
+    xc = jax.nn.silu((xc + params["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bse,ef->bsf", xc, params["w_x"])
+    dt_rank = proj.shape[-1] - 2 * N
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jnp.einsum("bsr,re->bse", dt, params["w_dt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt + params["dt_bias"])                    # (B,S,d_in)
+    a = -jnp.exp(params["a_log"])                                   # (d_in, N)
+    da = jnp.exp(dt[..., None] * a)                                 # (B,S,d_in,N)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+
+    h0 = cache["ssm"].astype(jnp.float32) if cache is not None else jnp.zeros(
+        (B, d_in, N), jnp.float32)
+
+    if mode == "decode":
+        h = da[:, 0] * h0 + dbx[:, 0]
+        y = jnp.einsum("ben,bn->be", h, cmat[:, 0].astype(jnp.float32))[:, None]
+        h_last = h
+    else:
+        L = min(s.chunk_size, S)
+        pad = (-S) % L
+        da_p = jnp.pad(da, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        dbx_p = jnp.pad(dbx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        nchunk = da_p.shape[1] // L
+        da_c = da_p.reshape(B, nchunk, L, d_in, N).transpose(1, 2, 0, 3, 4)
+        dbx_c = dbx_p.reshape(B, nchunk, L, d_in, N).transpose(1, 2, 0, 3, 4)
+
+        @jax.checkpoint
+        def chunk_body(h, inp):
+            a_c, b_c = inp                                          # (L,B,d_in,N)
+            h_all, h_last = _mamba_scan_chunk(h, a_c, b_c)
+            return h_last, h_all
+
+        h_last, h_chunks = jax.lax.scan(chunk_body, h0, (da_c, dbx_c))
+        h_all = h_chunks.transpose(2, 0, 1, 3, 4).reshape(B, nchunk * L, d_in, N)[:, :S]
+        y = jnp.einsum("bsen,bsn->bse", h_all, cmat.astype(jnp.float32))
+
+    y = y + params["d_skip"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["w_out"])
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        new_cache = {"conv": new_conv.astype(x.dtype), "ssm": h_last.astype(jnp.float32)}
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, s.state_dim), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory) — chunkwise parallel
+# ---------------------------------------------------------------------------
+
+
+def mlstm_params(cfg: ModelConfig, kg: KeyGen, dtype) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = s.num_heads
+    dh = d_in // nh
+    return {
+        "w_up": dense_init(kg(), (d, 2 * d_in), dtype),            # x and gate branch
+        "wq": dense_init(kg(), (d_in, nh, dh), dtype),
+        "wk": dense_init(kg(), (d_in, nh, dh), dtype),
+        "wv": dense_init(kg(), (d_in, nh, dh), dtype),
+        "w_if": dense_init(kg(), (d_in, 2 * nh), dtype, scale=0.01),
+        "if_bias": jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]).astype(jnp.float32),
+        "out_norm": jnp.zeros((d_in,), dtype),
+        "w_down": dense_init(kg(), (d_in, d), dtype),
+    }
+
+
+def mlstm_step_ref(q, k, v, li, lf, state):
+    """Stabilized per-step mLSTM — test oracle.
+
+    q,k,v: (B,nh,dh); li,lf: (B,nh) log-space gates; state: (C,n,m).
+    """
+    C, n, m = state
+    dh = q.shape[-1]
+    k = k / jnp.sqrt(jnp.float32(dh))
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h, (C, n, m_new)
+
+
+def _mlstm_chunk(state, qkv_if):
+    """Chunkwise-parallel mLSTM over one chunk of length L.
+
+    state: (C (B,nh,dh,dh), n (B,nh,dh), m (B,nh)); q,k,v: (B,L,nh,dh) fp32;
+    li,lf: (B,L,nh) fp32.  Exactly matches the per-step form.
+    """
+    q, k, v, li, lf = qkv_if
+    C, n, m = state
+    B, L, nh, dh = q.shape
+    k = k / jnp.sqrt(jnp.float32(dh))
+    b = jnp.cumsum(lf, axis=1)                                     # (B,L,nh) inclusive
+    g = b + m[:, None]                                             # state decay to t
+    # intra-chunk log weights D[t,s] = b_t - b_s + li_s  (s <= t)
+    dmat = b[:, :, None] - b[:, None, :] + li[:, None, :, :]       # (B,L,L,nh)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, -1e30)   # avoid inf (NaN-safe grads)
+    m_t = jnp.maximum(g, dmat.max(axis=2))                         # (B,L,nh)
+    # intra scores
+    s_qk = jnp.einsum("blhd,bshd->blsh", q, k)                     # (B,L,S,nh)
+    w_intra = jnp.exp(dmat - m_t[:, :, None])                      # broadcast over S
+    sw = s_qk * w_intra
+    num = jnp.einsum("blsh,bshv->blhv", sw, v)
+    den = jnp.sum(sw, axis=2)                                      # Σ_s w·(q·k)  (B,L,nh)
+    # inter (state) contribution
+    w_inter = jnp.exp(g - m_t)                                     # (B,L,nh)
+    num = num + w_inter[..., None] * jnp.einsum("blhk,bhkv->blhv", q, C)
+    den = den + w_inter * jnp.einsum("blhk,bhk->blh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+    # state update to end of chunk
+    b_l = b[:, -1]                                                 # (B,nh) total decay
+    m_new = jnp.maximum(b_l + m, (b_l[:, None] - b + li).max(axis=1))
+    w_st = jnp.exp(b_l[:, None] - b + li - m_new[:, None])         # (B,L,nh)
+    C_new = jnp.exp(b_l + m - m_new)[..., None, None] * C + jnp.einsum(
+        "blh,blhk,blhv->bhkv", w_st, k, v)
+    n_new = jnp.exp(b_l + m - m_new)[..., None] * n + jnp.einsum(
+        "blh,blhk->bhk", w_st, k)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_apply(params, x, cfg: ModelConfig, plan, cache: Optional[Dict] = None,
+                mode: str = "train"):
+    """xLSTM mLSTM block core (pre-up-projection style)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    d_in = s.expand * D
+    nh = s.num_heads
+    dh = d_in // nh
+
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    xin, gate = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ehk->bshk", xin, params["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bse,ehk->bshk", xin, params["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bse,ehk->bshk", xin, params["wv"]).astype(jnp.float32)
+    gif = jnp.einsum("bse,eh->bsh", xin, params["w_if"]).astype(jnp.float32)
+    gif = gif + params["if_bias"]
+    li, lf_raw = jnp.split(gif, 2, axis=-1)                        # (B,S,nh)
+    lf = jax.nn.log_sigmoid(lf_raw)
+
+    if cache is not None:
+        state = (cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32),
+                 cache["m"].astype(jnp.float32))
+    else:
+        state = (jnp.zeros((B, nh, dh, dh), jnp.float32),
+                 jnp.zeros((B, nh, dh), jnp.float32),
+                 jnp.full((B, nh), 0.0, jnp.float32))
+
+    if mode == "decode":
+        h, state = mlstm_step_ref(q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0], state)
+        h = h[:, None]
+    else:
+        L = min(s.chunk_size, S)
+        pad = (-S) % L
+        def padt(t, val=0.0):
+            return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2),
+                           constant_values=val)
+        qp, kp, vp, lfp = map(padt, (q, k, v, lf))
+        lip = padt(li, -1e30)   # pad input-gate to exp(-inf)=0: pads are no-ops
+        nchunk = qp.shape[1] // L
+        def cchunks(t):
+            return t.reshape((B, nchunk, L) + t.shape[2:]).transpose(
+                (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+        state, h_chunks = jax.lax.scan(
+            jax.checkpoint(_mlstm_chunk), state,
+            tuple(map(cchunks, (qp, kp, vp, lip, lfp))))
+        h = h_chunks.transpose(1, 0, 2, 3, 4).reshape(B, nchunk * L, nh, dh)[:, :S]
+
+    h = h.reshape(B, -1, d_in)
+    from repro.models.layers import rms_norm
+    h = rms_norm(h.astype(x.dtype), params["out_norm"], cfg.norm_eps)
+    h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", h, params["w_down"])
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        C, n, m = state
+        new_cache = {"C": C, "n": n, "m": m}
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = s.num_heads
+    dh = d_in // nh
+    return {"C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.zeros((batch, nh), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, recurrent gate feedback)
+# ---------------------------------------------------------------------------
+
+
+def slstm_params(cfg: ModelConfig, kg: KeyGen, dtype) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    nh = s.num_heads
+    dh = d // nh
+    return {
+        # 4 gates (z,i,f,o): input and block-diagonal recurrent weights
+        "w_x": dense_init(kg(), (d, 4 * d), dtype),
+        "r_h": dense_init(kg(), (nh, dh, 4 * dh), dtype, scale=dh ** -0.5),
+        "bias": jnp.concatenate([
+            jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]).astype(jnp.float32),
+        "out_norm": jnp.zeros((d,), dtype),
+        # post-up-projection MLP (factor slstm_proj_factor, gelu)
+        "w_pf1": dense_init(kg(), (d, int(d * s.slstm_proj_factor)), dtype),
+        "w_pf2": dense_init(kg(), (int(d * s.slstm_proj_factor), d), dtype),
+    }
+
+
+def _slstm_step(params, nh, dh, carry, xs):
+    """One sLSTM step.  carry: (c,n,m,h) each (B,nh,dh); xs: (x_t (B,4d), valid)."""
+    x_t, valid = xs
+    c, n, m, h = carry
+    rec = jnp.einsum("bhk,hkf->bhf", h, params["r_h"].astype(jnp.float32))
+    gates = x_t.reshape(x_t.shape[0], nh, 4 * dh) + rec            # (B,nh,4dh)
+    z_t, i_t, f_t, o_t = jnp.split(gates, 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(jax.nn.log_sigmoid(f_t) + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_t)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    new_carry = (c_new, n_new, m_new, h_new)
+    # padded steps must not evolve the state
+    new_carry = jax.tree.map(lambda a, b: jnp.where(valid, a, b), new_carry, carry)
+    return new_carry, h_new
+
+
+def slstm_apply(params, x, cfg: ModelConfig, plan, cache: Optional[Dict] = None,
+                mode: str = "train"):
+    s = cfg.ssm
+    B, S, D = x.shape
+    nh = s.num_heads
+    dh = D // nh
+    xg = (jnp.einsum("bsd,df->bsf", x, params["w_x"]).astype(jnp.float32)
+          + params["bias"])
+
+    if cache is not None:
+        carry = (cache["c"], cache["n"], cache["m"], cache["h"])
+    else:
+        zero = jnp.zeros((B, nh, dh), jnp.float32)
+        carry = (zero, zero, zero, zero)
+
+    step = functools.partial(_slstm_step, params, nh, dh)
+    if mode == "decode":
+        carry, h = step(carry, (xg[:, 0], jnp.bool_(True)))
+        h_all = h[:, None]
+    else:
+        L = min(s.chunk_size, S)
+        pad = (-S) % L
+        xgp = jnp.pad(xg, ((0, 0), (0, pad), (0, 0)))
+        valid = jnp.arange(xgp.shape[1]) < S
+        nchunk = xgp.shape[1] // L
+        xc = xgp.reshape(B, nchunk, L, -1).transpose(1, 2, 0, 3)   # (nc,L,B,4d)
+        vc = valid.reshape(nchunk, L)
+
+        @jax.checkpoint
+        def chunk_body(carry, xs):
+            return jax.lax.scan(step, carry, xs)
+
+        carry, h_chunks = jax.lax.scan(chunk_body, carry, (xc, vc))
+        h_all = h_chunks.reshape(nchunk * L, B, nh, dh).transpose(1, 0, 2, 3)[:, :S]
+
+    h_all = h_all.reshape(B, -1, D)
+    from repro.models.layers import rms_norm
+    h_all = rms_norm(h_all.astype(x.dtype), params["out_norm"], cfg.norm_eps)
+    # post-up-projection (gelu MLP)
+    y = jnp.einsum("bsd,df->bsf", h_all, params["w_pf1"])
+    y = jax.nn.gelu(y.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", y, params["w_pf2"])
+    new_cache = None
+    if mode in ("decode", "prefill"):
+        c, n, m, h = carry
+        new_cache = {"c": c, "n": n, "m": m, "h": h}
+    return out, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    nh = cfg.ssm.num_heads
+    dh = cfg.d_model // nh
+    zero = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": zero, "n": zero, "m": zero, "h": zero}

@@ -1,0 +1,285 @@
+"""Divisibility-aware sharding plans.
+
+``ParallelPlan`` captures the mesh and axis roles; ``param_specs`` /
+``batch_specs`` / ``cache_specs`` derive ``PartitionSpec`` pytrees for any
+architecture, falling back per-tensor to replication when a dimension does
+not divide the axis (see DESIGN.md §5: e.g. xlstm's 4 heads on a 16-way
+model axis).
+
+Axis roles:
+  data axes ("pod", "data")  — batch / FSDP storage sharding
+  model axis ("model")       — TP (heads, d_ff, vocab), EP (experts),
+                               SP (sequence for long activations, KV spans)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    mesh: Optional[Mesh] = None
+    data_axes: Tuple[str, ...] = ()          # e.g. ("pod", "data") or ("data",)
+    model_axis: Optional[str] = None         # "model"
+    fsdp: bool = False                       # shard params/optim over data axis
+    ep: bool = True                          # expert parallelism for MoE
+    compress_grads: bool = False             # int8 all-reduce on pod axis
+
+    # -- sizes ---------------------------------------------------------
+    def axis_size(self, name: Optional[str]) -> int:
+        if self.mesh is None or name is None:
+            return 1
+        return self.mesh.shape[name]
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.axis_size(a) for a in self.data_axes] or [1]))
+
+    @property
+    def tp_size(self) -> int:
+        return self.axis_size(self.model_axis)
+
+    @property
+    def fsdp_axis(self):
+        # pod axis stays pure-DP (cross-pod traffic = gradients only — the
+        # ISP rule for slow links).  With a model axis, FSDP uses the inner
+        # data axis; without one (tp=1 / ZeRO-3 layout) params shard over
+        # ALL non-pod axes so per-device state is params/(data·model).
+        if not (self.fsdp and self.data_axes):
+            return None
+        inner = tuple(a for a in self.data_axes if a != "pod")
+        if self.model_axis is None and len(inner) > 1:
+            return inner
+        return self.data_axes[-1]
+
+    # -- spec helpers ---------------------------------------------------
+    def _axis_total(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            n = 1
+            for a in axis:
+                n *= self.axis_size(a)
+            return n
+        return self.axis_size(axis)
+
+    def _fits(self, dim: int, axis) -> bool:
+        n = self._axis_total(axis)
+        return axis is not None and n > 1 and dim % n == 0
+
+    def shard_dims(self, shape: Tuple[int, ...], prefs) -> P:
+        """prefs: ordered [(dim_index, axis_name)]; first fit per dim/axis wins."""
+        if self.mesh is None:
+            return P()
+        assign: Dict[int, str] = {}
+        used = set()
+        for dim, axis in prefs:
+            if dim < len(shape) and axis not in used and dim not in assign \
+                    and self._fits(shape[dim], axis):
+                assign[dim] = axis
+                used.add(axis)
+        return P(*[assign.get(i) for i in range(len(shape))])
+
+    def named(self, spec: P) -> Optional[NamedSharding]:
+        return None if self.mesh is None else NamedSharding(self.mesh, spec)
+
+
+def make_plan(mesh: Optional[Mesh], cfg: Optional[ModelConfig] = None, *,
+              fsdp: Optional[bool] = None, compress_grads: bool = False,
+              tp: Optional[int] = None) -> ParallelPlan:
+    """tp=1 folds the model axis into data parallelism (pure DP+FSDP) —
+    the right layout for ≤~30B dense models at large token batches, where
+    TP's per-layer activation collectives dominate (see EXPERIMENTS §Perf,
+    gemma3 hillclimb).  tp=None keeps the mesh's model axis for TP/EP/SP."""
+    if mesh is None:
+        return ParallelPlan()
+    axes = tuple(mesh.axis_names)
+    model_axis = "model" if "model" in axes else None
+    if tp == 1:
+        model_axis = None
+    data_axes = tuple(a for a in axes if a != model_axis)
+    if fsdp is None:
+        # heuristic: large models need param/optim sharding over data
+        fsdp = cfg is not None and cfg.param_count() > 3_000_000_000
+    return ParallelPlan(mesh=mesh, data_axes=data_axes, model_axis=model_axis,
+                        fsdp=bool(fsdp), compress_grads=compress_grads)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs by name pattern
+# ---------------------------------------------------------------------------
+
+# map leaf-name regex -> preference list builder(shape) -> [(dim, role)]
+# roles: "tp" = model axis, "fsdp" = fsdp data axis.  Dims are indices into
+# the *unstacked* shape; stacked (scan-group) leading dims are offset away.
+_RULES = [
+    # embeddings / output head: vocab over model, d_model over data
+    (r"(table|w_head)$", lambda s: [(0, "tp"), (1, "fsdp")]),
+    # attention projections
+    (r"wq$", lambda s: [(1, "tp"), (0, "fsdp")]),
+    (r"(wk|wv)$", lambda s: [(1, "tp"), (0, "fsdp")]),
+    (r"wo$", lambda s: [(0, "tp"), (2, "fsdp")]),
+    # MLA projections
+    (r"(wq_b|wk_b|wv_b)$", lambda s: [(1, "tp"), (0, "fsdp")]),
+    (r"(wq_a|wkv_a)$", lambda s: [(0, "fsdp")]),
+    # MLPs (swiglu + xlstm/ssm projections)
+    (r"(w_gate|w_up|ws_gate|ws_up|w_in|w_pf1|w_x)$", lambda s: [(len(s) - 1, "tp"), (0, "fsdp")]),
+    (r"(w_down|ws_down|w_out|w_pf2|w_dt)$", lambda s: [(0, "tp"), (len(s) - 1, "fsdp")]),
+    # MoE experts: E over model, D over data
+    (r"(we_gate|we_up|we_down)$", lambda s: [(0, "tp"), (1, "fsdp")]),
+    (r"router$", lambda s: []),
+    # mamba/xlstm channel-wise tensors: shard channel dim over model
+    (r"(conv_w|conv_b|a_log|d_skip|dt_bias)$", lambda s: [(len(s) - 1 if s[-1] > 64 else 0, "tp")]),
+    (r"w_if$", lambda s: [(0, "tp")]),
+]
+
+
+def _leaf_spec(plan: ParallelPlan, path: str, shape: Tuple[int, ...],
+               stacked: bool) -> P:
+    base = shape[1:] if stacked else shape
+    name = path.rsplit("/", 1)[-1]
+    for pat, prefs_fn in _RULES:
+        if re.search(pat, name):
+            prefs = []
+            for dim, role in prefs_fn(base):
+                axis = plan.model_axis if role == "tp" else plan.fsdp_axis
+                prefs.append((dim + (1 if stacked else 0), axis))
+            return plan.shard_dims(shape, prefs)
+    # default: replicate; fsdp models shard the largest divisible dim over data
+    if plan.fsdp_axis and len(shape) > int(stacked):
+        dims = sorted(range(int(stacked), len(shape)), key=lambda i: -shape[i])
+        return plan.shard_dims(shape, [(dims[0], plan.fsdp_axis)])
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_specs(plan: ParallelPlan, params_shape, stacked_prefix: str = "blocks") -> Any:
+    """PartitionSpec pytree matching a params pytree (of ShapeDtypeStructs)."""
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.startswith(stacked_prefix)
+        return _leaf_spec(plan, ps, leaf.shape, stacked)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(plan: ParallelPlan, global_batch: int) -> Tuple[Tuple[str, ...], P]:
+    """Choose data axes that divide the batch; returns (axes, P(axes,...))."""
+    if plan.mesh is None:
+        return (), P()
+    axes = []
+    rem = global_batch
+    for a in plan.data_axes:
+        sz = plan.axis_size(a)
+        if rem % sz == 0:
+            axes.append(a)
+            rem //= sz
+    axes = tuple(axes)
+    return axes, P(axes if axes else None)
+
+
+def seq_axes_for_cache(plan: ParallelPlan, batch_axes: Tuple[str, ...],
+                       seq_len: int) -> Tuple[str, ...]:
+    """Axes available to shard the KV sequence dim (ISP decode spans)."""
+    if plan.mesh is None:
+        return ()
+    axes = [a for a in (plan.data_axes + ((plan.model_axis,) if plan.model_axis else ()))
+            if a not in batch_axes and a is not None]
+    out = []
+    rem = seq_len
+    for a in axes:
+        sz = plan.axis_size(a)
+        if rem % sz == 0 and sz > 1:
+            out.append(a)
+            rem //= sz
+    return tuple(out)
+
+
+@dataclass(frozen=True)
+class ShardingRecipe:
+    """Everything the step builders need for one (arch, shape, mesh) cell."""
+    plan: ParallelPlan
+    batch_axes: Tuple[str, ...]
+    seq_axes: Tuple[str, ...]          # KV-span sharding at decode
+
+    # convenience passthroughs (models/core take a recipe as ``plan``)
+    @property
+    def mesh(self):
+        return self.plan.mesh
+
+    @property
+    def model_axis(self):
+        return self.plan.model_axis
+
+    @property
+    def data_axes(self):
+        return self.plan.data_axes
+
+    @property
+    def fsdp_axis(self):
+        return self.plan.fsdp_axis
+
+    @property
+    def ep(self):
+        return self.plan.ep
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(self.plan.mesh.axis_names) if self.plan.mesh else ()
+
+    @property
+    def x_spec(self) -> P:             # activations (B, S, D)
+        return P(self.batch_axes if self.batch_axes else None)
+
+    def tokens_spec(self) -> P:        # (B, S)
+        return P(self.batch_axes if self.batch_axes else None)
+
+    def kv_cache_spec(self, seq_shardable: bool = True) -> P:
+        # (B, S, Hkv, dh) — S over seq_axes (ISP decode)
+        b = self.batch_axes if self.batch_axes else None
+        s = self.seq_axes if (self.seq_axes and seq_shardable) else None
+        return P(b, s)
+
+    def kpos_spec(self, seq_shardable: bool = True) -> P:
+        s = self.seq_axes if (self.seq_axes and seq_shardable) else None
+        return P(s)
+
+    def state_spec(self) -> P:         # recurrent state (B, ...)
+        return P(self.batch_axes if self.batch_axes else None)
+
+
+def make_recipe(plan: ParallelPlan, cfg: ModelConfig, shape: ShapeConfig) -> ShardingRecipe:
+    b_axes, _ = batch_spec(plan, shape.global_batch)
+    # ring caches for local layers have length `window`; global caches `seq`.
+    # choose seq axes that divide the *smaller* of the two so one recipe fits
+    # both cache families.
+    seq_len = shape.seq_len
+    if any(k == "local" for k in cfg.layer_pattern):
+        seq_len = min(seq_len, cfg.attn.window)
+    s_axes = seq_axes_for_cache(plan, b_axes, seq_len)
+    return ShardingRecipe(plan=plan, batch_axes=b_axes, seq_axes=s_axes)

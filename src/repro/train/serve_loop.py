@@ -1,0 +1,101 @@
+"""Serving engine: batched prefill + greedy decode with resident KV caches.
+
+The engine holds a fixed pool of batch slots (continuous-batching lite):
+requests fill slots, prefill builds per-slot caches, decode steps run the
+whole pool; finished sequences free their slots.  The caches never leave
+their shards — decode attention runs the ISP path (core.decode_attention).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import model as M
+
+
+@dataclass
+class GenResult:
+    tokens: List[int]
+    prefill_s: float
+    decode_s: float
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, recipe=None,
+                 max_len: int = 256, eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.recipe = recipe if recipe is not None else M.LOCAL
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_fn(p, c, t, pos, cfg, self.recipe))
+
+    def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32) -> List[GenResult]:
+        """Greedy generation for a batch of equal-length prompts."""
+        b = len(prompts)
+        plen = len(prompts[0])
+        assert all(len(p) == plen for p in prompts), "engine pads per pool"
+        tokens = jnp.asarray(np.array(prompts, np.int32))
+
+        t0 = time.time()
+        caches = M.init_caches(self.cfg, b, self.max_len)
+        # teacher-forced prefill: feed the prompt through decode steps if the
+        # prompt is short, else full prefill
+        if plen > 8:
+            nxt, pre_caches = jax.jit(
+                lambda p, batch: M.prefill_fn(p, batch, self.cfg, self.recipe)
+            )(self.params, {"tokens": tokens})
+            # splice prefill caches into the (larger) decode cache layout
+            caches = _splice_caches(caches, pre_caches, plen)
+            pos = plen
+        else:
+            nxt = None
+            pos = 0
+            for i in range(plen):
+                nxt, caches = self._decode(self.params, caches,
+                                           tokens[:, i: i + 1], jnp.int32(i))
+                pos = i + 1
+        prefill_s = time.time() - t0
+
+        t0 = time.time()
+        out = [[] for _ in range(b)]
+        cur = nxt[:, None].astype(jnp.int32)
+        done = np.zeros(b, bool)
+        for j in range(max_new):
+            for i, t in enumerate(np.asarray(cur[:, 0])):
+                if not done[i]:
+                    out[i].append(int(t))
+                    if self.eos_id is not None and int(t) == self.eos_id:
+                        done[i] = True
+            if done.all() or pos + j >= self.max_len - 1:
+                break
+            nxt, caches = self._decode(self.params, caches, cur,
+                                       jnp.int32(pos + j))
+            cur = nxt[:, None].astype(jnp.int32)
+        decode_s = time.time() - t0
+        return [GenResult(tokens=o, prefill_s=prefill_s, decode_s=decode_s)
+                for o in out]
+
+
+def _splice_caches(decode_caches, prefill_caches, plen: int):
+    """Copy prefill cache contents into the decode-sized cache buffers."""
+
+    def splice(path, dst, src):
+        names = [str(p.key) for p in path if hasattr(p, "key")]
+        name = names[-1] if names else ""
+        if name in ("k", "v", "ckv", "krope"):
+            n = min(src.shape[2], dst.shape[2])
+            return dst.at[:, :, :n].set(src[:, :, :n].astype(dst.dtype))
+        if name == "kpos":
+            n = min(src.shape[1], dst.shape[1])
+            return dst.at[:, :n].set(src[:, :n])
+        return src.astype(dst.dtype) if src.shape == dst.shape else dst
+
+    return jax.tree_util.tree_map_with_path(splice, decode_caches, prefill_caches)

