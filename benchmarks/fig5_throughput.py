@@ -1,6 +1,11 @@
 """Fig. 5 reproduction: throughput vs #CSDs × batch size for the three NLP
 apps, via the pull-scheduler simulation calibrated to the paper's
-single-node rates.  Emits CSV rows and validates the paper's endpoints."""
+single-node rates.  Emits CSV rows and validates the paper's endpoints.
+
+``run_engine`` (also ``python -m benchmarks.fig5_throughput --engine``)
+drives the same accounting through the *real* continuous-batching serve
+engine on a reduced LM: per-tier token throughput plus the live ledger's
+link-byte reduction, next to the scheduler-sim numbers above."""
 from __future__ import annotations
 
 import numpy as np
@@ -39,8 +44,42 @@ def run(emit=print):
     return results
 
 
+def run_engine(emit=print, n_requests: int = 8, seed: int = 0):
+    """Serve mixed-length requests through the continuous-batching engine
+    and emit its ledger accounting as CSV (fig5_engine rows)."""
+    import dataclasses
+
+    import jax
+
+    from repro.config import reduced_config
+    from repro.models import model as M
+    from repro.train.serve_loop import AdmissionController, ServeEngine
+
+    cfg = dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    engine = ServeEngine(
+        cfg, params, max_len=64, num_slots=4,
+        admission=AdmissionController(4, host_rate=4.0, csd_rate=1.0))
+    prompts = [rng.integers(0, cfg.vocab_size, rng.integers(4, 17)).tolist()
+               for _ in range(n_requests)]
+    results = engine.generate(prompts, max_new=8)
+    st = engine.stats
+    emit("table,tier,requests,tokens,throughput,link_mb,host_link_mb,"
+         "link_reduction")
+    for tier in sorted(st.tier_tokens):
+        emit(f"fig5_engine,{tier},{st.tier_requests.get(tier, 0)},"
+             f"{st.tier_tokens[tier]},{st.tier_throughput(tier):.2f},"
+             f"{st.link_bytes / 1e6:.3f},{st.host_link_bytes / 1e6:.3f},"
+             f"{st.link_reduction:.3f}")
+    return results, st
+
+
 def main():
+    import sys
     run()
+    if "--engine" in sys.argv:
+        run_engine()
 
 
 if __name__ == "__main__":

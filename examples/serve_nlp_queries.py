@@ -23,6 +23,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--csds", type=int, default=36)
     ap.add_argument("--app", default="recommender", choices=sorted(APPS))
+    ap.add_argument("--no-engine", action="store_true",
+                    help="skip the LM continuous-batching engine demo")
     args = ap.parse_args()
     app = APPS[args.app]
 
@@ -65,6 +67,16 @@ def main():
           f"-> {app.paper_energy_csd_mj:.0f})")
     print(f"[transfer] link traffic cut {led.reduction_vs(ref):.0%} "
           f"({led.link_bytes / 1e9:.2f} GB vs {ref.link_bytes / 1e9:.2f} GB)")
+
+    # 4. the same pipeline with a real LM: mixed-length queries through the
+    #    continuous-batching engine — scheduler-driven admission, host/ISP
+    #    plan routing, live link-byte ledger (shared with the fig5 bench)
+    if not args.no_engine:
+        from benchmarks.fig5_throughput import run_engine
+
+        _, stats = run_engine(emit=lambda _: None)
+        for line in stats.summary().splitlines():
+            print(f"[engine] {line}")
 
 
 if __name__ == "__main__":

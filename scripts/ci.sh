@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# CI entry points.
+#
+#   scripts/ci.sh          tier-1: the full suite (ROADMAP "Tier-1 verify")
+#   scripts/ci.sh fast     smoke tier: sub-second unit tests only (-m fast)
+#   scripts/ci.sh nonslow  everything except the multi-minute slow tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+case "${1:-tier1}" in
+  fast)    exec python -m pytest -x -q -m fast ;;
+  nonslow) exec python -m pytest -x -q -m "not slow" ;;
+  tier1|*) exec python -m pytest -x -q ;;
+esac

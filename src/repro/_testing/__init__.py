@@ -1,0 +1,1 @@
+"""Test-support shims (kept inside the package so tests can gate on them)."""

@@ -1,0 +1,134 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` package.
+
+The container image does not ship hypothesis and the repo may not add
+dependencies, so ``tests/conftest.py`` installs this module under the
+``hypothesis`` name *only when the real package is missing*.  It covers the
+small API surface the test-suite uses:
+
+    from hypothesis import given, settings, strategies as st
+    st.floats / st.integers / st.sampled_from / st.dictionaries
+
+Semantics: ``@given`` reruns the test for ``max_examples`` deterministic
+examples (seeded per-test from the function name).  Boundary values are
+emitted first — min/max of every scalar strategy — then pseudo-random
+draws, which preserves most of the edge-case-hunting value of the real
+thing without the shrinking machinery.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    """A strategy = a draw function plus a list of boundary examples."""
+
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self.boundaries = list(boundaries)
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def floats(min_value: float, max_value: float) -> Strategy:
+    lo, hi = float(min_value), float(max_value)
+    return Strategy(lambda rng: rng.uniform(lo, hi), [lo, hi])
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    lo, hi = int(min_value), int(max_value)
+    return Strategy(lambda rng: rng.randint(lo, hi), [lo, hi])
+
+
+def sampled_from(elements) -> Strategy:
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return Strategy(lambda rng: pool[rng.randrange(len(pool))],
+                    [pool[0], pool[-1]])
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.getrandbits(1)), [False, True])
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return Strategy(draw)
+
+
+def dictionaries(keys: Strategy, values: Strategy, min_size: int = 0,
+                 max_size: int = 10) -> Strategy:
+    def draw(rng):
+        target = rng.randint(min_size, max_size)
+        out = {}
+        for _ in range(50 * max(target, 1)):       # finite key pools cap size
+            if len(out) >= target:
+                break
+            out[keys.draw(rng)] = values.draw(rng)
+        if len(out) < min_size:                    # key pool smaller than min
+            raise ValueError(
+                f"dictionaries(min_size={min_size}) unsatisfiable: key "
+                f"strategy yielded only {len(out)} distinct keys")
+        return out
+    return Strategy(draw)
+
+
+def _boundary_examples(named: dict):
+    """First examples: every strategy pinned to each of its boundaries (other
+    params drawn randomly), mirroring hypothesis's bias toward edges."""
+    for name, strat in named.items():
+        for b in strat.boundaries:
+            yield {name: b}
+
+
+def given(**named_strategies):
+    for name, s in named_strategies.items():
+        if not isinstance(s, Strategy):
+            raise TypeError(f"@given({name}=...) expects a strategy, got {s!r}")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(wrapper, "_stub_max_examples",
+                                   DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            pinned = itertools.chain(_boundary_examples(named_strategies),
+                                     itertools.repeat({}))
+            for _, pin in zip(range(max_examples), pinned):
+                drawn = {n: s.draw(rng) for n, s in named_strategies.items()}
+                drawn.update(pin)
+                fn(*args, **kwargs, **drawn)
+
+        # hide the strategy-supplied params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = [p for p in sig.parameters.values()
+                  if p.name not in named_strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    def decorate(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return decorate
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+for _name, _obj in list(globals().items()):
+    if _name in ("floats", "integers", "sampled_from", "booleans", "lists",
+                 "dictionaries"):
+        setattr(strategies, _name, _obj)

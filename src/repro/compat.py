@@ -1,0 +1,37 @@
+"""Version compatibility shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (jax <= 0.4.x) to
+``jax.shard_map`` (jax >= 0.6), and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma`` along the way; Pallas renamed
+``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams``.  All repro code
+imports the wrappers below, which accept either spelling and forward
+whatever the installed jax understands.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:                                    # jax >= 0.6
+    from jax import shard_map as _shard_map
+except ImportError:                     # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_CHECK_KW = "check_vma" if "check_vma" in _PARAMS else (
+    "check_rep" if "check_rep" in _PARAMS else None)
+
+
+@functools.wraps(_shard_map)
+def shard_map(f, *, check_vma=None, check_rep=None, **kwargs):
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None and _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check
+    return _shard_map(f, **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new name) / ``TPUCompilerParams`` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -18,10 +18,22 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.kernels import ops as kops
 from repro.kernels import ref
+
+
+def _per_slot_layout(kpos, cur_pos, b_axes, s_axes):
+    """Shard specs + normalized cur argument for the two kpos layouts:
+    shared (S,) track with scalar cur_pos, or per-slot (B,S) tracks with
+    (B,) cur_pos (continuous batching)."""
+    per_slot = kpos.ndim == 2
+    kpos_spec = P(b_axes, s_axes) if per_slot else P(s_axes)
+    cur_spec = P(b_axes) if per_slot else P()
+    cur = cur_pos.astype(jnp.int32) if per_slot \
+        else cur_pos[None].astype(jnp.int32)
+    return per_slot, kpos_spec, cur_spec, cur
 
 
 def _combine(acc, l, m, axes):
@@ -40,6 +52,9 @@ def decode_attention(q, k_cache, v_cache, kpos, cur_pos, *, window: Optional[int
                      plan, scale: Optional[float] = None):
     """q: (B, H, dh); k/v_cache: (B, S, Hkv, dh); kpos: (S,); cur_pos scalar.
 
+    Per-slot serving layout: kpos (B, S) with cur_pos (B,) — each batch slot
+    masks and advances on its own timeline (continuous batching).
+
     Returns (B, H, dhv).  ``plan`` is a ShardingRecipe; with a mesh and
     non-empty seq_axes the KV span stays sharded and only partials move.
     """
@@ -50,18 +65,22 @@ def decode_attention(q, k_cache, v_cache, kpos, cur_pos, *, window: Optional[int
 
     b_axes = plan.batch_axes or None
     s_axes = plan.seq_axes
+    per_slot, kpos_spec, cur_spec, cur = _per_slot_layout(
+        kpos, cur_pos, b_axes, s_axes)
 
     def local(q_l, k_l, v_l, kpos_l, cur):
-        acc, l, m = kops.decode_partial(q_l, k_l, v_l, kpos_l, cur[0],
+        acc, l, m = kops.decode_partial(q_l, k_l, v_l, kpos_l,
+                                        cur if per_slot else cur[0],
                                         window=window, scale=scale)
         return _combine(acc, l, m, s_axes).astype(q_l.dtype)
 
     fn = shard_map(
         local, mesh=plan.mesh,
-        in_specs=(P(b_axes), P(b_axes, s_axes), P(b_axes, s_axes), P(s_axes), P()),
+        in_specs=(P(b_axes), P(b_axes, s_axes), P(b_axes, s_axes), kpos_spec,
+                  cur_spec),
         out_specs=P(b_axes),
         check_vma=False)
-    return fn(q, k_cache, v_cache, kpos, cur_pos[None].astype(jnp.int32))
+    return fn(q, k_cache, v_cache, kpos, cur)
 
 
 def mla_decode_attention(q_nope, q_rope, ckv, krope, kpos, cur_pos, wk_b, *,
@@ -83,16 +102,19 @@ def mla_decode_attention(q_nope, q_rope, ckv, krope, kpos, cur_pos, wk_b, *,
 
     b_axes = plan.batch_axes or None
     s_axes = plan.seq_axes
+    per_slot, kpos_spec, cur_spec, cur = _per_slot_layout(
+        kpos, cur_pos, b_axes, s_axes)
 
     def local(q_eff_l, q_rope_l, ckv_l, krope_l, kpos_l, cur):
         acc, l, m = ref.mla_decode_scores_partial(
-            q_eff_l, q_rope_l, ckv_l, krope_l, kpos_l, cur[0], scale=scale)
+            q_eff_l, q_rope_l, ckv_l, krope_l, kpos_l,
+            cur if per_slot else cur[0], scale=scale)
         return _combine(acc, l, m, s_axes)
 
     fn = shard_map(
         local, mesh=plan.mesh,
         in_specs=(P(b_axes), P(b_axes), P(b_axes, s_axes), P(b_axes, s_axes),
-                  P(s_axes), P()),
+                  kpos_spec, cur_spec),
         out_specs=P(b_axes),
         check_vma=False)
-    return fn(q_eff, q_rope, ckv, krope, kpos, cur_pos[None].astype(jnp.int32))
+    return fn(q_eff, q_rope, ckv, krope, kpos, cur)

@@ -19,8 +19,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.config import ModelConfig
 from repro.kernels import ops as kops
 from repro.models.layers import KeyGen, dense_init

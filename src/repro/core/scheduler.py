@@ -63,6 +63,37 @@ class SimResult:
         return 1.0 - self.host_fraction
 
 
+@dataclass(frozen=True)
+class Assignment:
+    """One pull event: ``node`` acked and was handed ``n_items`` more."""
+    node: Node
+    n_items: int
+    start: float
+    finish: float
+
+
+@dataclass
+class SchedulerState:
+    """Mutable event-loop state so callers can drive the scheduler one pull
+    at a time (the serve engine's admission loop) instead of to completion."""
+    remaining: int
+    total_items: int
+    stats: Dict[str, NodeStats]
+    heap: List[Tuple[float, int, int]] = field(default_factory=list)
+    seq: int = 0
+    t_end: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.remaining <= 0
+
+    def result(self) -> SimResult:
+        assigned = self.total_items - max(self.remaining, 0)
+        return SimResult(makespan=self.t_end,
+                         throughput=assigned / max(self.t_end, 1e-9),
+                         per_node=self.stats, total_items=assigned)
+
+
 class PullScheduler:
     """Discrete-event simulation of the MPI pull scheduler."""
 
@@ -84,34 +115,45 @@ class PullScheduler:
             return t
         return math.ceil(t / self.poll - 1e-9) * self.poll
 
-    def run(self, total_items: int) -> SimResult:
-        remaining = total_items
-        stats = {n.name: NodeStats() for n in self.nodes}
-        # (ready_time, seq, node_index) — seq breaks ties deterministically
-        heap: List[Tuple[float, int, int]] = []
-        seq = 0
+    def start(self, total_items: int) -> SchedulerState:
+        """Begin an incremental run: every node's initial pull is queued."""
+        state = SchedulerState(remaining=total_items, total_items=total_items,
+                               stats={n.name: NodeStats() for n in self.nodes})
         for i, _ in enumerate(self.nodes):
-            heapq.heappush(heap, (0.0, seq, i))
-            seq += 1
-        t_end = 0.0
-        while remaining > 0 and heap:
-            ready, _, i = heapq.heappop(heap)
-            node = self.nodes[i]
-            n = min(self.node_batch(node), remaining)
-            remaining -= n
-            start = self._quantize(ready)
-            dur = node.batch_seconds(n)
-            finish = start + dur
-            st = stats[node.name]
-            st.items += n
-            st.batches += 1
-            st.busy_s += dur
-            t_end = max(t_end, finish)
-            if remaining > 0:
-                heapq.heappush(heap, (finish, seq, i))
-                seq += 1
-        return SimResult(makespan=t_end, throughput=total_items / max(t_end, 1e-9),
-                         per_node=stats, total_items=total_items)
+            heapq.heappush(state.heap, (0.0, state.seq, i))
+            state.seq += 1
+        return state
+
+    def tick(self, state: SchedulerState) -> Optional[Assignment]:
+        """Advance one pull/ack event; ``None`` once all items are assigned.
+
+        ``run()`` is exactly ``start()`` + ``tick()`` until exhaustion, so the
+        two APIs agree batch-for-batch (and therefore on makespan).
+        """
+        if state.remaining <= 0 or not state.heap:
+            return None
+        ready, _, i = heapq.heappop(state.heap)
+        node = self.nodes[i]
+        n = min(self.node_batch(node), state.remaining)
+        state.remaining -= n
+        start = self._quantize(ready)
+        dur = node.batch_seconds(n)
+        finish = start + dur
+        st = state.stats[node.name]
+        st.items += n
+        st.batches += 1
+        st.busy_s += dur
+        state.t_end = max(state.t_end, finish)
+        if state.remaining > 0:
+            heapq.heappush(state.heap, (finish, state.seq, i))
+            state.seq += 1
+        return Assignment(node=node, n_items=n, start=start, finish=finish)
+
+    def run(self, total_items: int) -> SimResult:
+        state = self.start(total_items)
+        while self.tick(state) is not None:
+            pass
+        return state.result()
 
 
 def optimal_batch_ratio(host_rate: float, csd_rate: float) -> float:
@@ -141,22 +183,28 @@ def rebalance_shares(step_times: Dict[str, float], current_shares: Dict[str, int
     batch-ratio rule).  ``smoothing`` blends old and new shares to avoid
     oscillation.  Shares sum exactly to ``total``.
     """
+    if total < min_share * len(step_times):
+        raise ValueError(
+            f"cannot split {total} items across {len(step_times)} workers "
+            f"with min_share={min_share}")
     tput = {w: current_shares[w] / max(t, 1e-9) for w, t in step_times.items()}
     z = sum(tput.values())
     raw = {w: total * tput[w] / z for w in tput}
     blended = {w: smoothing * raw[w] + (1 - smoothing) * current_shares[w] for w in raw}
-    # round, preserving the total
+    # round, then resolve the drift exactly: increments go to the workers the
+    # rounding short-changed most; decrements come from the workers rounding
+    # (or the min_share floor) over-paid most, never dipping below min_share.
     shares = {w: max(min_share, int(v)) for w, v in blended.items()}
     drift = total - sum(shares.values())
-    order = sorted(blended, key=lambda w: blended[w] - int(blended[w]), reverse=True)
-    i = 0
-    while drift != 0 and order:
-        w = order[i % len(order)]
-        step = 1 if drift > 0 else -1
-        if shares[w] + step >= min_share:
-            shares[w] += step
-            drift -= step
-        i += 1
-        if i > 10 * len(order):
-            break
+    while drift > 0:
+        w = max(shares, key=lambda w: (blended[w] - shares[w], w))
+        shares[w] += 1
+        drift -= 1
+    while drift < 0:
+        eligible = [w for w in shares if shares[w] > min_share]
+        # guaranteed non-empty: sum > total >= n * min_share
+        w = max(eligible, key=lambda w: (shares[w] - blended[w], w))
+        shares[w] -= 1
+        drift += 1
+    assert sum(shares.values()) == total
     return shares

@@ -17,6 +17,7 @@ import functools
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref
 
@@ -58,9 +59,14 @@ def decode_partial(q, k, v, kpos, cur_pos, *, window: Optional[int] = None,
     """Per-shard flash-decoding partial.  q: (B,H,dh); k/v: (B,S,Hkv,dh).
 
     kpos: (S,) global positions of cache slots (-1 = empty); cur_pos: scalar.
+    Per-slot layouts — kpos (B,S) with cur_pos (B,) from the continuous-
+    batching engine — run the jnp path (the Pallas kernel keeps the uniform
+    single-position layout).
     Returns (acc fp32 (B,H,dhv), l (B,H), m (B,H)).
     """
     which = _resolve(impl)
+    if kpos.ndim == 2 or jnp.ndim(cur_pos) == 1:
+        which = "jnp"
     if which == "pallas":
         from repro.kernels import isp_decode
         return isp_decode.decode_partial(q, k, v, kpos, cur_pos, window=window,

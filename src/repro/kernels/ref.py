@@ -294,11 +294,28 @@ def decode_partial(q, k, v, kv_valid, *, kv_offset=0, scale: Optional[float] = N
     return (acc.reshape(B, H, dh), l.reshape(B, H), m.reshape(B, H))
 
 
+def _decode_valid_mask(kpos, cur_pos, window=None):
+    """Validity mask for decode attention, broadcast to (B*, S).
+
+    kpos: (S,) shared cache positions or (B, S) per-slot positions (the
+    continuous-batching engine tracks a position per batch slot); cur_pos:
+    scalar shared decode position or (B,) per-slot positions.
+    """
+    kposb = kpos if kpos.ndim == 2 else kpos[None, :]            # (B*, S)
+    cur = jnp.asarray(cur_pos)
+    curb = cur[:, None] if cur.ndim == 1 else cur                # (B,1) | ()
+    valid = (kposb >= 0) & (kposb <= curb)
+    if window is not None:
+        valid &= kposb > curb - window
+    return valid
+
+
 def decode_partial_masked(q, k, v, kpos, cur_pos, *, window=None, scale=None):
     """Decode partial with explicit per-slot global positions.
 
-    kpos: (S,) int32 global position of each cache slot (-1 = empty);
-    cur_pos: scalar current decode position.  Supports ring buffers.
+    kpos: (S,) int32 global position of each cache slot (-1 = empty), or
+    (B, S) when each batch slot tracks its own timeline; cur_pos: scalar
+    current decode position, or (B,) per-slot.  Supports ring buffers.
     Returns (acc (B,H,dhv) fp32, l (B,H), m (B,H)).
     """
     B, H, dh = q.shape
@@ -307,13 +324,11 @@ def decode_partial_masked(q, k, v, kpos, cur_pos, *, window=None, scale=None):
     scale = dh ** -0.5 if scale is None else scale
     qg = q.reshape(B, Hkv, g, dh).astype(jnp.float32)
     s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32)) * scale
-    valid = (kpos >= 0) & (kpos <= cur_pos)
-    if window is not None:
-        valid &= kpos > cur_pos - window
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    valid = _decode_valid_mask(kpos, cur_pos, window)[:, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])
-    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    p = jnp.where(valid, p, 0.0)
     l = p.sum(axis=-1)
     acc = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
     return (acc.reshape(B, H, dhv), l.reshape(B, H), m.reshape(B, H))
@@ -331,11 +346,11 @@ def mla_decode_scores_partial(q_eff, q_rope, ckv, krope, kpos, cur_pos, *, scale
     s = s + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
                        krope.astype(jnp.float32))
     s = s * scale
-    valid = (kpos >= 0) & (kpos <= cur_pos)
-    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    valid = _decode_valid_mask(kpos, cur_pos)[:, None, :]
+    s = jnp.where(valid, s, NEG_INF)
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])
-    p = jnp.where(valid[None, None, :], p, 0.0)
+    p = jnp.where(valid, p, 0.0)
     l = p.sum(axis=-1)
     acc = jnp.einsum("bhs,bsr->bhr", p, ckv.astype(jnp.float32))
     return acc, l, m

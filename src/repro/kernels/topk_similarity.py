@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -111,7 +113,7 @@ def topk_similarity(queries, corpus, k: int, *, q_block: int = 128,
             pltpu.VMEM((qb, k), jnp.float32),
             pltpu.VMEM((qb, k), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(qn, cn)

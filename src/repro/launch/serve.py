@@ -1,4 +1,16 @@
-"""Serving driver: load (or init) a model and serve batched requests."""
+"""Serving driver: load (or init) a model and serve requests through the
+continuous-batching engine.
+
+Request sources (first match wins):
+  --trace FILE   one request per line: whitespace-separated token ids,
+                 optionally ``ids... | max_new`` to override --max-new;
+  --requests N   N random prompts with lengths uniform in
+                 [--min-prompt, --prompt-len];
+  (neither)      the legacy fixed batch: --batch equal-length prompts.
+
+Always prints the engine's per-tier throughput and the ledger's link-byte
+reduction (the paper's "data that never left the drive" counter).
+"""
 from __future__ import annotations
 
 import argparse
@@ -9,7 +21,21 @@ import numpy as np
 
 from repro.config import get_config, reduced_config
 from repro.models import model as M
-from repro.train.serve_loop import ServeEngine
+from repro.train.serve_loop import AdmissionController, ServeEngine
+
+
+def _load_trace(path: str, default_max_new: int):
+    reqs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            ids, _, tail = line.partition("|")
+            prompt = [int(t) for t in ids.split()]
+            max_new = int(tail) if tail.strip() else default_max_new
+            reqs.append((prompt, max_new))
+    return reqs
 
 
 def main() -> int:
@@ -18,24 +44,58 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--min-prompt", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="serve N random variable-length requests")
+    ap.add_argument("--trace", type=str, default=None,
+                    help="file of token-id prompts, one request per line")
+    ap.add_argument("--host-rate", type=float, default=20.0)
+    ap.add_argument("--csd-rate", type=float, default=1.0)
+    ap.add_argument("--csds", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(cfg, params, max_len=args.max_len)
+    admission = AdmissionController(args.num_slots, host_rate=args.host_rate,
+                                   csd_rate=args.csd_rate, n_csds=args.csds)
+    engine = ServeEngine(cfg, params, max_len=args.max_len,
+                         num_slots=args.num_slots, admission=admission)
 
     rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (args.batch, args.prompt_len)).tolist()
+    if args.trace:
+        requests = _load_trace(args.trace, args.max_new)
+    elif args.requests:
+        requests = [
+            (rng.integers(0, cfg.vocab_size,
+                          rng.integers(args.min_prompt,
+                                       args.prompt_len + 1)).tolist(),
+             args.max_new)
+            for _ in range(args.requests)]
+    else:
+        requests = [(rng.integers(0, cfg.vocab_size,
+                                  args.prompt_len).tolist(), args.max_new)
+                    for _ in range(args.batch)]
+
+    if not requests:
+        print("[serve] no requests (empty --trace file?)")
+        return 1
+
     t0 = time.time()
-    results = engine.generate(prompts, max_new=args.max_new)
+    for prompt, max_new in requests:
+        engine.submit(prompt, max_new=max_new)
+    results = engine.run_until_complete()
     dt = time.time() - t0
+
     n_tok = sum(len(r.tokens) for r in results)
-    print(f"[serve] {args.arch}: {n_tok} tokens in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s); first: {results[0].tokens[:8]}")
+    print(f"[serve] {args.arch}: {len(results)} requests, {n_tok} tokens in "
+          f"{dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s); "
+          f"first: {results[0].tokens[:8]}")
+    for line in engine.stats.summary().splitlines():
+        print(f"[serve] {line}")
     return 0
 
 

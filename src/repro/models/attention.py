@@ -90,6 +90,39 @@ def _ring_update(buf, new, pos, ring: bool):
     return jax.lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype), slot, axis=1)
 
 
+def _per_slot_cache(cache) -> bool:
+    """Whether this decode cache keeps one position track per batch slot
+    (kpos (B, S)) — the continuous-batching serve layout — vs one shared
+    track (kpos (S,)) for uniform-position decode."""
+    return cache["kpos"].ndim == 2
+
+
+def _decode_positions(positions, batch: int, cache, mode: str):
+    """(per_slot, posb, rope_pos) for the two decode position layouts:
+    per-slot (B,) positions against a per-slot cache, or the shared (1,S)
+    rope layout used by train/prefill/uniform decode."""
+    if mode == "decode" and cache is not None and _per_slot_cache(cache):
+        posb = jnp.broadcast_to(positions, (batch,)).astype(jnp.int32)
+        return True, posb, posb[:, None]
+    return False, None, positions[None, :]
+
+
+def _slot_scatter(buf, new, slot):
+    """Insert ``new`` (B, 1, ...) at per-batch slots ``slot`` (B,)."""
+    bidx = jnp.arange(buf.shape[0])
+    return buf.at[bidx, slot].set(new[:, 0].astype(buf.dtype))
+
+
+def _slot_update(cache, new_vals, posb, ring: bool):
+    """Per-slot decode-step cache update: write each (B,1,...) value at its
+    slot's position and stamp that slot's kpos track."""
+    s = cache["kpos"].shape[1]
+    slot = posb % s if ring else jnp.minimum(posb, s - 1)
+    out = {k: _slot_scatter(cache[k], v, slot) for k, v in new_vals.items()}
+    out["kpos"] = cache["kpos"].at[jnp.arange(len(posb)), slot].set(posb)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # GQA apply
 # ---------------------------------------------------------------------------
@@ -97,7 +130,8 @@ def _ring_update(buf, new, pos, ring: bool):
 
 def gqa_apply(params, x, positions, cfg: ModelConfig, kind: str, plan,
               cache: Optional[Dict] = None, mode: str = "train"):
-    """x: (B, S, D); positions: (S,) int32 (decode: (1,) current position).
+    """x: (B, S, D); positions: (S,) int32 (decode: (1,) current position, or
+    (B,) per-slot positions against a per-slot kpos (B,S) cache).
 
     Returns (out (B,S,D), new_cache | None).
     """
@@ -106,24 +140,32 @@ def gqa_apply(params, x, positions, cfg: ModelConfig, kind: str, plan,
     rope_base = a.rope_base_local if kind == "local" else a.rope_base
     dh = cfg.resolved_head_dim
 
+    per_slot, posb, rope_pos = _decode_positions(positions, x.shape[0],
+                                                 cache, mode)
+
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
-    q = apply_rope(q, positions[None, :], rope_base)
-    k = apply_rope(k, positions[None, :], rope_base)
+    q = apply_rope(q, rope_pos, rope_base)
+    k = apply_rope(k, rope_pos, rope_base)
 
     new_cache = None
     if mode == "decode":
         assert cache is not None
-        pos = positions[0]
         ring = window is not None
-        ck = _ring_update(cache["k"], k, pos, ring)
-        cv = _ring_update(cache["v"], v, pos, ring)
-        s = ck.shape[1]
-        slot = pos % s if ring else jnp.minimum(pos, s - 1)
-        kpos = jax.lax.dynamic_update_slice_in_dim(
-            cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
-        new_cache = {"k": ck, "v": cv, "kpos": kpos}
+        if per_slot:
+            new_cache = _slot_update(cache, {"k": k, "v": v}, posb, ring)
+            pos = posb
+        else:
+            pos = positions[0]
+            s = cache["k"].shape[1]
+            ck = _ring_update(cache["k"], k, pos, ring)
+            cv = _ring_update(cache["v"], v, pos, ring)
+            slot = pos % s if ring else jnp.minimum(pos, s - 1)
+            kpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
+            new_cache = {"k": ck, "v": cv, "kpos": kpos}
+        ck, cv, kpos = new_cache["k"], new_cache["v"], new_cache["kpos"]
         from repro.core.decode_attention import decode_attention  # avoid cycle
         out_h = decode_attention(q[:, 0], ck, cv, kpos, pos, window=window, plan=plan)
         out_h = out_h[:, None]                                    # (B,1,H,dh)
@@ -191,27 +233,35 @@ def mla_apply(params, x, positions, cfg: ModelConfig, plan,
               cache: Optional[Dict] = None, mode: str = "train"):
     a = cfg.attn
     B, S, _ = x.shape
+    per_slot, posb, rope_pos = _decode_positions(positions, B, cache, mode)
     q_nope, q_rope = _mla_q(params, x, cfg)                      # (B,S,H,·)
-    q_rope = apply_rope(q_rope, positions[None, :], a.rope_base)
+    q_rope = apply_rope(q_rope, rope_pos, a.rope_base)
 
     kv_a = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
     ckv, k_rope = kv_a[..., : a.kv_lora_rank], kv_a[..., a.kv_lora_rank:]
     ckv = rms_norm(ckv, params["kv_norm"], cfg.norm_eps)
-    k_rope = apply_rope(k_rope[:, :, None, :], positions[None, :], a.rope_base)[:, :, 0]
+    k_rope = apply_rope(k_rope[:, :, None, :], rope_pos, a.rope_base)[:, :, 0]
 
     scale = (a.qk_nope_dim + a.qk_rope_dim) ** -0.5
 
     new_cache = None
     if mode == "decode":
         assert cache is not None
-        pos = positions[0]
-        cckv = _ring_update(cache["ckv"], ckv, pos, ring=False)
-        ckr = _ring_update(cache["krope"], k_rope, pos, ring=False)
-        s = cckv.shape[1]
-        slot = jnp.minimum(pos, s - 1)
-        kpos = jax.lax.dynamic_update_slice_in_dim(
-            cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
-        new_cache = {"ckv": cckv, "krope": ckr, "kpos": kpos}
+        if per_slot:
+            new_cache = _slot_update(cache, {"ckv": ckv, "krope": k_rope},
+                                     posb, ring=False)
+            pos = posb
+        else:
+            pos = positions[0]
+            s = cache["ckv"].shape[1]
+            cckv = _ring_update(cache["ckv"], ckv, pos, ring=False)
+            ckr = _ring_update(cache["krope"], k_rope, pos, ring=False)
+            slot = jnp.minimum(pos, s - 1)
+            kpos = jax.lax.dynamic_update_slice_in_dim(
+                cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
+            new_cache = {"ckv": cckv, "krope": ckr, "kpos": kpos}
+        cckv, ckr, kpos = (new_cache["ckv"], new_cache["krope"],
+                           new_cache["kpos"])
         from repro.core.decode_attention import mla_decode_attention
         ctx = mla_decode_attention(
             q_nope[:, 0], q_rope[:, 0], cckv, ckr, kpos, pos,

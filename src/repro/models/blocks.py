@@ -16,8 +16,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.config import ModelConfig
 from repro.models import attention as attn_mod
 from repro.models import moe as moe_mod

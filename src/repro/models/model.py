@@ -194,14 +194,25 @@ def loss_fn(params, batch, cfg: ModelConfig, plan=LOCAL):
 
 
 def prefill_fn(params, batch, cfg: ModelConfig, plan=LOCAL):
-    """Full-sequence prefill.  Returns (next_token (B,), caches)."""
+    """Full-sequence prefill.  Returns (next_token (B,), caches).
+
+    With ``batch["lengths"]`` (B,) the prompts are right-padded to a common
+    S and each row samples its next token at position ``lengths[i] - 1``
+    (pad tokens only ever attend causally *forward*, so the first
+    ``lengths[i]`` cache entries are exact — the serve engine masks the
+    rest via kpos).
+    """
     x = _embed_input(params, batch, cfg, plan, "prefill")
     B, S, _ = x.shape
     positions = jnp.arange(S, dtype=jnp.int32)
     x, caches, _ = run_blocks(params, x, positions, cfg, plan, _abstract_none(cfg),
                               "prefill")
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-    nxt = emb.greedy_sample(x[:, -1], _head_table(params, cfg), plan, cfg)
+    if "lengths" in batch:
+        last = x[jnp.arange(B), batch["lengths"].astype(jnp.int32) - 1]
+    else:
+        last = x[:, -1]
+    nxt = emb.greedy_sample(last, _head_table(params, cfg), plan, cfg)
     return nxt, caches
 
 
@@ -211,7 +222,9 @@ def _abstract_none(cfg: ModelConfig):
 
 
 def decode_fn(params, caches, token, pos, cfg: ModelConfig, plan=LOCAL):
-    """One decode step.  token: (B,1) int32; pos: () int32 (uniform batch pos).
+    """One decode step.  token: (B,1) int32; pos: () int32 (uniform batch
+    pos) or (B,) int32 per-slot positions against ``per_slot`` caches (the
+    continuous-batching serve layout).
 
     Returns (next_token (B,), new_caches).
     """
@@ -223,8 +236,14 @@ def decode_fn(params, caches, token, pos, cfg: ModelConfig, plan=LOCAL):
     return nxt, new_caches
 
 
-def init_caches(cfg: ModelConfig, batch: int, max_len: int):
-    """Stacked decode caches: leaves (num_groups, ...)."""
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                per_slot: bool = False):
+    """Stacked decode caches: leaves (num_groups, ...).
+
+    ``per_slot=True`` gives every batch slot its own kpos track
+    ((num_groups, batch, S) instead of (num_groups, S)) so slots can sit at
+    different positions — required by the continuous-batching serve engine.
+    """
     dtype = _dtype(cfg)
     gpat = group_pattern(cfg)
     ng = num_groups(cfg)
@@ -238,13 +257,16 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
     def fix_kpos(path, leaf):
         names = [str(p.key) for p in path if hasattr(p, "key")]
         if names and names[-1] == "kpos":
-            return jnp.full(leaf.shape, -1, jnp.int32)
+            shape = (leaf.shape[0], batch) + leaf.shape[1:] if per_slot \
+                else leaf.shape
+            return jnp.full(shape, -1, jnp.int32)
         return leaf
     return jax.tree_util.tree_map_with_path(fix_kpos, out)
 
 
-def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
-    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int,
+                    per_slot: bool = False):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len, per_slot))
 
 
 # ---------------------------------------------------------------------------

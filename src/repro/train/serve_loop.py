@@ -1,21 +1,46 @@
-"""Serving engine: batched prefill + greedy decode with resident KV caches.
+"""Continuous-batching serve engine with scheduler-driven admission.
 
-The engine holds a fixed pool of batch slots (continuous-batching lite):
-requests fill slots, prefill builds per-slot caches, decode steps run the
-whole pool; finished sequences free their slots.  The caches never leave
-their shards — decode attention runs the ISP path (core.decode_attention).
+The paper's serving story (§IV-A) is a *pull* pipeline: resident state stays
+on the storage side, the scheduler decides who pulls the next batch, and
+only queries/results cross the link.  This engine is that story applied to
+LM serving:
+
+  request queue ──▶ admission (PullScheduler.tick + rebalance_shares)
+               ──▶ slot pool (per-slot position/length tracks)
+               ──▶ plan chooser (choose_embedding_plan / choose_decode_plan)
+               ──▶ TransferLedger ("bytes that never crossed the link")
+
+Mechanics:
+  * variable-length prompts are admitted into a fixed pool of batch slots;
+  * prefill is length-bucketed — prompts padded to a common bucket length
+    batch together; pad positions are masked out of the per-slot kpos track
+    afterwards, so the padded prefill is numerically exact (padding is only
+    used for architectures where that holds: pure-attention stacks, window
+    not exceeded — recurrent stacks fall back to exact-length buckets);
+  * decode steps run the whole pool with per-slot positions (kpos (B,S)
+    caches — see ``models.attention``); EOS / max-len finishes free the
+    slot, which is refilled from the queue on the next step, mid-decode;
+  * every prefill/decode step consults the host-vs-ISP plan chooser and
+    records both the chosen and the host-baseline link bytes, so
+    ``stats().link_reduction`` reproduces the paper's Fig. 5 accounting
+    live.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.core.isp import choose_decode_plan, choose_embedding_plan
+from repro.core.scheduler import (PullScheduler, SchedulerState, make_cluster,
+                                  optimal_batch_ratio, rebalance_shares)
+from repro.core.transfer import TransferLedger
 from repro.models import model as M
 
 
@@ -24,78 +49,424 @@ class GenResult:
     tokens: List[int]
     prefill_s: float
     decode_s: float
+    rid: int = 0
+    tier: str = "host"
+
+
+@dataclass
+class ServeStats:
+    requests: int = 0
+    tokens: int = 0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tier_tokens: Dict[str, int] = field(default_factory=dict)
+    tier_requests: Dict[str, int] = field(default_factory=dict)
+    ledger: TransferLedger = field(default_factory=TransferLedger)     # chosen
+    baseline: TransferLedger = field(default_factory=TransferLedger)  # host-only
+
+    @property
+    def link_bytes(self) -> float:
+        return self.ledger.link_bytes
+
+    @property
+    def host_link_bytes(self) -> float:
+        return self.baseline.link_bytes
+
+    @property
+    def bytes_never_crossed(self) -> float:
+        """Link bytes the ISP plans kept resident vs the host baseline."""
+        return max(self.host_link_bytes - self.link_bytes, 0.0)
+
+    @property
+    def link_reduction(self) -> float:
+        if self.host_link_bytes <= 0:
+            return 0.0
+        return self.bytes_never_crossed / self.host_link_bytes
+
+    def tier_throughput(self, tier: str) -> float:
+        dt = max(self.decode_s + self.prefill_s, 1e-9)
+        return self.tier_tokens.get(tier, 0) / dt
+
+    def summary(self) -> str:
+        lines = [f"requests={self.requests} tokens={self.tokens} "
+                 f"prefill={self.prefill_s:.2f}s decode={self.decode_s:.2f}s"]
+        for tier in sorted(self.tier_tokens):
+            lines.append(
+                f"tier[{tier}]: {self.tier_requests.get(tier, 0)} reqs, "
+                f"{self.tier_tokens[tier]} tok, "
+                f"{self.tier_throughput(tier):.1f} tok/s")
+        lines.append(
+            f"link bytes: {self.link_bytes / 1e6:.2f} MB vs host-only "
+            f"{self.host_link_bytes / 1e6:.2f} MB "
+            f"({self.link_reduction:.0%} never crossed the link)")
+        return "\n".join(lines)
+
+
+@dataclass
+class _Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+
+
+@dataclass
+class _Slot:
+    index: int
+    active: bool = False
+    rid: int = -1
+    tier: str = "host"
+    pos: int = 0                 # next cache position to write
+    cur_token: int = 0           # input token of the next decode step
+    max_new: int = 0
+    out: List[int] = field(default_factory=list)
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+
+
+class AdmissionController:
+    """Scheduler-driven admission: which tier pulls the next requests.
+
+    The paper's pull protocol decides, per ack, whether the host or a CSD
+    gets the next batch; here each admitted request is tagged with the tier
+    whose pull it rode in on (the tag drives the ledger/throughput split).
+    ``rebalance_shares`` periodically refits the host:CSD batch ratio from
+    observed per-tier service times — the batch-ratio rule applied online.
+    In-process serving runs both tiers in one jitted batch, so observed
+    per-token times are equal and the configured ratio is kept; the refit
+    engages when genuinely different per-tier timings are fed to
+    ``observe`` (separate devices / real CSD workers).
+    """
+
+    def __init__(self, num_slots: int, host_rate: float = 20.0,
+                 csd_rate: float = 1.0, n_csds: int = 1, batch_size: int = 1,
+                 poll_interval: float = 0.0, rebalance_every: int = 16):
+        self.num_slots = max(num_slots, 2)
+        nodes = make_cluster(host_rate, csd_rate, max(n_csds, 1),
+                             host_overhead=0.0, csd_overhead=0.0)
+        ratio = optimal_batch_ratio(host_rate, csd_rate)
+        self.sched = PullScheduler(nodes, batch_size, ratio,
+                                   poll_interval=poll_interval)
+        self.state: Optional[SchedulerState] = None
+        self._pending: Deque[str] = deque()
+        self.shares = {"host": max(self.num_slots - 1, 1), "csd": 1}
+        self._busy = {"host": 0.0, "csd": 0.0}
+        self._tok = {"host": 0, "csd": 0}
+        self._since_rebalance = 0
+        self.rebalance_every = rebalance_every
+
+    def tiers_for(self, n: int, queued: int) -> List[str]:
+        """Tier tags for the next ``n`` admissions, in scheduler pull order."""
+        out: List[str] = []
+        while len(out) < n:
+            if self._pending:
+                out.append(self._pending.popleft())
+                continue
+            if self.state is None or self.state.done:
+                self.state = self.sched.start(max(queued, n, 1))
+            a = self.sched.tick(self.state)
+            if a is None:                      # stream outlived this window
+                self.state = None
+                continue
+            tier = "host" if a.node.is_host else "csd"
+            self._pending.extend([tier] * a.n_items)
+        return out
+
+    def observe(self, tier: str, busy_s: float, tokens: int) -> None:
+        """Feed measured service back; refit the batch ratio periodically."""
+        self._busy[tier] += busy_s
+        self._tok[tier] += tokens
+        self._since_rebalance += 1
+        if self._since_rebalance < self.rebalance_every:
+            return
+        if min(self._tok.values()) == 0:
+            return
+        self._since_rebalance = 0
+        step_times = {t: self._busy[t] / self._tok[t] for t in self._tok}
+        tput = {t: self._tok[t] / max(self._busy[t], 1e-9) for t in self._tok}
+        # fresh window per rebalance so the refit tracks *recent* service
+        # times instead of a lifetime average
+        self._busy = {t: 0.0 for t in self._busy}
+        self._tok = {t: 0 for t in self._tok}
+        if max(step_times.values()) <= 1.10 * min(step_times.values()):
+            return       # no observable tier difference: keep configured ratio
+        self.shares = rebalance_shares(step_times, self.shares,
+                                       self.num_slots)
+        # the paper's rule, online: ratio = measured host/CSD throughput
+        self.sched.batch_ratio = max(tput["host"] / max(tput["csd"], 1e-9),
+                                     1e-3)
 
 
 class ServeEngine:
+    """Continuous-batching greedy-decode engine over a fixed slot pool."""
+
     def __init__(self, cfg: ModelConfig, params, recipe=None,
-                 max_len: int = 256, eos_id: Optional[int] = None):
+                 max_len: int = 256, eos_id: Optional[int] = None,
+                 num_slots: int = 8, bucket_quantum: int = 8,
+                 shards: int = 16,
+                 admission: Optional[AdmissionController] = None):
         self.cfg = cfg
         self.params = params
         self.recipe = recipe if recipe is not None else M.LOCAL
         self.max_len = max_len
         self.eos_id = eos_id
+        self.num_slots = num_slots
+        self.bucket_quantum = max(bucket_quantum, 1)
+        self.shards = shards
+        self.admission = admission if admission is not None else \
+            AdmissionController(num_slots)
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_fn(p, c, t, pos, cfg, self.recipe))
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill_fn(p, b, cfg, self.recipe))
+        self.caches = M.init_caches(cfg, num_slots, max_len, per_slot=True)
+        self.slots = [_Slot(index=i) for i in range(num_slots)]
+        self.queue: Deque[_Request] = deque()
+        self.stats = ServeStats()
+        self.ledger = self.stats.ledger          # chosen-plan link bytes
+        self.baseline = self.stats.baseline      # everything-to-host baseline
+        self._next_rid = 0
+        self._finished: List[GenResult] = []
 
-    def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32) -> List[GenResult]:
-        """Greedy generation for a batch of equal-length prompts."""
-        b = len(prompts)
-        plen = len(prompts[0])
-        assert all(len(p) == plen for p in prompts), "engine pads per pool"
-        tokens = jnp.asarray(np.array(prompts, np.int32))
+    # -- request intake ------------------------------------------------------
 
+    def submit(self, prompt: Sequence[int], max_new: int = 32) -> int:
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) >= self.max_len:
+            raise ValueError(f"prompt ({len(prompt)}) must fit below "
+                             f"max_len ({self.max_len})")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(_Request(rid, prompt, max_new))
+        return rid
+
+    # -- bucketing -----------------------------------------------------------
+
+    def _padding_safe(self, padded_len: int) -> bool:
+        """Padded prefill is exact iff no recurrent state integrates pad
+        tokens and no sliding-window ring evicts real prompt positions."""
+        kinds = set(self.cfg.layer_pattern)
+        if kinds & {"hybrid", "mlstm", "slstm"}:
+            return False
+        if "local" in kinds and self.cfg.attn.window is not None \
+                and padded_len > self.cfg.attn.window:
+            return False
+        return True
+
+    def _bucket_len(self, n: int) -> int:
+        q = self.bucket_quantum
+        padded = min(-(-n // q) * q, self.max_len - 1)
+        return padded if padded > n and self._padding_safe(padded) else n
+
+    # -- engine steps --------------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return sum(s.active for s in self.slots)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    @property
+    def bytes_never_crossed(self) -> float:
+        """Live counter: link bytes kept resident so far (paper Fig. 5)."""
+        return self.stats.bytes_never_crossed
+
+    def step(self) -> List[GenResult]:
+        """One engine tick: admit into free slots, then one decode step.
+        Returns the requests that finished during this tick."""
+        n_before = len(self._finished)
+        self._admit()
+        if self.num_active:
+            self._decode_step()
+        return self._finished[n_before:]
+
+    def run_until_complete(self) -> List[GenResult]:
+        while self.queue or self.num_active:
+            self.step()
+        out, self._finished = self._finished, []
+        return sorted(out, key=lambda r: r.rid)
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 max_new: int = 32) -> List[GenResult]:
+        """Greedy generation for a batch of (possibly mixed-length) prompts.
+
+        Drains the whole queue; results of requests queued earlier via
+        ``submit()`` are kept for their caller, not discarded.
+        """
+        rids = [self.submit(p, max_new) for p in prompts]
+        mine = set(rids)
+        by_rid = {}
+        for r in self.run_until_complete():
+            if r.rid in mine:
+                by_rid[r.rid] = r
+            else:                         # someone else's submit(): keep it
+                self._finished.append(r)
+        return [by_rid[r] for r in rids]
+
+    # -- admission + prefill -------------------------------------------------
+
+    def _admit(self) -> None:
+        free = [s for s in self.slots if not s.active]
+        n = min(len(free), len(self.queue))
+        if n == 0:
+            return
+        tiers = self.admission.tiers_for(n, queued=len(self.queue))
+        admitted: List[_Slot] = []
+        for slot, tier in zip(free, tiers):
+            req = self.queue.popleft()
+            slot.active = True
+            slot.rid = req.rid
+            slot.tier = tier
+            slot.pos = len(req.prompt)
+            slot.max_new = req.max_new
+            slot.out = []
+            slot.prefill_s = 0.0
+            slot.decode_s = 0.0
+            slot._prompt = req.prompt          # consumed by the bucket pass
+            admitted.append(slot)
+            self.stats.requests += 1
+            self.stats.tier_requests[tier] = \
+                self.stats.tier_requests.get(tier, 0) + 1
+
+        buckets: Dict[int, List[_Slot]] = {}
+        for slot in admitted:
+            buckets.setdefault(self._bucket_len(len(slot._prompt)),
+                               []).append(slot)
+        for padded, group in sorted(buckets.items()):
+            self._prefill_bucket(group, padded)
+
+    def _prefill_bucket(self, group: List[_Slot], padded: int) -> None:
+        b = len(group)
+        lengths = [len(s._prompt) for s in group]
+        tokens = np.zeros((b, padded), np.int32)
+        for i, s in enumerate(group):
+            tokens[i, : lengths[i]] = s._prompt
         t0 = time.time()
-        caches = M.init_caches(self.cfg, b, self.max_len)
-        # teacher-forced prefill: feed the prompt through decode steps if the
-        # prompt is short, else full prefill
-        if plen > 8:
-            nxt, pre_caches = jax.jit(
-                lambda p, batch: M.prefill_fn(p, batch, self.cfg, self.recipe)
-            )(self.params, {"tokens": tokens})
-            # splice prefill caches into the (larger) decode cache layout
-            caches = _splice_caches(caches, pre_caches, plen)
-            pos = plen
-        else:
-            nxt = None
-            pos = 0
-            for i in range(plen):
-                nxt, caches = self._decode(self.params, caches,
-                                           tokens[:, i: i + 1], jnp.int32(i))
-                pos = i + 1
-        prefill_s = time.time() - t0
+        batch = {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray(lengths, jnp.int32)}
+        nxt, pre_caches = self._prefill(self.params, batch)
+        self.caches = _splice_slots(self.caches, pre_caches,
+                                    [s.index for s in group], lengths)
+        dt = time.time() - t0
+        self._account_prefill(sum(lengths))
+        for i, s in enumerate(group):
+            s.prefill_s = dt
+            s.cur_token = int(nxt[i])
+            self.stats.prefill_s += dt / b
+            del s._prompt
+            # the prefill-sampled token is the first generated token
+            self._push_token(s, s.cur_token)
 
+    # -- decode --------------------------------------------------------------
+
+    def _decode_step(self) -> None:
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        positions = np.zeros((self.num_slots,), np.int32)
+        for s in self.slots:
+            if s.active:
+                tokens[s.index, 0] = s.cur_token
+                positions[s.index] = s.pos
         t0 = time.time()
-        out = [[] for _ in range(b)]
-        cur = nxt[:, None].astype(jnp.int32)
-        done = np.zeros(b, bool)
-        for j in range(max_new):
-            for i, t in enumerate(np.asarray(cur[:, 0])):
-                if not done[i]:
-                    out[i].append(int(t))
-                    if self.eos_id is not None and int(t) == self.eos_id:
-                        done[i] = True
-            if done.all() or pos + j >= self.max_len - 1:
-                break
-            nxt, caches = self._decode(self.params, caches, cur,
-                                       jnp.int32(pos + j))
-            cur = nxt[:, None].astype(jnp.int32)
-        decode_s = time.time() - t0
-        return [GenResult(tokens=o, prefill_s=prefill_s, decode_s=decode_s)
-                for o in out]
+        nxt, self.caches = self._decode(self.params, self.caches,
+                                        jnp.asarray(tokens),
+                                        jnp.asarray(positions))
+        nxt = np.asarray(nxt)
+        dt = time.time() - t0
+        self.stats.decode_s += dt
+
+        active = [s for s in self.slots if s.active]
+        self._account_decode(len(active), int(max(s.pos for s in active)) + 1)
+        tier_counts: Dict[str, int] = {}
+        for s in active:
+            tier_counts[s.tier] = tier_counts.get(s.tier, 0) + 1
+        for tier, cnt in tier_counts.items():
+            self.admission.observe(tier, dt * cnt / len(active), cnt)
+        for s in active:
+            s.decode_s += dt
+            s.pos += 1
+            s.cur_token = int(nxt[s.index])
+            self._push_token(s, s.cur_token)
+
+    def _push_token(self, slot: _Slot, tok: int) -> None:
+        """Record a generated token and finish/evict the slot if done."""
+        if slot.max_new <= 0:
+            self._finish(slot)
+            return
+        slot.out.append(tok)
+        self.stats.tokens += 1
+        self.stats.tier_tokens[slot.tier] = \
+            self.stats.tier_tokens.get(slot.tier, 0) + 1
+        eos = self.eos_id is not None and tok == self.eos_id
+        full = slot.pos >= self.max_len - 1
+        if eos or full or len(slot.out) >= slot.max_new:
+            self._finish(slot)
+
+    def _finish(self, slot: _Slot) -> None:
+        self._finished.append(GenResult(tokens=slot.out, rid=slot.rid,
+                                        tier=slot.tier,
+                                        prefill_s=slot.prefill_s,
+                                        decode_s=slot.decode_s))
+        slot.active = False
+        slot.out = []
+        slot.rid = -1
+
+    # -- transfer accounting -------------------------------------------------
+
+    def _account_prefill(self, n_tokens: int) -> None:
+        """Embedding lookups for the prompt tokens: host plan ships table
+        shards, ISP plan ships indexes (the paper's protocol)."""
+        c = choose_embedding_plan(n_tokens, self.cfg.vocab_size,
+                                  self.cfg.d_model, tp=self.shards)
+        chosen = c.isp_link_bytes if c.plan == "isp" else c.host_link_bytes
+        self.ledger.add("link", chosen, "prefill")
+        self.baseline.add("link", c.host_link_bytes, "prefill")
+
+    def _account_decode(self, batch: int, seq: int) -> None:
+        """One decode step: embedding lookup of the step tokens plus the
+        per-layer decode attention over the resident KV span."""
+        e = choose_embedding_plan(batch, self.cfg.vocab_size,
+                                  self.cfg.d_model, tp=self.shards)
+        d = choose_decode_plan(batch, self.cfg.num_heads,
+                               self.cfg.resolved_head_dim, seq,
+                               self.cfg.num_kv_heads, shards=self.shards)
+        layers = self.cfg.num_layers
+        chosen = (e.isp_link_bytes if e.plan == "isp" else e.host_link_bytes) \
+            + layers * (d.isp_link_bytes if d.plan == "isp"
+                        else d.host_link_bytes)
+        base = e.host_link_bytes + layers * d.host_link_bytes
+        self.ledger.add("link", chosen, "decode")
+        self.baseline.add("link", base, "decode")
 
 
-def _splice_caches(decode_caches, prefill_caches, plen: int):
-    """Copy prefill cache contents into the decode-sized cache buffers."""
+def _splice_slots(pool, pre, slot_ids: List[int], lengths: List[int]):
+    """Scatter a bucket's prefill caches into the per-slot pool.
+
+    ``pool`` leaves are (num_groups, num_slots, ...); ``pre`` leaves are
+    (num_groups, b, ...) for the bucket's ``b`` sequences.  kpos rows become
+    per-slot tracks: prefill positions >= the true prompt length (padding)
+    are masked to -1, everything past the copied span stays -1.
+    """
+    slots = jnp.asarray(slot_ids)
+    lens = jnp.asarray(lengths)
 
     def splice(path, dst, src):
         names = [str(p.key) for p in path if hasattr(p, "key")]
         name = names[-1] if names else ""
+        if name == "kpos":
+            # src (ng, n) shared track -> per-slot rows (ng, b, n)
+            n = min(src.shape[1], dst.shape[2])
+            row = jnp.broadcast_to(src[:, None, :n],
+                                   (src.shape[0], len(slot_ids), n))
+            row = jnp.where((row >= 0) & (row < lens[None, :, None]), row, -1)
+            dst = dst.at[:, slots, :].set(-1)
+            return dst.at[:, slots, :n].set(row)
         if name in ("k", "v", "ckv", "krope"):
             n = min(src.shape[2], dst.shape[2])
-            return dst.at[:, :, :n].set(src[:, :, :n].astype(dst.dtype))
-        if name == "kpos":
-            n = min(src.shape[1], dst.shape[1])
-            return dst.at[:, :n].set(src[:, :n])
-        return src.astype(dst.dtype) if src.shape == dst.shape else dst
+            return dst.at[:, slots, :n].set(src[:, :, :n].astype(dst.dtype))
+        # recurrent / stateful leaves: whole per-sequence rows
+        return dst.at[:, slots].set(src.astype(dst.dtype))
 
-    return jax.tree_util.tree_map_with_path(splice, decode_caches, prefill_caches)
+    return jax.tree_util.tree_map_with_path(splice, pool, pre)

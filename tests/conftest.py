@@ -1,9 +1,20 @@
+import sys
+
 import numpy as np
 import pytest
 
 # NOTE: never set --xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device; multi-device tests run in subprocesses
 # (see tests/test_distributed.py).
+
+# The image has no hypothesis and the repo may not add deps: install the
+# deterministic stub under the real name, only when the package is missing.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro._testing import hypothesis_stub
+    sys.modules["hypothesis"] = hypothesis_stub
+    sys.modules["hypothesis.strategies"] = hypothesis_stub.strategies
 
 
 @pytest.fixture

@@ -41,6 +41,7 @@ def test_vocab_padding_never_wins_sampling(rng):
     assert int(np.max(np.asarray(toks))) < 60
 
 
+@pytest.mark.fast
 def test_embedding_transfer_plan_reduction():
     base, isp = transfer.embedding_plans(num_lookups=65536, vocab=262_144,
                                          d_model=3840, tp=16)
@@ -49,6 +50,7 @@ def test_embedding_transfer_plan_reduction():
     assert "all-gather table" not in isp.notes
 
 
+@pytest.mark.fast
 def test_decode_attention_transfer_plan_reduction():
     base, isp = transfer.decode_attention_plans(batch=128, heads=128,
                                                 head_dim=128, seq=32_768,
@@ -56,6 +58,7 @@ def test_decode_attention_transfer_plan_reduction():
     assert isp.reduction_vs(base) > 0.95   # KV stays resident: >20x saving
 
 
+@pytest.mark.fast
 def test_workload_ledger_matches_paper_fraction():
     led = transfer.workload_split_ledger(3.8e9, csd_fraction=0.68,
                                          output_bytes=1.2e6)

@@ -125,7 +125,7 @@ def test_dryrun_compiles_small_mesh_all_archs():
 @pytest.mark.slow
 def test_compressed_psum_matches_psum():
     out = _run("""
-        from jax import shard_map
+        from repro.compat import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.optim import compressed_psum
         rng = np.random.default_rng(0)

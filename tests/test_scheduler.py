@@ -3,6 +3,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+pytestmark = pytest.mark.fast
+
 from repro.core.scheduler import (Node, PullScheduler, make_cluster,
                                   optimal_batch_ratio, rebalance_shares)
 from repro.core.energy import energy_per_query_mj, energy_saving
@@ -114,3 +116,97 @@ def test_rebalance_shifts_toward_fast_worker():
     new = rebalance_shares(times, shares, 100, smoothing=1.0)
     assert new["fast"] > new["slow"]
     assert new["fast"] >= 75
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    times=st.dictionaries(st.sampled_from(["a", "b", "c", "d"]),
+                          st.floats(1e-6, 1e6), min_size=2, max_size=4),
+    total=st.integers(2, 4096),
+    min_share=st.integers(1, 8),
+)
+def test_rebalance_exact_sum_or_raises(times, total, min_share):
+    """Shares sum to exactly ``total`` and never dip below ``min_share``;
+    infeasible totals raise instead of silently drifting."""
+    shares = {w: max(min_share, total // len(times)) for w in times}
+    if total < min_share * len(times):
+        with pytest.raises(ValueError):
+            rebalance_shares(times, shares, total, min_share=min_share)
+        return
+    new = rebalance_shares(times, shares, total, min_share=min_share)
+    assert sum(new.values()) == total
+    assert all(v >= min_share for v in new.values())
+    assert set(new) == set(times)
+
+
+# --- incremental tick() API ---------------------------------------------------
+
+
+def test_tick_agrees_with_run_on_makespan():
+    nodes = make_cluster(102.0, 5.3, 7, host_overhead=0.05, csd_overhead=0.02)
+    sched = PullScheduler(nodes, 6, optimal_batch_ratio(102.0, 5.3),
+                          poll_interval=0.05)
+    want = sched.run(40_000)
+    state = sched.start(40_000)
+    n_assignments = 0
+    while (a := sched.tick(state)) is not None:
+        n_assignments += 1
+        assert a.finish >= a.start >= 0.0
+        assert a.n_items >= 1
+    got = state.result()
+    assert got.makespan == want.makespan
+    assert got.throughput == want.throughput
+    assert {n: s.items for n, s in got.per_node.items()} == \
+        {n: s.items for n, s in want.per_node.items()}
+    assert n_assignments == sum(s.batches for s in want.per_node.values())
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_csd=st.integers(0, 8),
+    batch=st.integers(1, 200),
+    items=st.integers(1, 10_000),
+)
+def test_tick_conserves_items(n_csd, batch, items):
+    """Every item is assigned exactly once across the tick stream."""
+    sched = PullScheduler(make_cluster(100.0, 5.0, n_csd), batch, 20.0)
+    state = sched.start(items)
+    assigned = 0
+    while (a := sched.tick(state)) is not None:
+        assigned += a.n_items
+    assert assigned == items
+    assert state.done
+    assert sched.tick(state) is None          # exhausted stream stays None
+
+
+@settings(max_examples=40, deadline=None)
+@given(t=st.floats(0.0, 1e4), poll=st.floats(0.001, 2.0))
+def test_quantization_monotone(t, poll):
+    """Ack pickup waits for the next wakeup: q(t) ∈ [t, t + poll], and a
+    finer poll never delays pickup past a coarser one."""
+    sched = PullScheduler(make_cluster(10.0, 1.0, 1), 4, 10.0,
+                          poll_interval=poll)
+    q = sched._quantize(t)
+    assert t - 1e-9 <= q <= t + poll + 1e-9
+    finer = PullScheduler(make_cluster(10.0, 1.0, 1), 4, 10.0,
+                          poll_interval=poll / 2)
+    assert finer._quantize(t) <= q + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(poll=st.floats(0.01, 1.0), items=st.integers(100, 5000))
+def test_coarser_poll_never_speeds_up(poll, items):
+    nodes = make_cluster(50.0, 4.0, 3)
+    fast = PullScheduler(nodes, 8, 12.0, poll_interval=0.0).run(items)
+    slow = PullScheduler(nodes, 8, 12.0, poll_interval=poll).run(items)
+    assert slow.makespan >= fast.makespan - 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(host=st.floats(1.0, 10_000.0), csd=st.floats(0.1, 100.0))
+def test_optimal_batch_ratio_bounds(host, csd):
+    r = optimal_batch_ratio(host, csd)
+    assert r == pytest.approx(host / csd)
+    assert r > 0
+    if host > csd:
+        assert r > 1.0

@@ -1,0 +1,194 @@
+"""Continuous-batching serve engine: variable-length prompts, mid-stream
+slot eviction + refill, EOS handling, determinism vs uniform-position
+decode, and transfer-ledger accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import reduced_config
+from repro.models import model as M
+from repro.train.serve_loop import AdmissionController, ServeEngine
+
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def manual_decode(cfg, params, prompt, max_new):
+    """Oracle: single-sequence uniform-position decode (the legacy path)."""
+    toks = jnp.asarray(np.array([prompt], np.int32))
+    caches = M.init_caches(cfg, 1, MAX_LEN)
+    for t in range(len(prompt)):
+        nxt, caches = M.decode_fn(params, caches, toks[:, t:t + 1],
+                                  jnp.int32(t), cfg)
+    out = [int(nxt[0])]
+    cur = nxt[:, None].astype(jnp.int32)
+    pos = len(prompt)
+    while len(out) < max_new and pos < MAX_LEN - 1:
+        nxt, caches = M.decode_fn(params, caches, cur, jnp.int32(pos), cfg)
+        cur = nxt[:, None].astype(jnp.int32)
+        out.append(int(nxt[0]))
+        pos += 1
+    return out
+
+
+def make_engine(cfg, params, num_slots=4, **kw):
+    kw.setdefault("admission",
+                  AdmissionController(num_slots, host_rate=3.0, csd_rate=1.0))
+    return ServeEngine(cfg, params, max_len=MAX_LEN, num_slots=num_slots, **kw)
+
+
+def test_variable_length_prompts_match_oracle(cfg, params, rng):
+    """Mixed lengths in one call: every request equals its solo decode."""
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (5, 12, 9, 15)]
+    engine = make_engine(cfg, params)
+    results = engine.generate(prompts, max_new=4)
+    assert [r.rid for r in results] == [0, 1, 2, 3]
+    for p, r in zip(prompts, results):
+        assert r.tokens == manual_decode(cfg, params, p, 4), r.rid
+
+
+def test_eviction_refill_mid_decode(cfg, params, rng):
+    """More requests than slots + uneven max_new: slots must be evicted and
+    refilled mid-decode without leaking the previous occupant's cache."""
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (6, 11, 7, 13, 9)]
+    max_news = [2, 6, 3, 5, 4]
+    engine = make_engine(cfg, params, num_slots=2)
+    rids = [engine.submit(p, max_new=m) for p, m in zip(prompts, max_news)]
+    results = {r.rid: r for r in engine.run_until_complete()}
+    assert sorted(results) == rids
+    assert engine.num_active == 0 and engine.pending == 0
+    for rid, p, m in zip(rids, prompts, max_news):
+        assert results[rid].tokens == manual_decode(cfg, params, p, m), rid
+
+
+def test_eos_evicts_early(cfg, params, rng):
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (8, 10)]
+    reference = make_engine(cfg, params).generate(prompts, max_new=6)
+    eos = reference[0].tokens[2]          # third generated token of req 0
+    engine = make_engine(cfg, params, eos_id=eos)
+    results = engine.generate(prompts, max_new=6)
+    for ref, got in zip(reference, results):
+        want = ref.tokens[: ref.tokens.index(eos) + 1] if eos in ref.tokens \
+            else ref.tokens
+        assert got.tokens == want
+    assert len(results[0].tokens) == 3
+    assert results[0].tokens[-1] == eos
+
+
+def test_equal_length_batch_matches_uniform_decode(cfg, params, rng):
+    """Greedy decode through the slot pool must equal the legacy
+    equal-length batched path (uniform positions, shared kpos)."""
+    b, plen, new = 3, 12, 5
+    prompts = rng.integers(0, cfg.vocab_size, (b, plen)).tolist()
+    results = make_engine(cfg, params).generate(prompts, max_new=new)
+
+    toks = jnp.asarray(np.array(prompts, np.int32))
+    caches = M.init_caches(cfg, b, MAX_LEN)
+    for t in range(plen):
+        nxt, caches = M.decode_fn(params, caches, toks[:, t:t + 1],
+                                  jnp.int32(t), cfg)
+    manual = [[int(nxt[i])] for i in range(b)]
+    cur = nxt[:, None].astype(jnp.int32)
+    for j in range(new - 1):
+        nxt, caches = M.decode_fn(params, caches, cur, jnp.int32(plen + j), cfg)
+        cur = nxt[:, None].astype(jnp.int32)
+        for i in range(b):
+            manual[i].append(int(nxt[i]))
+    for i in range(b):
+        assert results[i].tokens == manual[i], i
+
+
+def test_ledger_link_byte_accounting(cfg, params, rng):
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (6, 9, 14)]
+    engine = make_engine(cfg, params)
+    for p in prompts:
+        engine.submit(p, max_new=4)
+    engine.step()                         # admission + prefill + first decode
+    mid = engine.stats.link_bytes
+    assert mid > 0
+    engine.run_until_complete()
+    st = engine.stats
+    assert st.link_bytes >= mid                       # monotone counters
+    assert st.link_bytes <= st.host_link_bytes        # chosen plan never worse
+    assert st.bytes_never_crossed == pytest.approx(
+        st.host_link_bytes - st.link_bytes)
+    assert 0.0 <= st.link_reduction <= 1.0
+    assert st.tokens == sum(st.tier_tokens.values()) == 12
+    assert st.requests == sum(st.tier_requests.values()) == 3
+
+
+def test_admission_uses_scheduler_tiers(cfg, params, rng):
+    """With a 1:1 host:CSD rate the pull order must interleave both tiers."""
+    prompts = [rng.integers(0, cfg.vocab_size, 8).tolist() for _ in range(6)]
+    engine = make_engine(
+        cfg, params, num_slots=2,
+        admission=AdmissionController(2, host_rate=1.0, csd_rate=1.0,
+                                      batch_size=1))
+    results = engine.generate(prompts, max_new=2)
+    tiers = {r.tier for r in results}
+    assert tiers == {"host", "csd"}
+
+
+def test_generate_keeps_earlier_submissions(cfg, params, rng):
+    """generate() drains the queue but must not discard results of requests
+    queued earlier via submit()."""
+    engine = make_engine(cfg, params, num_slots=2)
+    p0 = rng.integers(0, cfg.vocab_size, 7).tolist()
+    rid0 = engine.submit(p0, max_new=3)
+    p1 = rng.integers(0, cfg.vocab_size, 9).tolist()
+    results = engine.generate([p1], max_new=2)
+    assert len(results) == 1 and results[0].rid != rid0
+    leftover = engine.run_until_complete()
+    assert [r.rid for r in leftover] == [rid0]
+    assert leftover[0].tokens == manual_decode(cfg, params, p0, 3)
+
+
+@pytest.mark.fast
+def test_admission_rebalance_gated_on_observed_difference():
+    """Identical per-tier service times must not disturb the configured
+    batch ratio; a real difference must refit it from measured throughput."""
+    ctl = AdmissionController(8, host_rate=100.0, csd_rate=1.0,
+                              rebalance_every=4)
+    ratio0 = ctl.sched.batch_ratio
+    for _ in range(8):
+        ctl.observe("host", 0.10, 10)
+        ctl.observe("csd", 0.01, 1)      # same 10 ms/token on both tiers
+    assert ctl.sched.batch_ratio == ratio0
+
+    ctl = AdmissionController(8, host_rate=100.0, csd_rate=1.0,
+                              rebalance_every=4)
+    for _ in range(8):
+        ctl.observe("host", 0.10, 50)    # 2 ms/token
+        ctl.observe("csd", 0.10, 1)      # 100 ms/token
+    assert ctl.sched.batch_ratio == pytest.approx(50.0)
+    assert ctl.shares["host"] > ctl.shares["csd"]
+
+
+def test_splice_resets_previous_occupant(cfg, params, rng):
+    """Refilling a slot must leave no valid kpos entries from the old
+    request beyond the new prompt."""
+    engine = make_engine(cfg, params, num_slots=2)
+    long_p = rng.integers(0, cfg.vocab_size, 20).tolist()
+    engine.generate([long_p], max_new=4)          # slot 0 reaches pos 24
+    short_p = rng.integers(0, cfg.vocab_size, 5).tolist()
+    engine.generate([short_p], max_new=1)         # refills slot 0
+    kpos = np.asarray(engine.caches["b0"]["kpos"])  # (ng, slots, S)
+    assert kpos.shape[1] == 2
+    valid = kpos[:, 0] >= 0
+    # exactly prompt + 1 decode-written positions may be valid
+    assert valid.sum(axis=-1).max() <= len(short_p) + 1
+    assert (kpos[:, 0][valid] < len(short_p) + 1).all()
