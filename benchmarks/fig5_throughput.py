@@ -44,9 +44,14 @@ def run(emit=print):
     return results
 
 
-def run_engine(emit=print, n_requests: int = 8, seed: int = 0):
+def run_engine(emit=print, n_requests: int = 8, seed: int = 0,
+               kv_layout: str = "paged", page_size: int = 16,
+               max_new: int = 8, num_slots: int = 4):
     """Serve mixed-length requests through the continuous-batching engine
-    and emit its ledger accounting as CSV (fig5_engine rows)."""
+    and emit its ledger + KV accounting as CSV (fig5_engine rows).
+
+    Returns (results, stats, kv_stats) — kv_stats carries the paged-vs-
+    dense peak KV footprint the ``--json`` mode tracks across PRs."""
     import dataclasses
 
     import jax
@@ -59,27 +64,109 @@ def run_engine(emit=print, n_requests: int = 8, seed: int = 0):
     params = M.init_params(cfg, jax.random.PRNGKey(seed))
     rng = np.random.default_rng(seed)
     engine = ServeEngine(
-        cfg, params, max_len=64, num_slots=4,
-        admission=AdmissionController(4, host_rate=4.0, csd_rate=1.0))
+        cfg, params, max_len=64, num_slots=num_slots, kv_layout=kv_layout,
+        page_size=page_size,
+        admission=AdmissionController(num_slots, host_rate=4.0, csd_rate=1.0))
     prompts = [rng.integers(0, cfg.vocab_size, rng.integers(4, 17)).tolist()
                for _ in range(n_requests)]
-    results = engine.generate(prompts, max_new=8)
+    results = engine.generate(prompts, max_new=max_new)
     st = engine.stats
-    emit("table,tier,requests,tokens,throughput,link_mb,host_link_mb,"
-         "link_reduction")
+    kv = engine.kv_stats()
+    emit("table,layout,tier,requests,tokens,throughput,link_mb,host_link_mb,"
+         "link_reduction,peak_kv_mb,dense_kv_mb,kv_reduction")
     for tier in sorted(st.tier_tokens):
-        emit(f"fig5_engine,{tier},{st.tier_requests.get(tier, 0)},"
+        emit(f"fig5_engine,{kv_layout},{tier},{st.tier_requests.get(tier, 0)},"
              f"{st.tier_tokens[tier]},{st.tier_throughput(tier):.2f},"
              f"{st.link_bytes / 1e6:.3f},{st.host_link_bytes / 1e6:.3f},"
-             f"{st.link_reduction:.3f}")
-    return results, st
+             f"{st.link_reduction:.3f},{kv['peak_kv_bytes'] / 1e6:.4f},"
+             f"{kv['dense_kv_bytes'] / 1e6:.4f},{st.kv_reduction:.3f}")
+    return results, st, kv
 
 
-def main():
-    import sys
-    run()
-    if "--engine" in sys.argv:
-        run_engine()
+def run_engine_compare(emit=print, n_requests: int = 8, seed: int = 0,
+                       page_size: int = 16, max_new: int = 8,
+                       num_slots: int = 4, json_path=None):
+    """Paged vs dense-strip engine on the same workload: token identity,
+    decode throughput, and peak KV bytes — the perf trajectory record.
+
+    Writes ``json_path`` (BENCH_fig5.json) when given; raises on NaN/zero
+    throughput or a token mismatch, so CI's perf-smoke fails loudly."""
+    import json
+    import math
+
+    def one(layout):
+        results, st, kv = run_engine(
+            emit=lambda _: None, n_requests=n_requests, seed=seed,
+            kv_layout=layout, page_size=page_size, max_new=max_new,
+            num_slots=num_slots)
+        tput = st.tokens / max(st.prefill_s + st.decode_s, 1e-9)
+        return results, {
+            "tokens": st.tokens,
+            "tokens_per_s": tput,
+            "decode_s": st.decode_s,
+            "link_reduction": st.link_reduction,
+            "kv_reduction": st.kv_reduction,
+            "peak_kv_bytes": kv["peak_kv_bytes"],
+            "pool_kv_bytes": kv["pool_kv_bytes"],
+            "dense_kv_bytes": kv["dense_kv_bytes"],
+        }
+
+    strip_res, strip = one("strip")
+    paged_res, paged = one("paged")
+    identical = [r.tokens for r in strip_res] == [r.tokens for r in paged_res]
+    payload = {
+        "bench": "fig5_engine",
+        "page_size": page_size,
+        "requests": n_requests,
+        "max_new": max_new,
+        "num_slots": num_slots,
+        "tokens_identical": identical,
+        "paged": paged,
+        "strip": strip,
+    }
+    for layout in ("paged", "strip"):
+        t = payload[layout]["tokens_per_s"]
+        if not math.isfinite(t) or t <= 0:
+            raise RuntimeError(f"{layout} throughput is broken: {t}")
+    if not identical:
+        raise RuntimeError("paged decode diverged from strip decode")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        emit(f"wrote {json_path}")
+    emit(f"engine_compare: paged {paged['tokens_per_s']:.1f} tok/s "
+         f"(peak KV {paged['peak_kv_bytes'] / 1e6:.3f} MB) vs strip "
+         f"{strip['tokens_per_s']:.1f} tok/s "
+         f"(KV {strip['dense_kv_bytes'] / 1e6:.3f} MB); "
+         f"tokens identical: {identical}")
+    return payload
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", action="store_true",
+                    help="drive the real continuous-batching serve engine")
+    ap.add_argument("--json", action="store_true",
+                    help="with --engine: compare paged vs strip layouts and "
+                         "write BENCH_fig5.json")
+    ap.add_argument("--json-path", default="BENCH_fig5.json")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--num-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    args = ap.parse_args(argv)
+    if not args.engine:
+        run()
+        return
+    if args.json:
+        run_engine_compare(n_requests=args.requests, max_new=args.max_new,
+                           num_slots=args.num_slots, page_size=args.page_size,
+                           json_path=args.json_path)
+    else:
+        run()
+        run_engine(n_requests=args.requests, max_new=args.max_new,
+                   num_slots=args.num_slots, page_size=args.page_size)
 
 
 if __name__ == "__main__":

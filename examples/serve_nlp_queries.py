@@ -25,6 +25,8 @@ def main():
     ap.add_argument("--app", default="recommender", choices=sorted(APPS))
     ap.add_argument("--no-engine", action="store_true",
                     help="skip the LM continuous-batching engine demo")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV page size (tokens) for the paged serve engine")
     args = ap.parse_args()
     app = APPS[args.app]
 
@@ -70,13 +72,24 @@ def main():
 
     # 4. the same pipeline with a real LM: mixed-length queries through the
     #    continuous-batching engine — scheduler-driven admission, host/ISP
-    #    plan routing, live link-byte ledger (shared with the fig5 bench)
+    #    plan routing, live link-byte ledger (shared with the fig5 bench).
+    #    KV lives in a *paged* pool (the in-storage layout lesson applied to
+    #    serving): prefill allocates ceil(prompt/page_size) pages, each
+    #    decode step appends at most one page, EOS frees the slot's pages
+    #    the same step — so peak KV memory tracks live tokens, not
+    #    num_slots * max_len.  --page-size trades footprint granularity
+    #    (smaller pages hug live tokens tighter) against per-page walk
+    #    overhead (larger pages mean fewer, bigger kernel blocks).
     if not args.no_engine:
         from benchmarks.fig5_throughput import run_engine
 
-        _, stats = run_engine(emit=lambda _: None)
+        _, stats, kv = run_engine(emit=lambda _: None,
+                                  page_size=args.page_size)
         for line in stats.summary().splitlines():
             print(f"[engine] {line}")
+        print(f"[engine] paged KV: peak {kv['peak_kv_bytes'] / 1e6:.3f} MB "
+              f"of a {kv['dense_kv_bytes'] / 1e6:.3f} MB dense worst case "
+              f"(page_size={kv['page_size']})")
 
 
 if __name__ == "__main__":

@@ -83,6 +83,39 @@ def decode_attention(q, k_cache, v_cache, kpos, cur_pos, *, window: Optional[int
     return fn(q, k_cache, v_cache, kpos, cur)
 
 
+def paged_decode_attention(q, kpool, vpool, pages, cur_pos, *,
+                           window: Optional[int], plan,
+                           scale: Optional[float] = None):
+    """Decode attention over a paged KV pool (the serve engine's layout).
+
+    q: (B, H, dh); kpool/vpool: (P(+scratch), page_size, Hkv, dh); pages:
+    (B, maxp) int32 per-slot page tables; cur_pos: (B,) int32 per-slot
+    positions.  Returns (B, H, dhv).
+
+    Local execution runs the fused ragged kernel (Pallas on TPU, jnp
+    reference elsewhere) — one pass over exactly the pages each slot owns.
+    With a sequence-sharded mesh the pool is gathered into the strip view
+    and delegated to the sharded strip path (``decode_attention``): the
+    page table is replicated host state, so sharding the *pool* would
+    shard pages, not positions — the strip view keeps the ISP partial
+    combine exact while paged allocation still governs memory.
+    """
+    if plan is None or plan.mesh is None or not plan.seq_axes:
+        acc, l, m = kops.paged_decode_partial(q, kpool, vpool, pages, cur_pos,
+                                              window=window, scale=scale)
+        return ref.combine_partials(acc[None], l[None], m[None],
+                                    axis=0).astype(q.dtype)
+
+    from repro.core import kv_pages
+    ps = kpool.shape[1]
+    k, v, kpos = kv_pages.pages_to_strips((kpool, vpool), pages, ps)
+    cur = jnp.asarray(cur_pos, jnp.int32)
+    if cur.ndim == 0:
+        cur = jnp.broadcast_to(cur, (q.shape[0],))
+    return decode_attention(q, k, v, kpos, cur, window=window, plan=plan,
+                            scale=scale)
+
+
 def mla_decode_attention(q_nope, q_rope, ckv, krope, kpos, cur_pos, wk_b, *,
                          scale: float, plan):
     """Absorbed-MLA decode over the compressed cache.

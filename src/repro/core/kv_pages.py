@@ -1,0 +1,144 @@
+"""Paged KV-cache allocation: fixed-size token blocks + per-slot page tables.
+
+The paper's in-storage designs win by matching on-device data layout to the
+access pattern instead of padding to worst case (ZCSD makes the same
+argument for flash block allocation).  Applied to LM serving: instead of
+one dense ``max_len`` KV strip per batch slot — memory and decode reads
+scale with ``num_slots * max_len`` no matter how many tokens are live —
+the KV cache becomes a pool of fixed-size *pages* (``page_size`` token
+rows each) handed out by a free-list allocator:
+
+  * a slot's logical position ``p`` lives in logical page ``p // page_size``
+    at row ``p % page_size``;
+  * a per-slot page table maps logical pages to physical pool pages
+    (-1 = not allocated);
+  * prefill allocates ``pages_for(prompt_len)`` pages, each decode step
+    allocates at most one page when the write position crosses a page
+    boundary, and EOS/eviction frees the slot's pages back to the pool in
+    the same engine step — KV memory tracks *live tokens*, not capacity.
+
+The device-side pool layout (one pool per layer group, see
+``models.attention.init_paged_gqa_cache``) reserves one extra *scratch*
+page at index ``num_pages``: writes for inactive slots (page table row -1)
+are routed there so the decode step stays a fixed-shape jitted program;
+scratch contents are never read back (validity is derived from the page
+table and the slot's current position).
+
+Host-side allocator state is tiny (ints), device state is the pool; the
+two meet in the engine (``train.serve_loop``), which pushes the page table
+into the cache pytree whenever it changes.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Number of pages needed to hold ``n_tokens`` token rows."""
+    if n_tokens <= 0:
+        return 0
+    return -(-n_tokens // page_size)
+
+
+class KVPagesExhausted(RuntimeError):
+    """The pool has no free page left for a required allocation."""
+
+
+class PageAllocator:
+    """Free-list allocator over a fixed pool of ``num_pages`` pages.
+
+    Lowest-id-first allocation (a heap) keeps the in-use set compacted
+    toward the bottom of the pool, so ``peak_pages`` — the high-water mark
+    of *live* pages — is the pool size the workload actually needed; the
+    benchmark reports ``peak_pages * page_bytes`` as peak KV memory.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages <= 0 or page_size <= 0:
+            raise ValueError("num_pages and page_size must be positive")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages))
+        heapq.heapify(self._free)
+        self._in_use: set = set()
+        self.peak_pages = 0
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_in_use(self) -> int:
+        return len(self._in_use)
+
+    def alloc(self, n: int = 1) -> List[int]:
+        """Take ``n`` pages off the free list; raises ``KVPagesExhausted``
+        (allocating nothing) when fewer than ``n`` pages are free."""
+        if n < 0:
+            raise ValueError("cannot allocate a negative page count")
+        if n > len(self._free):
+            raise KVPagesExhausted(
+                f"need {n} pages, only {len(self._free)} of "
+                f"{self.num_pages} free")
+        out = [heapq.heappop(self._free) for _ in range(n)]
+        self._in_use.update(out)
+        self.peak_pages = max(self.peak_pages, len(self._in_use))
+        return out
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Return pages to the free list; double-free / foreign ids raise."""
+        for p in pages:
+            if p not in self._in_use:
+                raise ValueError(f"page {p} is not allocated (double free?)")
+        for p in pages:
+            self._in_use.discard(p)
+            heapq.heappush(self._free, p)
+
+    def check_balanced(self) -> None:
+        """Assert every page is back on the free list (tests: no leaks)."""
+        if self._in_use or len(self._free) != self.num_pages:
+            raise AssertionError(
+                f"free-list unbalanced: {len(self._in_use)} pages still "
+                f"in use, {len(self._free)}/{self.num_pages} free")
+
+
+# ---------------------------------------------------------------------------
+# Device-side helpers (jnp) — the reference/fallback view of a paged pool
+# ---------------------------------------------------------------------------
+
+
+def gather_pages(pool, pages):
+    """Materialize each slot's logical KV span from the pool.
+
+    pool:  (P(+scratch), page_size, ...) physical pages;
+    pages: (B, max_pages) int32 physical ids, -1 = unallocated.
+    Returns (B, max_pages * page_size, ...) — rows of unallocated pages
+    contain pool garbage and MUST be masked via ``pages_kpos``.
+    """
+    safe = jnp.maximum(pages, 0)
+    g = jnp.take(pool, safe, axis=0)            # (B, maxp, ps, ...)
+    b, maxp, ps = g.shape[0], g.shape[1], g.shape[2]
+    return g.reshape((b, maxp * ps) + g.shape[3:])
+
+
+def pages_kpos(pages, page_size: int):
+    """Per-slot kpos track for the gathered view: logical position where the
+    page is allocated, -1 elsewhere.  pages: (B, maxp) -> (B, maxp * ps)."""
+    b, maxp = pages.shape
+    pos = jnp.arange(maxp * page_size, dtype=jnp.int32)
+    alloc = jnp.repeat(pages >= 0, page_size, axis=1)
+    return jnp.where(alloc, pos[None, :], -1)
+
+
+def pages_to_strips(pools, pages, page_size: int):
+    """Paged pool(s) -> dense per-slot strips + kpos (the strip-layout view).
+
+    ``pools`` is a tuple of pool arrays sharing one page table.  Used by the
+    sequence-sharded decode fallback, which reuses the strip attention path
+    on the gathered view.
+    """
+    strips = tuple(gather_pages(p, pages) for p in pools)
+    return strips + (pages_kpos(pages, page_size),)

@@ -21,6 +21,10 @@ class TransferLedger:
     link_bytes: float = 0.0
     local_bytes: float = 0.0
     output_bytes: float = 0.0
+    # KV-cache rows the decode step actually walked (device-local traffic,
+    # accounted separately so the paged-vs-dense reduction is visible next
+    # to the link reduction; see serve_loop._account_kv_step)
+    kv_bytes: float = 0.0
     notes: Dict[str, float] = field(default_factory=dict)
 
     def add(self, tier: str, n: float, note: str = "") -> None:
@@ -28,6 +32,8 @@ class TransferLedger:
             self.link_bytes += n
         elif tier == "local":
             self.local_bytes += n
+        elif tier == "kv":
+            self.kv_bytes += n
         else:
             self.output_bytes += n
         if note:

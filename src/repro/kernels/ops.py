@@ -75,6 +75,28 @@ def decode_partial(q, k, v, kpos, cur_pos, *, window: Optional[int] = None,
     return ref.decode_partial_masked(q, k, v, kpos, cur_pos, window=window, scale=scale)
 
 
+def paged_decode_partial(q, kpool, vpool, pages, cur_pos, *,
+                         window: Optional[int] = None,
+                         scale: Optional[float] = None, impl: str = "auto"):
+    """Ragged decode partial over a paged KV pool (continuous batching).
+
+    q: (B,H,dh); kpool/vpool: (P(+scratch), page_size, Hkv, dh); pages:
+    (B,maxp) int32 per-slot page tables (-1 = unallocated); cur_pos: (B,)
+    per-slot positions.  Unlike ``decode_partial``, the per-slot layout IS
+    the Pallas layout here — the kernel walks the page table via scalar
+    prefetch, so the serve engine's ragged batches get the fused path.
+    Returns (acc fp32 (B,H,dh), l (B,H), m (B,H)).
+    """
+    from repro.kernels import paged_decode
+    which = _resolve(impl)
+    if which == "pallas":
+        return paged_decode.paged_decode_partial(
+            q, kpool, vpool, pages, cur_pos, window=window, scale=scale,
+            interpret=jax.default_backend() != "tpu")
+    return paged_decode.paged_decode_partial_ref(
+        q, kpool, vpool, pages, cur_pos, window=window, scale=scale)
+
+
 def isp_gather(table, indices, *, shard_offset=0, shard_rows=None, weights=None,
                impl: str = "auto"):
     """Masked local gather of table rows for global indices (ISP primitive)."""

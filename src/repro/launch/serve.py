@@ -56,6 +56,16 @@ def main() -> int:
     ap.add_argument("--csd-rate", type=float, default=1.0)
     ap.add_argument("--csds", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-layout", choices=("paged", "strip"),
+                    default="paged",
+                    help="paged: fixed-size KV pages, memory tracks live "
+                         "tokens; strip: dense max_len strip per slot")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (smaller = tighter memory, "
+                         "larger = fewer/bigger kernel blocks)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV pool size in pages (0 = dense worst case); "
+                         "smaller pools backpressure admission")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
@@ -63,7 +73,9 @@ def main() -> int:
     admission = AdmissionController(args.num_slots, host_rate=args.host_rate,
                                    csd_rate=args.csd_rate, n_csds=args.csds)
     engine = ServeEngine(cfg, params, max_len=args.max_len,
-                         num_slots=args.num_slots, admission=admission)
+                         num_slots=args.num_slots, admission=admission,
+                         kv_layout=args.kv_layout, page_size=args.page_size,
+                         num_pages=args.num_pages or None)
 
     rng = np.random.default_rng(args.seed)
     if args.trace:
@@ -96,6 +108,10 @@ def main() -> int:
           f"first: {results[0].tokens[:8]}")
     for line in engine.stats.summary().splitlines():
         print(f"[serve] {line}")
+    kv = engine.kv_stats()
+    print(f"[serve] KV[{kv['layout']}]: peak {kv['peak_kv_bytes'] / 1e6:.3f} "
+          f"MB vs dense {kv['dense_kv_bytes'] / 1e6:.3f} MB "
+          f"(page_size={kv['page_size']})")
     return 0
 
 

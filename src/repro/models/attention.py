@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import AttnConfig, ModelConfig
+from repro.core.kv_pages import pages_for
 from repro.kernels import ops as kops
 from repro.models.layers import KeyGen, apply_rope, dense_init, rms_norm
 
@@ -74,6 +75,25 @@ def init_gqa_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype)
     }
 
 
+def init_paged_gqa_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                         page_size: int, max_len: int, dtype):
+    """Paged decode cache for a full-attention GQA layer (serve engine).
+
+    ``kp``/``vp`` are pools of ``num_pages`` physical pages (+1 scratch page
+    at index ``num_pages`` that absorbs writes of inactive slots); ``pages``
+    is the per-slot page table (-1 = unallocated) the engine maintains via
+    ``core.kv_pages.PageAllocator``.  Memory is governed by the allocator's
+    live-page count, not ``batch * max_len``.
+    """
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    maxp = pages_for(max_len, page_size)
+    return {
+        "kp": jnp.zeros((num_pages + 1, page_size, hkv, dh), dtype),
+        "vp": jnp.zeros((num_pages + 1, page_size, hkv, dh), dtype),
+        "pages": jnp.full((batch, maxp), -1, jnp.int32),
+    }
+
+
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
     a = cfg.attn
     return {
@@ -90,11 +110,17 @@ def _ring_update(buf, new, pos, ring: bool):
     return jax.lax.dynamic_update_slice_in_dim(buf, new.astype(buf.dtype), slot, axis=1)
 
 
+def _paged_cache(cache) -> bool:
+    """Whether this decode cache is the paged-pool layout (kp/vp pools +
+    per-slot page table) rather than dense per-slot strips."""
+    return "pages" in cache
+
+
 def _per_slot_cache(cache) -> bool:
     """Whether this decode cache keeps one position track per batch slot
-    (kpos (B, S)) — the continuous-batching serve layout — vs one shared
-    track (kpos (S,)) for uniform-position decode."""
-    return cache["kpos"].ndim == 2
+    (kpos (B, S), or a paged page table) — the continuous-batching serve
+    layout — vs one shared track (kpos (S,)) for uniform-position decode."""
+    return _paged_cache(cache) or cache["kpos"].ndim == 2
 
 
 def _decode_positions(positions, batch: int, cache, mode: str):
@@ -111,6 +137,24 @@ def _slot_scatter(buf, new, slot):
     """Insert ``new`` (B, 1, ...) at per-batch slots ``slot`` (B,)."""
     bidx = jnp.arange(buf.shape[0])
     return buf.at[bidx, slot].set(new[:, 0].astype(buf.dtype))
+
+
+def _paged_update(cache, k_new, v_new, posb):
+    """Paged decode-step cache update: write each slot's (1, hkv, dh) row
+    into its page table's physical page at offset ``pos % page_size``.
+    Slots whose logical page is unallocated (inactive slots) write into the
+    scratch page (index num_pages), which is never read back."""
+    ps = cache["kp"].shape[1]
+    scratch = cache["kp"].shape[0] - 1
+    bidx = jnp.arange(posb.shape[0])
+    page = cache["pages"][bidx, posb // ps]
+    page = jnp.where(page < 0, scratch, page)
+    off = posb % ps
+    return {
+        "kp": cache["kp"].at[page, off].set(k_new[:, 0].astype(cache["kp"].dtype)),
+        "vp": cache["vp"].at[page, off].set(v_new[:, 0].astype(cache["vp"].dtype)),
+        "pages": cache["pages"],
+    }
 
 
 def _slot_update(cache, new_vals, posb, ring: bool):
@@ -153,6 +197,19 @@ def gqa_apply(params, x, positions, cfg: ModelConfig, kind: str, plan,
     if mode == "decode":
         assert cache is not None
         ring = window is not None
+        if _paged_cache(cache):
+            # paged pool layout (serve engine): window-less full attention
+            # only — ring/window layers keep the dense window-sized strip
+            assert window is None, "paged KV applies to full-attention layers"
+            new_cache = _paged_update(cache, k, v, posb)
+            from repro.core.decode_attention import paged_decode_attention
+            out_h = paged_decode_attention(q[:, 0], new_cache["kp"],
+                                           new_cache["vp"], cache["pages"],
+                                           posb, window=None, plan=plan)
+            out_h = out_h[:, None]                                # (B,1,H,dh)
+            out = jnp.einsum("bshk,hkd->bsd", out_h.astype(x.dtype),
+                             params["wo"])
+            return out, new_cache
         if per_slot:
             new_cache = _slot_update(cache, {"k": k, "v": v}, posb, ring)
             pos = posb

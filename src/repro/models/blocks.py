@@ -269,9 +269,20 @@ def apply_block(params, x, positions, cfg: ModelConfig, kind: str, plan,
     return x, new_cache, aux
 
 
-def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
-    """Decode cache for one block (None for cacheless kinds in train)."""
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype,
+                     paged: bool = False, num_pages: int = 0,
+                     page_size: int = 16):
+    """Decode cache for one block (None for cacheless kinds in train).
+
+    ``paged=True`` gives full-attention GQA layers the paged-pool layout
+    (``attn.init_paged_gqa_cache``); window/ring and recurrent layers keep
+    their dense layout — their state is already bounded (window / constant)
+    so paging buys nothing there.
+    """
     if kind in ("attn", "moe"):
+        if paged:
+            return attn_mod.init_paged_gqa_cache(cfg, batch, num_pages,
+                                                 page_size, max_len, dtype)
         return attn_mod.init_gqa_cache(cfg, "full", batch, max_len, dtype)
     if kind == "local":
         return attn_mod.init_gqa_cache(cfg, "local", batch, max_len, dtype)

@@ -237,19 +237,35 @@ def decode_fn(params, caches, token, pos, cfg: ModelConfig, plan=LOCAL):
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                per_slot: bool = False):
+                per_slot: bool = False, paged: bool = False,
+                page_size: int = 16, num_pages: Optional[int] = None):
     """Stacked decode caches: leaves (num_groups, ...).
 
     ``per_slot=True`` gives every batch slot its own kpos track
     ((num_groups, batch, S) instead of (num_groups, S)) so slots can sit at
     different positions — required by the continuous-batching serve engine.
+
+    ``paged=True`` (implies per-slot) replaces the dense per-slot strips of
+    full-attention layers with paged KV pools: ``num_pages`` physical pages
+    of ``page_size`` token rows each (+1 scratch page) and a per-slot page
+    table, managed by ``core.kv_pages.PageAllocator`` in the engine.  The
+    default ``num_pages`` covers the dense worst case; size it down to cap
+    KV memory at expected live tokens (admission backpressures on
+    exhaustion).  Window/ring and recurrent layers keep dense state.
     """
     dtype = _dtype(cfg)
     gpat = group_pattern(cfg)
     ng = num_groups(cfg)
+    if paged:
+        per_slot = True
+        if num_pages is None:
+            from repro.core.kv_pages import pages_for
+            num_pages = batch * pages_for(max_len, page_size)
     out = {}
     for j, kind in enumerate(gpat):
-        one = blk.init_block_cache(cfg, kind, batch, max_len, dtype)
+        one = blk.init_block_cache(cfg, kind, batch, max_len, dtype,
+                                   paged=paged, num_pages=num_pages or 0,
+                                   page_size=page_size)
         out[f"b{j}"] = jax.tree.map(
             lambda l: jnp.zeros((ng,) + l.shape, l.dtype) if l.dtype != jnp.int32
             else jnp.broadcast_to(l, (ng,) + l.shape).copy(), one)
@@ -265,8 +281,10 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def abstract_caches(cfg: ModelConfig, batch: int, max_len: int,
-                    per_slot: bool = False):
-    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len, per_slot))
+                    per_slot: bool = False, paged: bool = False,
+                    page_size: int = 16, num_pages: Optional[int] = None):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len, per_slot,
+                                              paged, page_size, num_pages))
 
 
 # ---------------------------------------------------------------------------

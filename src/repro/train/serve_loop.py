@@ -11,15 +11,26 @@ LM serving:
                ──▶ TransferLedger ("bytes that never crossed the link")
 
 Mechanics:
+  * KV lives in a paged pool by default (``core.kv_pages``): prefill
+    allocates ``ceil(len/page_size)`` fixed-size pages per slot, each
+    decode step appends at most one page, and EOS/eviction frees the
+    slot's pages back to the free list in the same step — peak KV memory
+    and decode reads track live tokens, not ``num_slots * max_len``.
+    Admission reserves each request's worst-case page count, so a full
+    pool backpressures the queue instead of failing mid-decode
+    (``kv_layout="strip"`` keeps the dense per-slot reference layout);
   * variable-length prompts are admitted into a fixed pool of batch slots;
   * prefill is length-bucketed — prompts padded to a common bucket length
     batch together; pad positions are masked out of the per-slot kpos track
     afterwards, so the padded prefill is numerically exact (padding is only
     used for architectures where that holds: pure-attention stacks, window
     not exceeded — recurrent stacks fall back to exact-length buckets);
-  * decode steps run the whole pool with per-slot positions (kpos (B,S)
-    caches — see ``models.attention``); EOS / max-len finishes free the
-    slot, which is refilled from the queue on the next step, mid-decode;
+  * decode steps run the whole pool with per-slot positions — the paged
+    layout walks each slot's page table in one fused pass
+    (``kernels.paged_decode``: Pallas on TPU, jnp reference elsewhere);
+    the strip layout uses per-slot kpos (B,S) masking (see
+    ``models.attention``).  EOS / max-len finishes free the slot (and its
+    pages), which is refilled from the queue on the next step, mid-decode;
   * every prefill/decode step consults the host-vs-ISP plan chooser and
     records both the chosen and the host-baseline link bytes, so
     ``stats().link_reduction`` reproduces the paper's Fig. 5 accounting
@@ -38,6 +49,7 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.core.isp import choose_decode_plan, choose_embedding_plan
+from repro.core.kv_pages import PageAllocator, pages_for
 from repro.core.scheduler import (PullScheduler, SchedulerState, make_cluster,
                                   optimal_batch_ratio, rebalance_shares)
 from repro.core.transfer import TransferLedger
@@ -83,6 +95,19 @@ class ServeStats:
             return 0.0
         return self.bytes_never_crossed / self.host_link_bytes
 
+    @property
+    def kv_bytes_touched(self) -> float:
+        """KV rows the decode kernel actually walked (paged: live pages)."""
+        return self.ledger.kv_bytes
+
+    @property
+    def kv_reduction(self) -> float:
+        """Fractional KV-traffic reduction vs the dense per-slot strips the
+        baseline decode reads every step (0.0 for the strip layout)."""
+        if self.baseline.kv_bytes <= 0:
+            return 0.0
+        return max(1.0 - self.ledger.kv_bytes / self.baseline.kv_bytes, 0.0)
+
     def tier_throughput(self, tier: str) -> float:
         dt = max(self.decode_s + self.prefill_s, 1e-9)
         return self.tier_tokens.get(tier, 0) / dt
@@ -99,6 +124,11 @@ class ServeStats:
             f"link bytes: {self.link_bytes / 1e6:.2f} MB vs host-only "
             f"{self.host_link_bytes / 1e6:.2f} MB "
             f"({self.link_reduction:.0%} never crossed the link)")
+        if self.baseline.kv_bytes > 0:
+            lines.append(
+                f"KV bytes touched: {self.ledger.kv_bytes / 1e6:.2f} MB vs "
+                f"dense {self.baseline.kv_bytes / 1e6:.2f} MB "
+                f"({self.kv_reduction:.0%} fewer KV reads)")
         return "\n".join(lines)
 
 
@@ -121,6 +151,7 @@ class _Slot:
     out: List[int] = field(default_factory=list)
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    reserved_pages: int = 0      # paged layout: admission-time reservation
 
 
 class AdmissionController:
@@ -203,7 +234,12 @@ class ServeEngine:
                  max_len: int = 256, eos_id: Optional[int] = None,
                  num_slots: int = 8, bucket_quantum: int = 8,
                  shards: int = 16,
-                 admission: Optional[AdmissionController] = None):
+                 admission: Optional[AdmissionController] = None,
+                 kv_layout: str = "paged", page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        if kv_layout not in ("paged", "strip"):
+            raise ValueError(f"kv_layout must be 'paged' or 'strip', "
+                             f"got {kv_layout!r}")
         self.cfg = cfg
         self.params = params
         self.recipe = recipe if recipe is not None else M.LOCAL
@@ -218,7 +254,28 @@ class ServeEngine:
             lambda p, c, t, pos: M.decode_fn(p, c, t, pos, cfg, self.recipe))
         self._prefill = jax.jit(
             lambda p, b: M.prefill_fn(p, b, cfg, self.recipe))
-        self.caches = M.init_caches(cfg, num_slots, max_len, per_slot=True)
+        # KV layout: "paged" (default) keeps full-attention KV in fixed-size
+        # pages handed out by a free-list allocator — memory and decode
+        # reads track live tokens; "strip" is the dense per-slot reference
+        # layout (one max_len strip per slot).
+        self.kv_layout = kv_layout if self._has_paged_layers() else "strip"
+        self.page_size = max(page_size, 1)
+        self._maxp = pages_for(max_len, self.page_size)
+        self._pages_dirty = False
+        if self.kv_layout == "paged":
+            if num_pages is None:
+                num_pages = num_slots * self._maxp        # dense worst case
+            self.pager: Optional[PageAllocator] = PageAllocator(
+                num_pages, self.page_size)
+            self.page_table = np.full((num_slots, self._maxp), -1, np.int32)
+            self.caches = M.init_caches(cfg, num_slots, max_len, paged=True,
+                                        page_size=self.page_size,
+                                        num_pages=num_pages)
+            self._push_page_table()
+        else:
+            self.pager = None
+            self.page_table = None
+            self.caches = M.init_caches(cfg, num_slots, max_len, per_slot=True)
         self.slots = [_Slot(index=i) for i in range(num_slots)]
         self.queue: Deque[_Request] = deque()
         self.stats = ServeStats()
@@ -226,6 +283,67 @@ class ServeEngine:
         self.baseline = self.stats.baseline      # everything-to-host baseline
         self._next_rid = 0
         self._finished: List[GenResult] = []
+
+    # -- paged KV bookkeeping ------------------------------------------------
+
+    def _has_paged_layers(self) -> bool:
+        """Paged pools exist only for full-attention GQA layers; a model with
+        none (pure window/recurrent/MLA stacks) serves on the strip layout."""
+        return any(k in ("attn", "moe") for k in self.cfg.layer_pattern)
+
+    def _push_page_table(self) -> None:
+        """Sync the host-side page table into every group's cache leaf.
+
+        Mutators (_admit / _grow_pages / _finish) only mark the table dirty;
+        the device copy is consumed exclusively by the jitted decode step,
+        so ``_decode_step`` flushes once per step no matter how many slots
+        were admitted, grown or finished in between (the prefill splice
+        reads the host-side numpy table directly)."""
+        self._pages_dirty = False
+        for g, cache in self.caches.items():
+            if isinstance(cache, dict) and "pages" in cache:
+                ng = cache["pages"].shape[0]
+                self.caches[g] = dict(cache, pages=jnp.broadcast_to(
+                    jnp.asarray(self.page_table)[None],
+                    (ng,) + self.page_table.shape))
+
+    def _reservation(self, prompt_len: int, max_new: int) -> int:
+        """Pages a request can ever need: prompt + generated tokens, capped
+        at max_len.  Reserving (not allocating) this at admission makes
+        mid-decode allocation infallible — the pool backpressures at
+        admission instead of failing a flying batch."""
+        return pages_for(min(prompt_len + max_new, self.max_len),
+                         self.page_size)
+
+    def _reservable_pages(self) -> int:
+        """Free pages not spoken for by active slots' unallocated tail."""
+        outstanding = sum(
+            s.reserved_pages - int((self.page_table[s.index] >= 0).sum())
+            for s in self.slots if s.active)
+        return self.pager.num_free - outstanding
+
+    def _kv_bytes_per_token(self) -> int:
+        """K+V bytes one token row costs across all paged-eligible (full
+        GQA) layers — the single source for kv_stats and the step ledger."""
+        n_kv_layers = sum(k in ("attn", "moe") for k in self.cfg.layer_pattern)
+        return 2 * self.cfg.num_kv_heads * self.cfg.resolved_head_dim \
+            * jnp.dtype(self.cfg.dtype).itemsize * n_kv_layers
+
+    def kv_stats(self) -> Dict[str, float]:
+        """Live/peak KV footprint vs the dense per-slot baseline (bytes)."""
+        per_token = self._kv_bytes_per_token()
+        dense_tokens = self.num_slots * self.max_len
+        if self.kv_layout == "paged":
+            live = self.pager.num_in_use * self.page_size
+            peak = self.pager.peak_pages * self.page_size
+            pool = self.pager.num_pages * self.page_size
+        else:
+            live = peak = pool = dense_tokens
+        return {"layout": self.kv_layout, "page_size": self.page_size,
+                "live_kv_bytes": live * per_token,
+                "peak_kv_bytes": peak * per_token,
+                "pool_kv_bytes": pool * per_token,
+                "dense_kv_bytes": dense_tokens * per_token}
 
     # -- request intake ------------------------------------------------------
 
@@ -236,6 +354,11 @@ class ServeEngine:
         if len(prompt) >= self.max_len:
             raise ValueError(f"prompt ({len(prompt)}) must fit below "
                              f"max_len ({self.max_len})")
+        if self.kv_layout == "paged" and \
+                self._reservation(len(prompt), max_new) > self.pager.num_pages:
+            raise ValueError(
+                f"request needs {self._reservation(len(prompt), max_new)} KV "
+                f"pages but the pool only has {self.pager.num_pages}")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(_Request(rid, prompt, max_new))
@@ -313,6 +436,21 @@ class ServeEngine:
         n = min(len(free), len(self.queue))
         if n == 0:
             return
+        if self.kv_layout == "paged":
+            # Backpressure at the pool: admit (FIFO) only while the pool can
+            # still reserve each request's worst case — a request that does
+            # not fit waits queued, it never fails mid-flight.
+            budget = self._reservable_pages()
+            fits = 0
+            for req in list(self.queue)[:n]:
+                need = self._reservation(len(req.prompt), req.max_new)
+                if need > budget:
+                    break
+                budget -= need
+                fits += 1
+            n = fits
+            if n == 0:
+                return
         tiers = self.admission.tiers_for(n, queued=len(self.queue))
         admitted: List[_Slot] = []
         for slot, tier in zip(free, tiers):
@@ -326,10 +464,19 @@ class ServeEngine:
             slot.prefill_s = 0.0
             slot.decode_s = 0.0
             slot._prompt = req.prompt          # consumed by the bucket pass
+            if self.kv_layout == "paged":
+                slot.reserved_pages = self._reservation(len(req.prompt),
+                                                        req.max_new)
+                pages = self.pager.alloc(pages_for(len(req.prompt),
+                                                   self.page_size))
+                self.page_table[slot.index, :] = -1
+                self.page_table[slot.index, : len(pages)] = pages
             admitted.append(slot)
             self.stats.requests += 1
             self.stats.tier_requests[tier] = \
                 self.stats.tier_requests.get(tier, 0) + 1
+        if self.kv_layout == "paged":
+            self._pages_dirty = True
 
         buckets: Dict[int, List[_Slot]] = {}
         for slot in admitted:
@@ -349,7 +496,8 @@ class ServeEngine:
                  "lengths": jnp.asarray(lengths, jnp.int32)}
         nxt, pre_caches = self._prefill(self.params, batch)
         self.caches = _splice_slots(self.caches, pre_caches,
-                                    [s.index for s in group], lengths)
+                                    [s.index for s in group], lengths,
+                                    self.page_table, self.page_size)
         dt = time.time() - t0
         self._account_prefill(sum(lengths))
         for i, s in enumerate(group):
@@ -369,6 +517,10 @@ class ServeEngine:
             if s.active:
                 tokens[s.index, 0] = s.cur_token
                 positions[s.index] = s.pos
+        if self.kv_layout == "paged":
+            self._grow_pages()
+            if self._pages_dirty:
+                self._push_page_table()
         t0 = time.time()
         nxt, self.caches = self._decode(self.params, self.caches,
                                         jnp.asarray(tokens),
@@ -404,6 +556,18 @@ class ServeEngine:
         if eos or full or len(slot.out) >= slot.max_new:
             self._finish(slot)
 
+    def _grow_pages(self) -> None:
+        """Allocate the page each active slot's next write position needs.
+        Admission reserved the worst case, so this never exhausts the pool
+        (``_reservable_pages`` accounts for the unallocated tail)."""
+        for s in self.slots:
+            if not s.active:
+                continue
+            lp = s.pos // self.page_size
+            if self.page_table[s.index, lp] < 0:
+                self.page_table[s.index, lp] = self.pager.alloc(1)[0]
+                self._pages_dirty = True
+
     def _finish(self, slot: _Slot) -> None:
         self._finished.append(GenResult(tokens=slot.out, rid=slot.rid,
                                         tier=slot.tier,
@@ -412,6 +576,17 @@ class ServeEngine:
         slot.active = False
         slot.out = []
         slot.rid = -1
+        if self.kv_layout == "paged":
+            # eager release: the pages (and the reservation tail) return to
+            # the pool in the same step EOS/max-len fired, so a queued
+            # request can be admitted at the very next tick
+            row = self.page_table[slot.index]
+            live = [int(p) for p in row[row >= 0]]
+            if live:
+                self.pager.free(live)
+            self.page_table[slot.index, :] = -1
+            slot.reserved_pages = 0
+            self._pages_dirty = True
 
     # -- transfer accounting -------------------------------------------------
 
@@ -439,15 +614,78 @@ class ServeEngine:
         base = e.host_link_bytes + layers * d.host_link_bytes
         self.ledger.add("link", chosen, "decode")
         self.baseline.add("link", base, "decode")
+        self._account_kv_step()
+
+    def _account_kv_step(self) -> None:
+        """KV rows this decode step walks, chosen layout vs the dense
+        baseline (the strip path reads every slot's full strip every step;
+        the paged kernel reads only live pages)."""
+        per_token = self._kv_bytes_per_token()
+        if per_token == 0:
+            return
+        dense = self.num_slots * self.max_len * per_token
+        if self.kv_layout == "paged":
+            touched = self.pager.num_in_use * self.page_size * per_token
+        else:
+            touched = dense
+        self.ledger.add("kv", touched, "decode KV rows")
+        self.baseline.add("kv", dense, "decode KV rows")
 
 
-def _splice_slots(pool, pre, slot_ids: List[int], lengths: List[int]):
+def _splice_slots(pool, pre, slot_ids: List[int], lengths: List[int],
+                  page_table=None, page_size: int = 0):
     """Scatter a bucket's prefill caches into the per-slot pool.
 
-    ``pool`` leaves are (num_groups, num_slots, ...); ``pre`` leaves are
-    (num_groups, b, ...) for the bucket's ``b`` sequences.  kpos rows become
-    per-slot tracks: prefill positions >= the true prompt length (padding)
-    are masked to -1, everything past the copied span stays -1.
+    Dispatches per layer group: paged groups (kp/vp pools + page table)
+    scatter prompt rows into their allocated pages; strip groups keep the
+    dense per-slot tree splice.
+    """
+    out = {}
+    for gname, dst in pool.items():
+        src = pre[gname]
+        if isinstance(dst, dict) and "pages" in dst:
+            out[gname] = _splice_paged_group(dst, src, slot_ids, lengths,
+                                             page_table, page_size)
+        else:
+            out[gname] = _splice_strip_group(dst, src, slot_ids, lengths)
+    return out
+
+
+def _splice_paged_group(dst, src, slot_ids: List[int], lengths: List[int],
+                        page_table, page_size: int):
+    """Scatter prefill rows into the paged pool.
+
+    ``src`` leaves are dense (ng, b, padded, ...); only the first
+    ``lengths[i]`` rows of each sequence are real — pad rows are never
+    scattered, so the pool only ever holds live tokens (positions past the
+    current one are invisible to the kernel until their decode step
+    overwrites them).
+    """
+    src_b, src_pos, dst_page, dst_off = [], [], [], []
+    for i, (sid, n) in enumerate(zip(slot_ids, lengths)):
+        p = np.arange(n)
+        src_b.append(np.full(n, i))
+        src_pos.append(p)
+        dst_page.append(page_table[sid, p // page_size])
+        dst_off.append(p % page_size)
+    sb, sp = np.concatenate(src_b), np.concatenate(src_pos)
+    pages_np = np.concatenate(dst_page)
+    assert (pages_np >= 0).all(), "prefill splice into unallocated page"
+    dp = jnp.asarray(pages_np)
+    do = jnp.asarray(np.concatenate(dst_off))
+    return dict(
+        dst,
+        kp=dst["kp"].at[:, dp, do].set(src["k"][:, sb, sp].astype(dst["kp"].dtype)),
+        vp=dst["vp"].at[:, dp, do].set(src["v"][:, sb, sp].astype(dst["vp"].dtype)),
+    )
+
+
+def _splice_strip_group(pool, pre, slot_ids: List[int], lengths: List[int]):
+    """Dense per-slot splice: ``pool`` leaves are (num_groups, num_slots,
+    ...); ``pre`` leaves are (num_groups, b, ...) for the bucket's ``b``
+    sequences.  kpos rows become per-slot tracks: prefill positions >= the
+    true prompt length (padding) are masked to -1, everything past the
+    copied span stays -1.
     """
     slots = jnp.asarray(slot_ids)
     lens = jnp.asarray(lengths)

@@ -1,0 +1,99 @@
+"""Paged KV allocator + device-side helpers: free-list discipline
+(exhaustion raises and allocates nothing, free returns pages, double-free
+raises), peak tracking, and the gathered-view oracles."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.kv_pages import (KVPagesExhausted, PageAllocator,
+                                 gather_pages, pages_for, pages_kpos,
+                                 pages_to_strips)
+
+pytestmark = pytest.mark.fast
+
+
+def test_pages_for():
+    assert pages_for(0, 8) == 0
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+    assert pages_for(64, 16) == 4
+
+
+def test_alloc_free_roundtrip():
+    a = PageAllocator(4, 8)
+    got = a.alloc(3)
+    assert sorted(got) == [0, 1, 2]          # lowest-id-first (compaction)
+    assert a.num_free == 1 and a.num_in_use == 3
+    a.free(got[:2])
+    assert a.num_free == 3
+    # freed low ids are reused before fresh high ids
+    assert sorted(a.alloc(2)) == sorted(got[:2])
+    a.free([0, 1, 2])
+    a.check_balanced()
+
+
+def test_exhaustion_raises_and_allocates_nothing():
+    a = PageAllocator(2, 8)
+    a.alloc(1)
+    with pytest.raises(KVPagesExhausted):
+        a.alloc(2)
+    assert a.num_free == 1                   # failed alloc took nothing
+
+
+def test_double_free_raises():
+    a = PageAllocator(2, 8)
+    pages = a.alloc(2)
+    a.free(pages[:1])
+    with pytest.raises(ValueError):
+        a.free(pages[:1])
+    with pytest.raises(ValueError):
+        a.free([99])                         # foreign id
+    assert a.num_free == 1                   # failed free changed nothing
+
+
+def test_peak_tracks_high_water():
+    a = PageAllocator(8, 4)
+    p1 = a.alloc(3)
+    a.free(p1)
+    a.alloc(2)
+    assert a.peak_pages == 3
+    a.alloc(4)
+    assert a.peak_pages == 6
+
+
+def test_check_balanced_detects_leak():
+    a = PageAllocator(2, 4)
+    a.alloc(1)
+    with pytest.raises(AssertionError):
+        a.check_balanced()
+    a.free(list(a._in_use))
+    a.check_balanced()
+
+
+def test_gather_pages_and_kpos(rng):
+    P, ps, d = 5, 4, 3
+    pool = jnp.asarray(rng.normal(size=(P + 1, ps, d)), jnp.float32)
+    pages = jnp.asarray([[2, 0, -1], [-1, -1, -1]], jnp.int32)
+    g = gather_pages(pool, pages)
+    assert g.shape == (2, 3 * ps, d)
+    np.testing.assert_array_equal(np.asarray(g[0, :ps]), np.asarray(pool[2]))
+    np.testing.assert_array_equal(np.asarray(g[0, ps:2 * ps]),
+                                  np.asarray(pool[0]))
+    kpos = np.asarray(pages_kpos(pages, ps))
+    assert kpos[0].tolist() == list(range(2 * ps)) + [-1] * ps
+    assert (kpos[1] == -1).all()
+
+
+def test_pages_to_strips_matches_componentwise(rng):
+    P, ps, hkv, dh = 4, 2, 2, 3
+    kp = jnp.asarray(rng.normal(size=(P + 1, ps, hkv, dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(P + 1, ps, hkv, dh)), jnp.float32)
+    pages = jnp.asarray([[1, 3]], jnp.int32)
+    k, v, kpos = pages_to_strips((kp, vp), pages, ps)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(
+        gather_pages(kp, pages)))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(
+        gather_pages(vp, pages)))
+    np.testing.assert_array_equal(np.asarray(kpos),
+                                  np.asarray(pages_kpos(pages, ps)))

@@ -1,0 +1,29 @@
+"""Perf smoke (fast tier): the engine benchmark at a tiny config must run,
+produce finite non-zero throughput in both KV layouts, keep paged and strip
+token-identical, and show the paged peak-KV win — the same gate
+``scripts/ci.sh perf-smoke`` applies, wired into ``-m fast``."""
+import json
+import math
+
+import pytest
+
+from benchmarks.fig5_throughput import run_engine_compare
+
+pytestmark = pytest.mark.fast
+
+
+def test_engine_perf_smoke(tmp_path):
+    out = tmp_path / "BENCH_fig5.json"
+    payload = run_engine_compare(emit=lambda _: None, n_requests=3,
+                                 max_new=3, num_slots=2, page_size=8,
+                                 json_path=str(out))
+    assert payload["tokens_identical"]
+    for layout in ("paged", "strip"):
+        t = payload[layout]["tokens_per_s"]
+        assert math.isfinite(t) and t > 0
+    # the tentpole claim: peak KV tracks live tokens, not slots * max_len
+    assert payload["paged"]["peak_kv_bytes"] < payload["paged"]["dense_kv_bytes"]
+    assert payload["paged"]["kv_reduction"] > 0
+    on_disk = json.loads(out.read_text())
+    assert on_disk["bench"] == "fig5_engine"
+    assert on_disk["paged"]["tokens"] == payload["paged"]["tokens"]

@@ -180,8 +180,9 @@ def test_admission_rebalance_gated_on_observed_difference():
 
 def test_splice_resets_previous_occupant(cfg, params, rng):
     """Refilling a slot must leave no valid kpos entries from the old
-    request beyond the new prompt."""
-    engine = make_engine(cfg, params, num_slots=2)
+    request beyond the new prompt (strip layout; the paged analogue —
+    page-table reset + free-list balance — lives in test_paged_decode)."""
+    engine = make_engine(cfg, params, num_slots=2, kv_layout="strip")
     long_p = rng.integers(0, cfg.vocab_size, 20).tolist()
     engine.generate([long_p], max_new=4)          # slot 0 reaches pos 24
     short_p = rng.integers(0, cfg.vocab_size, 5).tolist()
