@@ -44,14 +44,75 @@ def run(emit=print):
     return results
 
 
+def _time_decode_phases(engine, iters: int = 3):
+    """Double-run timing of the decode hot path: per step, how long the
+    host spends *dispatching* the jitted call (time until the call returns
+    — the submission-path overhead ZCSD blames for small in-storage ops)
+    vs how long the device spends *computing* (additional time until
+    ``block_until_ready``).  Re-activates the slot pool with scratch-routed
+    writes, so call this only after the workload is done — the engine's
+    caches are garbage afterwards."""
+    import time as _t
+
+    import jax
+    import jax.numpy as jnp
+
+    n = engine.num_slots
+    if engine.k_block > 1:
+        steps = engine.k_block
+
+        def call():
+            # fresh masks each run: rem > k keeps every slot alive for the
+            # full block (page rows are freed ⇒ writes go to scratch)
+            engine._alive_dev = jnp.ones((n,), bool)
+            engine._rem_dev = jnp.full((n,), steps + 1, jnp.int32)
+            engine._pos_dev = jnp.ones((n,), jnp.int32)
+            engine._tok_dev = jnp.zeros((n,), jnp.int32)
+            return engine._decode_block(engine.params, engine.caches,
+                                        engine._tok_dev, engine._pos_dev,
+                                        engine._alive_dev, engine._rem_dev)
+
+        def keep(out):
+            (engine._tok_dev, engine._pos_dev, engine._alive_dev,
+             engine._rem_dev, engine.caches) = out[2:]
+            return out[0]
+    else:
+        steps = 1
+        toks = jnp.zeros((n, 1), jnp.int32)
+        pos = jnp.ones((n,), jnp.int32)
+
+        def call():
+            return engine._decode(engine.params, engine.caches, toks, pos)
+
+        def keep(out):
+            engine.caches = out[1]
+            return out[0]
+
+    jax.block_until_ready(keep(call()))                    # run 1: warm
+    dispatch = compute = 0.0
+    for _ in range(iters):                                 # run 2+: measure
+        t0 = _t.time()
+        out = call()
+        t1 = _t.time()
+        jax.block_until_ready(keep(out))
+        t2 = _t.time()
+        dispatch += t1 - t0
+        compute += t2 - t1
+    return {"dispatch_s_per_step": dispatch / (iters * steps),
+            "compute_s_per_step": compute / (iters * steps)}
+
+
 def run_engine(emit=print, n_requests: int = 8, seed: int = 0,
                kv_layout: str = "paged", page_size: int = 16,
-               max_new: int = 8, num_slots: int = 4):
+               max_new: int = 8, num_slots: int = 4, k_block: int = 8,
+               chunk_prefill=None, prewarm: bool = True,
+               time_phases: bool = False):
     """Serve mixed-length requests through the continuous-batching engine
     and emit its ledger + KV accounting as CSV (fig5_engine rows).
 
-    Returns (results, stats, kv_stats) — kv_stats carries the paged-vs-
-    dense peak KV footprint the ``--json`` mode tracks across PRs."""
+    Returns (results, stats, kv_stats, phases) — kv_stats carries the
+    paged-vs-dense peak KV footprint the ``--json`` mode tracks across PRs;
+    phases is the dispatch-vs-compute split (None unless requested)."""
     import dataclasses
 
     import jax
@@ -65,7 +126,8 @@ def run_engine(emit=print, n_requests: int = 8, seed: int = 0,
     rng = np.random.default_rng(seed)
     engine = ServeEngine(
         cfg, params, max_len=64, num_slots=num_slots, kv_layout=kv_layout,
-        page_size=page_size,
+        page_size=page_size, k_block=k_block, chunk_prefill=chunk_prefill,
+        prewarm=prewarm,
         admission=AdmissionController(num_slots, host_rate=4.0, csd_rate=1.0))
     prompts = [rng.integers(0, cfg.vocab_size, rng.integers(4, 17)).tolist()
                for _ in range(n_requests)]
@@ -80,30 +142,39 @@ def run_engine(emit=print, n_requests: int = 8, seed: int = 0,
              f"{st.link_bytes / 1e6:.3f},{st.host_link_bytes / 1e6:.3f},"
              f"{st.link_reduction:.3f},{kv['peak_kv_bytes'] / 1e6:.4f},"
              f"{kv['dense_kv_bytes'] / 1e6:.4f},{st.kv_reduction:.3f}")
-    return results, st, kv
+    phases = _time_decode_phases(engine) if time_phases else None
+    return results, st, kv, phases
 
 
 def run_engine_compare(emit=print, n_requests: int = 8, seed: int = 0,
                        page_size: int = 16, max_new: int = 8,
-                       num_slots: int = 4, json_path=None):
+                       num_slots: int = 4, k_block: int = 8,
+                       chunk_prefill=None, prewarm: bool = True,
+                       json_path=None):
     """Paged vs dense-strip engine on the same workload: token identity,
     decode throughput, and peak KV bytes — the perf trajectory record.
 
     Writes ``json_path`` (BENCH_fig5.json) when given; raises on NaN/zero
-    throughput or a token mismatch, so CI's perf-smoke fails loudly."""
+    throughput, a token mismatch, or paged decode regressing more than
+    1.5x behind strip, so CI's perf-smoke fails loudly."""
     import json
     import math
 
     def one(layout):
-        results, st, kv = run_engine(
+        results, st, kv, phases = run_engine(
             emit=lambda _: None, n_requests=n_requests, seed=seed,
             kv_layout=layout, page_size=page_size, max_new=max_new,
-            num_slots=num_slots)
+            num_slots=num_slots, k_block=k_block,
+            chunk_prefill=chunk_prefill, prewarm=prewarm, time_phases=True)
         tput = st.tokens / max(st.prefill_s + st.decode_s, 1e-9)
         return results, {
             "tokens": st.tokens,
             "tokens_per_s": tput,
             "decode_s": st.decode_s,
+            "decode_steps": st.decode_steps,
+            "steps_per_s": st.steps_per_s,
+            "compile_s": st.compile_s,
+            "phases": phases,
             "link_reduction": st.link_reduction,
             "kv_reduction": st.kv_reduction,
             "peak_kv_bytes": kv["peak_kv_bytes"],
@@ -120,6 +191,8 @@ def run_engine_compare(emit=print, n_requests: int = 8, seed: int = 0,
         "requests": n_requests,
         "max_new": max_new,
         "num_slots": num_slots,
+        "k_block": k_block,
+        "chunk_prefill": chunk_prefill,
         "tokens_identical": identical,
         "paged": paged,
         "strip": strip,
@@ -130,15 +203,54 @@ def run_engine_compare(emit=print, n_requests: int = 8, seed: int = 0,
             raise RuntimeError(f"{layout} throughput is broken: {t}")
     if not identical:
         raise RuntimeError("paged decode diverged from strip decode")
+    # 50 ms absolute slack: at smoke scale a whole workload decodes in a
+    # few ms, where scheduler jitter alone can cross a pure ratio gate —
+    # real regressions (PR-2's per-step page push cost ~0.3 s) still trip
+    if paged["decode_s"] > 1.5 * strip["decode_s"] + 0.05:
+        raise RuntimeError(
+            f"paged decode regressed past the 1.5x gate: "
+            f"{paged['decode_s']:.3f}s vs strip {strip['decode_s']:.3f}s")
     if json_path:
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
         emit(f"wrote {json_path}")
-    emit(f"engine_compare: paged {paged['tokens_per_s']:.1f} tok/s "
-         f"(peak KV {paged['peak_kv_bytes'] / 1e6:.3f} MB) vs strip "
+    emit(f"engine_compare[k_block={k_block}]: "
+         f"paged {paged['tokens_per_s']:.1f} tok/s "
+         f"({paged['steps_per_s']:.1f} steps/s, peak KV "
+         f"{paged['peak_kv_bytes'] / 1e6:.3f} MB) vs strip "
          f"{strip['tokens_per_s']:.1f} tok/s "
          f"(KV {strip['dense_kv_bytes'] / 1e6:.3f} MB); "
          f"tokens identical: {identical}")
+    return payload
+
+
+def run_guard(json_path: str, floor: float = 0.5, emit=print):
+    """CI bench guard: re-run the committed BENCH workload and fail if
+    tokens/s fell below ``floor`` × the committed numbers (either layout).
+    """
+    import json
+
+    with open(json_path) as f:
+        committed = json.load(f)
+    payload = run_engine_compare(
+        emit=emit, n_requests=committed["requests"],
+        max_new=committed["max_new"], num_slots=committed["num_slots"],
+        page_size=committed["page_size"],
+        k_block=committed.get("k_block", 1),
+        chunk_prefill=committed.get("chunk_prefill"), json_path=None)
+    failures = []
+    for layout in ("paged", "strip"):
+        got = payload[layout]["tokens_per_s"]
+        want = committed[layout]["tokens_per_s"]
+        emit(f"bench-guard[{layout}]: {got:.1f} tok/s vs committed "
+             f"{want:.1f} (floor {floor:.1f}x = {floor * want:.1f})")
+        if got < floor * want:
+            failures.append(layout)
+    if failures:
+        raise RuntimeError(
+            f"bench-guard: {', '.join(failures)} tokens/s fell below "
+            f"{floor}x the committed {json_path}")
+    emit("bench-guard: ok")
     return payload
 
 
@@ -151,22 +263,41 @@ def main(argv=None):
                     help="with --engine: compare paged vs strip layouts and "
                          "write BENCH_fig5.json")
     ap.add_argument("--json-path", default="BENCH_fig5.json")
+    ap.add_argument("--guard", type=str, default=None, metavar="BENCH_JSON",
+                    help="with --engine: re-run the committed workload and "
+                         "fail if tokens/s drops below the guard floor")
+    ap.add_argument("--guard-floor", type=float, default=0.5)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--num-slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--k-block", type=int, default=8,
+                    help="fused decode steps per engine tick (1 = per-step "
+                         "host reference loop)")
+    ap.add_argument("--chunk-prefill", type=int, default=0,
+                    help="split prompts longer than this into per-tick "
+                         "chunks (0 = one-shot prefill)")
+    ap.add_argument("--no-prewarm", action="store_true",
+                    help="skip jit pre-warm (compile lands in decode_s)")
     args = ap.parse_args(argv)
     if not args.engine:
         run()
         return
-    if args.json:
+    chunk = args.chunk_prefill or None
+    if args.guard:
+        run_guard(args.guard, floor=args.guard_floor)
+    elif args.json:
         run_engine_compare(n_requests=args.requests, max_new=args.max_new,
                            num_slots=args.num_slots, page_size=args.page_size,
+                           k_block=args.k_block, chunk_prefill=chunk,
+                           prewarm=not args.no_prewarm,
                            json_path=args.json_path)
     else:
         run()
         run_engine(n_requests=args.requests, max_new=args.max_new,
-                   num_slots=args.num_slots, page_size=args.page_size)
+                   num_slots=args.num_slots, page_size=args.page_size,
+                   k_block=args.k_block, chunk_prefill=chunk,
+                   prewarm=not args.no_prewarm)
 
 
 if __name__ == "__main__":

@@ -83,8 +83,8 @@ def main():
     if not args.no_engine:
         from benchmarks.fig5_throughput import run_engine
 
-        _, stats, kv = run_engine(emit=lambda _: None,
-                                  page_size=args.page_size)
+        _, stats, kv, _ = run_engine(emit=lambda _: None,
+                                     page_size=args.page_size)
         for line in stats.summary().splitlines():
             print(f"[engine] {line}")
         print(f"[engine] paged KV: peak {kv['peak_kv_bytes'] / 1e6:.3f} MB "

@@ -116,6 +116,26 @@ def paged_decode_attention(q, kpool, vpool, pages, cur_pos, *,
                             scale=scale)
 
 
+def chunk_prefill_attention(q, kpool, vpool, pages, qpos, *, plan,
+                            scale: Optional[float] = None):
+    """Chunked-prefill attention over a paged KV pool.
+
+    q: (B, C, H, dh) chunk queries; kpool/vpool: (P(+scratch), page_size,
+    Hkv, dh); pages: (B, maxp) int32 page tables; qpos: (B, C) int32 query
+    positions (-1 = pad row).  The chunk's rows are already scattered into
+    the pool, so gathering the slot's pages into the strip view gives
+    prefix + chunk in one span; ``kops.chunk_prefill_attention`` masks it
+    causally per row.  Like ``paged_decode_attention``, a sequence-sharded
+    mesh would shard pages rather than positions, so the gathered view is
+    also what a sharded caller gets (chunk prefill is admission-path work —
+    one chunk per engine tick — not the per-token hot loop).
+    """
+    from repro.core import kv_pages
+    ps = kpool.shape[1]
+    k, v, kpos = kv_pages.pages_to_strips((kpool, vpool), pages, ps)
+    return kops.chunk_prefill_attention(q, k, v, kpos, qpos, scale=scale)
+
+
 def mla_decode_attention(q_nope, q_rope, ckv, krope, kpos, cur_pos, wk_b, *,
                          scale: float, plan):
     """Absorbed-MLA decode over the compressed cache.

@@ -133,6 +133,26 @@ def pages_kpos(pages, page_size: int):
     return jnp.where(alloc, pos[None, :], -1)
 
 
+def scatter_rows(pool, pages, positions, rows):
+    """Scatter token rows into the pool at their logical positions.
+
+    pool:      (P(+scratch), page_size, ...) physical pages;
+    pages:     (B, max_pages) int32 per-slot page tables (-1 = unallocated);
+    positions: (B, C) int32 logical positions, -1 = pad row;
+    rows:      (B, C, ...) the rows to write.
+
+    Rows whose position is -1 or whose logical page is unallocated land in
+    the scratch page (index P), which is never read back — the chunked
+    prefill path stays a fixed-shape jitted program across ragged chunks.
+    """
+    ps = pool.shape[1]
+    scratch = pool.shape[0] - 1
+    safe = jnp.maximum(positions, 0)
+    page = jnp.take_along_axis(pages, safe // ps, axis=1)       # (B, C)
+    page = jnp.where((positions < 0) | (page < 0), scratch, page)
+    return pool.at[page, safe % ps].set(rows.astype(pool.dtype))
+
+
 def pages_to_strips(pools, pages, page_size: int):
     """Paged pool(s) -> dense per-slot strips + kpos (the strip-layout view).
 

@@ -174,6 +174,25 @@ def make_cluster(host_rate: float, csd_rate: float, n_csds: int,
 # ---------------------------------------------------------------------------
 
 
+def split_block_service(block_s: float, per_step_items: List[int]) -> List[float]:
+    """Attribute one fused K-step block's wall time across its inner steps,
+    proportional to the items each step actually served.
+
+    The serve engine's device-resident decode loop observes one wall-clock
+    sample per *block*; feeding that lump to ``rebalance_shares`` would make
+    the batch-ratio refit see K-step-quantized service times.  Splitting it
+    per step (weighted by live slots, since a step serving fewer slots did
+    proportionally less work) restores the bounded per-step samples the
+    K=1 loop produced.  Returns one duration per step; they sum to
+    ``block_s`` exactly (idle steps get an equal share if nothing ran).
+    """
+    total = sum(per_step_items)
+    if total <= 0:
+        n = max(len(per_step_items), 1)
+        return [block_s / n] * len(per_step_items)
+    return [block_s * items / total for items in per_step_items]
+
+
 def rebalance_shares(step_times: Dict[str, float], current_shares: Dict[str, int],
                      total: int, smoothing: float = 0.5,
                      min_share: int = 1) -> Dict[str, int]:

@@ -97,6 +97,21 @@ def paged_decode_partial(q, kpool, vpool, pages, cur_pos, *,
         q, kpool, vpool, pages, cur_pos, window=window, scale=scale)
 
 
+def chunk_prefill_attention(q, k, v, kpos, qpos, *,
+                            scale: Optional[float] = None, impl: str = "auto"):
+    """Chunked-prefill attention: chunk queries at explicit positions over a
+    cached span (the serve engine's incremental prefill continuation).
+
+    q: (B,C,H,dh); k/v: (B,S,Hkv,dh[v]); kpos: (B,S) (-1 = empty row);
+    qpos: (B,C) (-1 = pad row).  One chunk runs per engine tick (admission-
+    path work, not the per-token hot loop), so every backend takes the jnp
+    oracle — the dispatch hook exists so a fused kernel can slot in without
+    touching callers.
+    """
+    del impl  # no fused kernel yet; the oracle is the only implementation
+    return ref.chunk_attention_masked(q, k, v, kpos, qpos, scale=scale)
+
+
 def isp_gather(table, indices, *, shard_offset=0, shard_rows=None, weights=None,
                impl: str = "auto"):
     """Masked local gather of table rows for global indices (ISP primitive)."""

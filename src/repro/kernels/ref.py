@@ -334,6 +334,36 @@ def decode_partial_masked(q, k, v, kpos, cur_pos, *, window=None, scale=None):
     return (acc.reshape(B, H, dhv), l.reshape(B, H), m.reshape(B, H))
 
 
+def chunk_attention_masked(q, k, v, kpos, qpos, *, scale=None):
+    """Prefill-continuation attention: a chunk of queries at explicit
+    positions against a cached span with explicit key positions.
+
+    q: (B, C, H, dh); k/v: (B, S, Hkv, dh[v]); kpos: (B, S) int32 global
+    position of each cache row (-1 = empty); qpos: (B, C) int32 query
+    positions (-1 = pad row).  Key j is visible to query i iff
+    ``kpos[j] >= 0 and kpos[j] <= qpos[i]`` — the chunk's own rows are in
+    the cache already, so this is causal attention over prefix + chunk.
+    Returns (B, C, H, dhv) in q.dtype (pad rows are finite garbage).
+    """
+    B, C, H, dh = q.shape
+    Hkv, dhv = v.shape[2], v.shape[3]
+    g = H // Hkv
+    scale = dh ** -0.5 if scale is None else scale
+    qg = q.reshape(B, C, Hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bchgd,bkhd->bchgk", qg, k.astype(jnp.float32)) * scale
+    valid = (kpos[:, None, :] >= 0) & (qpos[:, :, None] >= 0) \
+        & (kpos[:, None, :] <= qpos[:, :, None])
+    valid = valid[:, :, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid, p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bchgk,bkhd->bchgd", p, v.astype(jnp.float32))
+    out = out / jnp.where(l == 0, 1.0, l)
+    return out.reshape(B, C, H, dhv).astype(q.dtype)
+
+
 def mla_decode_scores_partial(q_eff, q_rope, ckv, krope, kpos, cur_pos, *, scale):
     """MLA absorbed decode partial over a compressed-KV span.
 

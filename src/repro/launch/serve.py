@@ -66,6 +66,15 @@ def main() -> int:
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV pool size in pages (0 = dense worst case); "
                          "smaller pools backpressure admission")
+    ap.add_argument("--k-block", type=int, default=8,
+                    help="decode steps fused into one device-resident "
+                         "dispatch per tick (1 = per-step host loop)")
+    ap.add_argument("--chunk-prefill", type=int, default=0,
+                    help="split prompts longer than this into per-tick "
+                         "prefill chunks (0 = one-shot prefill)")
+    ap.add_argument("--prewarm", action="store_true",
+                    help="compile decode + prefill buckets before serving "
+                         "(first-request latency excludes compile time)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
@@ -75,7 +84,10 @@ def main() -> int:
     engine = ServeEngine(cfg, params, max_len=args.max_len,
                          num_slots=args.num_slots, admission=admission,
                          kv_layout=args.kv_layout, page_size=args.page_size,
-                         num_pages=args.num_pages or None)
+                         num_pages=args.num_pages or None,
+                         k_block=args.k_block,
+                         chunk_prefill=args.chunk_prefill or None,
+                         prewarm=args.prewarm)
 
     rng = np.random.default_rng(args.seed)
     if args.trace:

@@ -124,9 +124,13 @@ def _per_slot_cache(cache) -> bool:
 
 
 def _decode_positions(positions, batch: int, cache, mode: str):
-    """(per_slot, posb, rope_pos) for the two decode position layouts:
-    per-slot (B,) positions against a per-slot cache, or the shared (1,S)
+    """(per_slot, posb, rope_pos) for the decode/chunk position layouts:
+    per-slot (B,) positions against a per-slot cache, per-row (B, C)
+    positions for a chunked-prefill continuation, or the shared (1,S)
     rope layout used by train/prefill/uniform decode."""
+    if mode == "chunk":
+        # chunked prefill: explicit (B, C) logical positions (-1 = pad row)
+        return False, None, positions.astype(jnp.int32)
     if mode == "decode" and cache is not None and _per_slot_cache(cache):
         posb = jnp.broadcast_to(positions, (batch,)).astype(jnp.int32)
         return True, posb, posb[:, None]
@@ -139,16 +143,20 @@ def _slot_scatter(buf, new, slot):
     return buf.at[bidx, slot].set(new[:, 0].astype(buf.dtype))
 
 
-def _paged_update(cache, k_new, v_new, posb):
+def _paged_update(cache, k_new, v_new, posb, write_mask=None):
     """Paged decode-step cache update: write each slot's (1, hkv, dh) row
     into its page table's physical page at offset ``pos % page_size``.
-    Slots whose logical page is unallocated (inactive slots) write into the
-    scratch page (index num_pages), which is never read back."""
+    Slots whose logical page is unallocated (inactive slots) — and slots
+    masked off by ``write_mask`` (slots that finished mid-way through a
+    fused K-step decode block) — write into the scratch page (index
+    num_pages), which is never read back."""
     ps = cache["kp"].shape[1]
     scratch = cache["kp"].shape[0] - 1
     bidx = jnp.arange(posb.shape[0])
     page = cache["pages"][bidx, posb // ps]
     page = jnp.where(page < 0, scratch, page)
+    if write_mask is not None:
+        page = jnp.where(write_mask, page, scratch)
     off = posb % ps
     return {
         "kp": cache["kp"].at[page, off].set(k_new[:, 0].astype(cache["kp"].dtype)),
@@ -157,13 +165,36 @@ def _paged_update(cache, k_new, v_new, posb):
     }
 
 
-def _slot_update(cache, new_vals, posb, ring: bool):
+def _paged_chunk_update(cache, k_new, v_new, positions):
+    """Chunked-prefill cache update: scatter a whole chunk of rows (B, C,
+    hkv, dh) into the paged pools at their logical positions (-1 = pad row,
+    routed to the scratch page)."""
+    from repro.core.kv_pages import scatter_rows
+    return {
+        "kp": scatter_rows(cache["kp"], cache["pages"], positions, k_new),
+        "vp": scatter_rows(cache["vp"], cache["pages"], positions, v_new),
+        "pages": cache["pages"],
+    }
+
+
+def _slot_update(cache, new_vals, posb, ring: bool, write_mask=None):
     """Per-slot decode-step cache update: write each (B,1,...) value at its
-    slot's position and stamp that slot's kpos track."""
+    slot's position and stamp that slot's kpos track.  ``write_mask`` (B,)
+    keeps masked slots' rows (and kpos stamps) untouched — used by the fused
+    K-step decode block so slots that finished mid-block stay inert."""
     s = cache["kpos"].shape[1]
     slot = posb % s if ring else jnp.minimum(posb, s - 1)
-    out = {k: _slot_scatter(cache[k], v, slot) for k, v in new_vals.items()}
-    out["kpos"] = cache["kpos"].at[jnp.arange(len(posb)), slot].set(posb)
+    bidx = jnp.arange(len(posb))
+    out = {}
+    for name, val in new_vals.items():
+        row = val[:, 0].astype(cache[name].dtype)
+        if write_mask is not None:
+            keep = write_mask.reshape((-1,) + (1,) * (row.ndim - 1))
+            row = jnp.where(keep, row, cache[name][bidx, slot])
+        out[name] = cache[name].at[bidx, slot].set(row)
+    stamp = posb if write_mask is None else \
+        jnp.where(write_mask, posb, cache["kpos"][bidx, slot])
+    out["kpos"] = cache["kpos"].at[bidx, slot].set(stamp)
     return out
 
 
@@ -173,11 +204,15 @@ def _slot_update(cache, new_vals, posb, ring: bool):
 
 
 def gqa_apply(params, x, positions, cfg: ModelConfig, kind: str, plan,
-              cache: Optional[Dict] = None, mode: str = "train"):
+              cache: Optional[Dict] = None, mode: str = "train",
+              write_mask=None):
     """x: (B, S, D); positions: (S,) int32 (decode: (1,) current position, or
-    (B,) per-slot positions against a per-slot kpos (B,S) cache).
+    (B,) per-slot positions against a per-slot kpos (B,S) cache; chunk:
+    (B, C) per-row logical positions of a chunked-prefill continuation).
 
-    Returns (out (B,S,D), new_cache | None).
+    ``write_mask`` (B,) bool gates decode cache writes per slot (fused
+    K-step blocks freeze finished slots).  Returns (out (B,S,D),
+    new_cache | None).
     """
     a = cfg.attn
     window = a.window if kind == "local" else None
@@ -194,6 +229,19 @@ def gqa_apply(params, x, positions, cfg: ModelConfig, kind: str, plan,
     k = apply_rope(k, rope_pos, rope_base)
 
     new_cache = None
+    if mode == "chunk":
+        # chunked prefill continuation (serve engine): one chunk of a long
+        # prompt against the paged pool — write the chunk's rows into the
+        # slot's pages, then attend each chunk row to the cached span + the
+        # chunk's own causal prefix.
+        assert cache is not None and _paged_cache(cache) and window is None, \
+            "chunked prefill requires the paged full-attention layout"
+        new_cache = _paged_chunk_update(cache, k, v, positions)
+        from repro.core.decode_attention import chunk_prefill_attention
+        out_h = chunk_prefill_attention(q, new_cache["kp"], new_cache["vp"],
+                                        cache["pages"], positions, plan=plan)
+        out = jnp.einsum("bshk,hkd->bsd", out_h.astype(x.dtype), params["wo"])
+        return out, new_cache
     if mode == "decode":
         assert cache is not None
         ring = window is not None
@@ -201,7 +249,7 @@ def gqa_apply(params, x, positions, cfg: ModelConfig, kind: str, plan,
             # paged pool layout (serve engine): window-less full attention
             # only — ring/window layers keep the dense window-sized strip
             assert window is None, "paged KV applies to full-attention layers"
-            new_cache = _paged_update(cache, k, v, posb)
+            new_cache = _paged_update(cache, k, v, posb, write_mask)
             from repro.core.decode_attention import paged_decode_attention
             out_h = paged_decode_attention(q[:, 0], new_cache["kp"],
                                            new_cache["vp"], cache["pages"],
@@ -211,7 +259,8 @@ def gqa_apply(params, x, positions, cfg: ModelConfig, kind: str, plan,
                              params["wo"])
             return out, new_cache
         if per_slot:
-            new_cache = _slot_update(cache, {"k": k, "v": v}, posb, ring)
+            new_cache = _slot_update(cache, {"k": k, "v": v}, posb, ring,
+                                     write_mask)
             pos = posb
         else:
             pos = positions[0]
@@ -287,9 +336,14 @@ def _mla_q(params, x, cfg: ModelConfig):
 
 
 def mla_apply(params, x, positions, cfg: ModelConfig, plan,
-              cache: Optional[Dict] = None, mode: str = "train"):
+              cache: Optional[Dict] = None, mode: str = "train",
+              write_mask=None):
     a = cfg.attn
     B, S, _ = x.shape
+    if mode == "chunk":
+        raise NotImplementedError(
+            "chunked prefill covers paged full-attention GQA layers only "
+            "(MLA caches are dense per-slot strips — see ROADMAP open items)")
     per_slot, posb, rope_pos = _decode_positions(positions, B, cache, mode)
     q_nope, q_rope = _mla_q(params, x, cfg)                      # (B,S,H,·)
     q_rope = apply_rope(q_rope, rope_pos, a.rope_base)
@@ -306,7 +360,8 @@ def mla_apply(params, x, positions, cfg: ModelConfig, plan,
         assert cache is not None
         if per_slot:
             new_cache = _slot_update(cache, {"ckv": ckv, "krope": k_rope},
-                                     posb, ring=False)
+                                     posb, ring=False,
+                                     write_mask=write_mask)
             pos = posb
         else:
             pos = positions[0]

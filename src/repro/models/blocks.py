@@ -216,21 +216,26 @@ def sp_scatter(x, plan, mode, cfg: Optional[ModelConfig] = None):
 
 
 def apply_block(params, x, positions, cfg: ModelConfig, kind: str, plan,
-                cache: Optional[Dict], mode: str):
+                cache: Optional[Dict], mode: str, write_mask=None):
     """Returns (x, new_cache, aux_loss).  The residual stream enters and
     leaves S-sharded (SP); each mixer gathers the sequence at its input and
-    scatters its output."""
+    scatters its output.  ``write_mask`` (B,) gates decode-step attention
+    cache writes per slot (the fused K-step block freezes finished slots;
+    recurrent states need no mask — a dead slot only corrupts itself and is
+    reset wholesale at refill)."""
     aux = jnp.float32(0.0)
     eps = cfg.norm_eps
     if kind in ("attn", "local", "moe", "mla_moe"):
         h = sp_gather(rms_norm(x, params["ln1"], eps), plan, mode, cfg)
         if kind == "mla_moe":
             a, new_cache = attn_mod.mla_apply(params["attn"], h, positions, cfg,
-                                              plan, cache, mode)
+                                              plan, cache, mode,
+                                              write_mask=write_mask)
         else:
             a, new_cache = attn_mod.gqa_apply(
                 params["attn"], h, positions, cfg,
-                "local" if kind == "local" else "full", plan, cache, mode)
+                "local" if kind == "local" else "full", plan, cache, mode,
+                write_mask=write_mask)
         x = x + sp_scatter(a, plan, mode, cfg)
         h = rms_norm(x, params["ln2"], eps)
         if kind in ("moe", "mla_moe"):
@@ -245,7 +250,8 @@ def apply_block(params, x, positions, cfg: ModelConfig, kind: str, plan,
         h = sp_gather(rms_norm(x, params["ln1"], eps), plan, mode, cfg)
         a, attn_cache = attn_mod.gqa_apply(params["attn"], h, positions, cfg,
                                            "local", plan,
-                                           cache.get("attn") if cache else None, mode)
+                                           cache.get("attn") if cache else None,
+                                           mode, write_mask=write_mask)
         s, ssm_cache = ssm_mod.mamba_apply(params["ssm"], h, cfg, plan,
                                            cache.get("ssm") if cache else None, mode)
         x = x + sp_scatter(0.5 * (a + s), plan, mode, cfg)

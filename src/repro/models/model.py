@@ -124,7 +124,7 @@ def _sp_constraint(x, cfg: ModelConfig, plan):
 
 
 def run_blocks(params, x, positions, cfg: ModelConfig, plan, caches=None,
-               mode: str = "train"):
+               mode: str = "train", write_mask=None):
     """x: (B,S,D).  Returns (x, new_caches, aux_total)."""
     gpat = group_pattern(cfg)
     use_sp = mode in ("train", "prefill") and blk.sp_enabled(
@@ -139,7 +139,8 @@ def run_blocks(params, x, positions, cfg: ModelConfig, plan, caches=None,
             # blocks keep the residual S-sharded internally (Megatron-SP);
             # see blocks.sp_gather / sp_scatter
             x, nc, a = blk.apply_block(gparams[f"b{j}"], x, positions, cfg,
-                                       kind, plan, c, mode)
+                                       kind, plan, c, mode,
+                                       write_mask=write_mask)
             aux = aux + a
             if nc is not None:
                 new_gc[f"b{j}"] = nc
@@ -221,18 +222,97 @@ def _abstract_none(cfg: ModelConfig):
     return None
 
 
-def decode_fn(params, caches, token, pos, cfg: ModelConfig, plan=LOCAL):
+def decode_fn(params, caches, token, pos, cfg: ModelConfig, plan=LOCAL,
+              write_mask=None):
     """One decode step.  token: (B,1) int32; pos: () int32 (uniform batch
     pos) or (B,) int32 per-slot positions against ``per_slot`` caches (the
     continuous-batching serve layout).
 
-    Returns (next_token (B,), new_caches).
+    ``write_mask`` (B,) bool gates cache writes per slot — the fused
+    K-step decode block keeps finished slots inert while the rest of the
+    pool keeps stepping.  Returns (next_token (B,), new_caches).
     """
     x = emb.embed_lookup(params["embed"]["table"], token, plan)
     positions = pos[None].astype(jnp.int32) if pos.ndim == 0 else pos
-    x, new_caches, _ = run_blocks(params, x, positions, cfg, plan, caches, "decode")
+    x, new_caches, _ = run_blocks(params, x, positions, cfg, plan, caches,
+                                  "decode", write_mask=write_mask)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     nxt = emb.greedy_sample(x[:, -1], _head_table(params, cfg), plan, cfg)
+    return nxt, new_caches
+
+
+def decode_block_fn(params, caches, tokens, positions, alive, remaining,
+                    cfg: ModelConfig, plan=LOCAL, *, k_steps: int,
+                    eos_id: Optional[int], max_len: int):
+    """Device-resident fused decode loop: up to ``k_steps`` greedy decode
+    steps in ONE jitted dispatch — sampling, per-slot position increments,
+    EOS / max-new / max-len termination masks and KV writes all stay on
+    device; the host reads back one (K, B) token block per call instead of
+    one token per step.
+
+    tokens: (B,) int32 current input token per slot; positions: (B,) int32
+    next cache position; alive: (B,) bool decode-active slots; remaining:
+    (B,) int32 tokens each slot may still emit.  The loop exits early once
+    every slot is done (no wasted steps when a whole block finishes).
+
+    Returns (out (K, B) int32 — -1 where a slot emitted nothing that step,
+    n_steps executed, tokens, positions, alive, remaining, caches).  Slot
+    state evolves exactly as the K=1 host reference loop
+    (``train.serve_loop._decode_step`` + ``_push_token``): a slot's step
+    emits ``next``, advances its position, then finishes on EOS, cache-full
+    (pos reaching ``max_len - 1``) or its max-new budget; finished slots
+    are frozen via the decode ``write_mask`` so their caches stay inert.
+    """
+    B = tokens.shape[0]
+
+    def cond(state):
+        i, _, _, _, alive, _, _ = state
+        return (i < k_steps) & alive.any()
+
+    def body(state):
+        i, out, tok, pos, alive, rem, caches = state
+        nxt, caches = decode_fn(params, caches, tok[:, None], pos, cfg, plan,
+                                write_mask=alive)
+        nxt = nxt.astype(jnp.int32)
+        out = out.at[i].set(jnp.where(alive, nxt, -1))
+        pos = jnp.where(alive, pos + 1, pos)
+        rem = jnp.where(alive, rem - 1, rem)
+        eos = (nxt == eos_id) if eos_id is not None \
+            else jnp.zeros((B,), bool)
+        done = eos | (pos >= max_len - 1) | (rem <= 0)
+        tok = jnp.where(alive, nxt, tok)
+        alive = alive & ~done
+        return i + 1, out, tok, pos, alive, rem, caches
+
+    state = (jnp.int32(0), jnp.full((k_steps, B), -1, jnp.int32),
+             tokens.astype(jnp.int32), positions.astype(jnp.int32),
+             alive, remaining.astype(jnp.int32), caches)
+    i, out, tok, pos, alive, rem, caches = jax.lax.while_loop(cond, body,
+                                                              state)
+    return out, i, tok, pos, alive, rem, caches
+
+
+def prefill_chunk_fn(params, caches, tokens, qpos, last_idx,
+                     cfg: ModelConfig, plan=LOCAL):
+    """One chunk of an incremental (chunked) prefill for a single slot.
+
+    tokens: (1, C) int32 chunk token ids (pad rows 0); qpos: (1, C) int32
+    logical positions of each row (-1 = pad); last_idx: (1,) int32 index of
+    the chunk's final real row (where the next token samples — only the
+    last chunk's sample is consumed).  ``caches`` is a pool-view pytree
+    whose ``pages`` leaves are the target slot's page-table row
+    ((num_groups, 1, maxp)) over the shared kp/vp pools, so the chunk
+    splices into the paged pool without touching other slots.
+
+    Returns (next_token (1,), updated caches).  Requires a pure paged
+    full-attention stack (the engine gates chunking on that).
+    """
+    x = emb.embed_lookup(params["embed"]["table"], tokens, plan)
+    x, new_caches, _ = run_blocks(params, x, qpos.astype(jnp.int32), cfg,
+                                  plan, caches, "chunk")
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[jnp.arange(x.shape[0]), last_idx.astype(jnp.int32)]
+    nxt = emb.greedy_sample(last, _head_table(params, cfg), plan, cfg)
     return nxt, new_caches
 
 

@@ -11,14 +11,29 @@ LM serving:
                ──▶ TransferLedger ("bytes that never crossed the link")
 
 Mechanics:
+  * the decode inner loop is device-resident (``k_block`` > 1, default):
+    one jitted ``lax.while_loop`` runs up to ``k_block`` greedy steps per
+    engine tick — on-device sampling, per-slot position increments,
+    EOS/max-new/cache-full termination masks and KV writes — and returns a
+    single (K, num_slots) token block to the host.  Cache pools are
+    donated (in-place on accelerators), and tokens/positions/page-table
+    live as persistent device arrays mutated with ``.at[]`` instead of
+    being re-uploaded per step.  ``k_block=1`` keeps the per-step host
+    loop as the reference the fused path is property-tested against;
   * KV lives in a paged pool by default (``core.kv_pages``): prefill
-    allocates ``ceil(len/page_size)`` fixed-size pages per slot, each
-    decode step appends at most one page, and EOS/eviction frees the
-    slot's pages back to the free list in the same step — peak KV memory
-    and decode reads track live tokens, not ``num_slots * max_len``.
-    Admission reserves each request's worst-case page count, so a full
-    pool backpressures the queue instead of failing mid-decode
-    (``kv_layout="strip"`` keeps the dense per-slot reference layout);
+    allocates ``ceil(len/page_size)`` fixed-size pages per slot, decode
+    pre-reserves the pages a whole K-block can touch (a host-side lookup
+    before the dispatch — growth inside the scan is a pure page-table
+    read), and EOS/eviction frees the slot's pages back to the free list
+    in the same tick — peak KV memory and decode reads track live tokens,
+    not ``num_slots * max_len``.  Admission reserves each request's
+    worst-case page count, so a full pool backpressures the queue instead
+    of failing mid-decode (``kv_layout="strip"`` keeps the dense per-slot
+    reference layout);
+  * chunked prefill (``chunk_prefill=N``): prompts longer than N are
+    spliced into the paged pool one fixed-size chunk per tick, interleaved
+    with decode blocks, so a long admission never stalls in-flight
+    requests and the scheduler observes bounded per-tick service times;
   * variable-length prompts are admitted into a fixed pool of batch slots;
   * prefill is length-bucketed — prompts padded to a common bucket length
     batch together; pad positions are masked out of the per-slot kpos track
@@ -51,7 +66,8 @@ from repro.config import ModelConfig
 from repro.core.isp import choose_decode_plan, choose_embedding_plan
 from repro.core.kv_pages import PageAllocator, pages_for
 from repro.core.scheduler import (PullScheduler, SchedulerState, make_cluster,
-                                  optimal_batch_ratio, rebalance_shares)
+                                  optimal_batch_ratio, rebalance_shares,
+                                  split_block_service)
 from repro.core.transfer import TransferLedger
 from repro.models import model as M
 
@@ -71,6 +87,8 @@ class ServeStats:
     tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    decode_steps: int = 0        # inner decode steps actually executed
+    compile_s: float = 0.0       # jit pre-warm time (kept out of decode_s)
     tier_tokens: Dict[str, int] = field(default_factory=dict)
     tier_requests: Dict[str, int] = field(default_factory=dict)
     ledger: TransferLedger = field(default_factory=TransferLedger)     # chosen
@@ -112,9 +130,15 @@ class ServeStats:
         dt = max(self.decode_s + self.prefill_s, 1e-9)
         return self.tier_tokens.get(tier, 0) / dt
 
+    @property
+    def steps_per_s(self) -> float:
+        return self.decode_steps / max(self.decode_s, 1e-9)
+
     def summary(self) -> str:
         lines = [f"requests={self.requests} tokens={self.tokens} "
-                 f"prefill={self.prefill_s:.2f}s decode={self.decode_s:.2f}s"]
+                 f"prefill={self.prefill_s:.2f}s decode={self.decode_s:.2f}s "
+                 f"({self.decode_steps} steps, {self.steps_per_s:.1f} "
+                 f"steps/s; compile {self.compile_s:.2f}s separate)"]
         for tier in sorted(self.tier_tokens):
             lines.append(
                 f"tier[{tier}]: {self.tier_requests.get(tier, 0)} reqs, "
@@ -152,6 +176,12 @@ class _Slot:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     reserved_pages: int = 0      # paged layout: admission-time reservation
+    prefilling: bool = False     # chunked prefill still in flight
+    prefill_done_tokens: int = 0  # prompt tokens already spliced
+
+    @property
+    def decoding(self) -> bool:
+        return self.active and not self.prefilling
 
 
 class AdmissionController:
@@ -236,7 +266,8 @@ class ServeEngine:
                  shards: int = 16,
                  admission: Optional[AdmissionController] = None,
                  kv_layout: str = "paged", page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None, k_block: int = 8,
+                 chunk_prefill: Optional[int] = None, prewarm: bool = False):
         if kv_layout not in ("paged", "strip"):
             raise ValueError(f"kv_layout must be 'paged' or 'strip', "
                              f"got {kv_layout!r}")
@@ -250,10 +281,29 @@ class ServeEngine:
         self.shards = shards
         self.admission = admission if admission is not None else \
             AdmissionController(num_slots)
+        # k_block: decode steps per engine tick that run device-resident in
+        # ONE jitted dispatch (lax.while_loop with on-device sampling and
+        # termination masks).  k_block=1 is the per-step host reference loop
+        # every fused configuration is property-tested against.
+        self.k_block = max(int(k_block), 1)
         self._decode = jax.jit(
             lambda p, c, t, pos: M.decode_fn(p, c, t, pos, cfg, self.recipe))
         self._prefill = jax.jit(
             lambda p, b: M.prefill_fn(p, b, cfg, self.recipe))
+        # Donate the cache pools (and the per-slot decode state) to the
+        # fused block so strips/pages update in place instead of being
+        # copied every call; CPU has no donation support, so skip the
+        # warning noise there.
+        donate = (1, 2, 3, 4, 5) if jax.default_backend() != "cpu" else ()
+        self._decode_block = jax.jit(
+            lambda p, c, t, pos, alive, rem: M.decode_block_fn(
+                p, c, t, pos, alive, rem, cfg, self.recipe,
+                k_steps=self.k_block, eos_id=eos_id, max_len=max_len),
+            donate_argnums=donate)
+        self._prefill_chunk = jax.jit(
+            lambda p, c, t, qpos, last: M.prefill_chunk_fn(
+                p, c, t, qpos, last, cfg, self.recipe),
+            donate_argnums=(1,) if donate else ())
         # KV layout: "paged" (default) keeps full-attention KV in fixed-size
         # pages handed out by a free-list allocator — memory and decode
         # reads track live tokens; "strip" is the dense per-slot reference
@@ -261,7 +311,16 @@ class ServeEngine:
         self.kv_layout = kv_layout if self._has_paged_layers() else "strip"
         self.page_size = max(page_size, 1)
         self._maxp = pages_for(max_len, self.page_size)
-        self._pages_dirty = False
+        # chunk_prefill: split prompts longer than this into chunk-sized
+        # pieces spliced into the paged pool one chunk per engine tick, so a
+        # long admission never stalls in-flight decodes for more than one
+        # chunk's worth of work.  Incremental splice needs the paged layout
+        # and a pure full-attention stack (window rings and recurrent state
+        # would have to carry chunk-crossing state).
+        self.chunk_prefill: Optional[int] = None
+        if chunk_prefill and self.kv_layout == "paged" and \
+                all(k in ("attn", "moe") for k in cfg.layer_pattern):
+            self.chunk_prefill = max(int(chunk_prefill), 1)
         if self.kv_layout == "paged":
             if num_pages is None:
                 num_pages = num_slots * self._maxp        # dense worst case
@@ -271,11 +330,25 @@ class ServeEngine:
             self.caches = M.init_caches(cfg, num_slots, max_len, paged=True,
                                         page_size=self.page_size,
                                         num_pages=num_pages)
-            self._push_page_table()
+            # device-resident page table: the single device copy, mutated
+            # with .at[] sets as slots are admitted/grown/finished — never
+            # re-uploaded wholesale (mid-prefill slots keep -1 rows so
+            # decode writes route to the scratch page until splice is done)
+            self._pages_dev = jnp.full((num_slots, self._maxp), -1,
+                                       jnp.int32)
+            self._sync_pages_leaves()
         else:
             self.pager = None
             self.page_table = None
+            self._pages_dev = None
             self.caches = M.init_caches(cfg, num_slots, max_len, per_slot=True)
+        # per-slot decode state for the fused block: persistent device
+        # arrays mutated with .at[] at admission/finish, round-tripped
+        # through the block — never rebuilt/re-uploaded per step
+        self._tok_dev = jnp.zeros((num_slots,), jnp.int32)
+        self._pos_dev = jnp.zeros((num_slots,), jnp.int32)
+        self._alive_dev = jnp.zeros((num_slots,), bool)
+        self._rem_dev = jnp.zeros((num_slots,), jnp.int32)
         self.slots = [_Slot(index=i) for i in range(num_slots)]
         self.queue: Deque[_Request] = deque()
         self.stats = ServeStats()
@@ -283,6 +356,8 @@ class ServeEngine:
         self.baseline = self.stats.baseline      # everything-to-host baseline
         self._next_rid = 0
         self._finished: List[GenResult] = []
+        if prewarm:
+            self.prewarm()
 
     # -- paged KV bookkeeping ------------------------------------------------
 
@@ -291,21 +366,38 @@ class ServeEngine:
         none (pure window/recurrent/MLA stacks) serves on the strip layout."""
         return any(k in ("attn", "moe") for k in self.cfg.layer_pattern)
 
-    def _push_page_table(self) -> None:
-        """Sync the host-side page table into every group's cache leaf.
-
-        Mutators (_admit / _grow_pages / _finish) only mark the table dirty;
-        the device copy is consumed exclusively by the jitted decode step,
-        so ``_decode_step`` flushes once per step no matter how many slots
-        were admitted, grown or finished in between (the prefill splice
-        reads the host-side numpy table directly)."""
-        self._pages_dirty = False
+    def _sync_pages_leaves(self) -> None:
+        """Point every group's ``pages`` cache leaf at the device page
+        table.  Called only when the table actually changed (admission,
+        block-granular growth, finish) — the per-step full re-push of the
+        host table is gone; ``_pages_dev`` is mutated with .at[] sets."""
         for g, cache in self.caches.items():
             if isinstance(cache, dict) and "pages" in cache:
                 ng = cache["pages"].shape[0]
                 self.caches[g] = dict(cache, pages=jnp.broadcast_to(
-                    jnp.asarray(self.page_table)[None],
-                    (ng,) + self.page_table.shape))
+                    self._pages_dev[None], (ng,) + self._pages_dev.shape))
+
+    def _set_pages_rows(self, slot_ids: List[int]) -> None:
+        """Copy the host table's rows for ``slot_ids`` to the device table."""
+        idx = jnp.asarray(slot_ids, jnp.int32)
+        rows = jnp.asarray(self.page_table[np.asarray(slot_ids)])
+        self._pages_dev = self._pages_dev.at[idx].set(rows)
+        self._sync_pages_leaves()
+
+    def _sync_slot_dev(self, slots: List[_Slot]) -> None:
+        """Refresh the device-side decode state of ``slots`` (post-prefill /
+        post-finish) with .at[] scatters — the only host→device traffic the
+        fused loop needs between blocks."""
+        idx = jnp.asarray([s.index for s in slots], jnp.int32)
+        self._tok_dev = self._tok_dev.at[idx].set(
+            jnp.asarray([s.cur_token for s in slots], jnp.int32))
+        self._pos_dev = self._pos_dev.at[idx].set(
+            jnp.asarray([s.pos for s in slots], jnp.int32))
+        self._alive_dev = self._alive_dev.at[idx].set(
+            jnp.asarray([s.decoding for s in slots], bool))
+        self._rem_dev = self._rem_dev.at[idx].set(
+            jnp.asarray([max(s.max_new - len(s.out), 0) for s in slots],
+                        jnp.int32))
 
     def _reservation(self, prompt_len: int, max_new: int) -> int:
         """Pages a request can ever need: prompt + generated tokens, capped
@@ -344,6 +436,65 @@ class ServeEngine:
                 "peak_kv_bytes": peak * per_token,
                 "pool_kv_bytes": pool * per_token,
                 "dense_kv_bytes": dense_tokens * per_token}
+
+    # -- jit pre-warm --------------------------------------------------------
+
+    def prewarm(self) -> float:
+        """Compile every jitted entry point this engine can hit before the
+        first request: the decode block (or the K=1 step), every prefill
+        bucket shape up to ``max_len`` (the batch dimension is fixed at
+        ``num_slots``, so each bucket length is exactly one compile) and the
+        chunk-prefill shape.  First-request latency and ``decode_s`` then
+        measure serving, not compilation; the compile time is reported
+        separately as ``ServeStats.compile_s``.  Returns total compile_s.
+        """
+        t0 = time.time()
+        if self.k_block > 1:
+            # all slots start dead, so the while_loop compiles fully but
+            # executes zero steps — caches stay untouched
+            out = self._decode_block(self.params, self.caches, self._tok_dev,
+                                     self._pos_dev, self._alive_dev,
+                                     self._rem_dev)
+            jax.block_until_ready(out)
+            (_, _, self._tok_dev, self._pos_dev, self._alive_dev,
+             self._rem_dev, self.caches) = out
+        else:
+            # an all-inactive step: paged writes land in the scratch page;
+            # strip writes stamp position 0, which every admission splice
+            # resets before it is ever read
+            nxt, caches = self._decode(
+                self.params, self.caches,
+                jnp.zeros((self.num_slots, 1), jnp.int32),
+                jnp.zeros((self.num_slots,), jnp.int32))
+            jax.block_until_ready(nxt)
+            self.caches = caches
+        buckets = sorted({self._bucket_len(n)
+                          for n in range(1, self.max_len)})
+        if len(buckets) <= self.max_len // self.bucket_quantum + 2:
+            # bounded bucket set (padding-safe archs); exact-length
+            # bucketing (recurrent stacks) would mean max_len compiles —
+            # those engines warm lazily per length instead
+            for padded in buckets:
+                batch = {"tokens": jnp.zeros((self.num_slots, padded),
+                                             jnp.int32),
+                         "lengths": jnp.ones((self.num_slots,), jnp.int32)}
+                jax.block_until_ready(self._prefill(self.params, batch)[0])
+        if self.chunk_prefill is not None:
+            # an all-pad chunk against an empty page row: every write routes
+            # to the scratch page.  The pool view is donated, so keep the
+            # returned kp/vp leaves (only scratch rows changed).
+            view = self._chunk_view(np.full((self._maxp,), -1, np.int32))
+            tokens = jnp.zeros((1, self.chunk_prefill), jnp.int32)
+            qpos = jnp.full((1, self.chunk_prefill), -1, jnp.int32)
+            nxt, new_view = self._prefill_chunk(
+                self.params, view, tokens, qpos, jnp.zeros((1,), jnp.int32))
+            jax.block_until_ready(nxt)
+            for g, cache in new_view.items():
+                self.caches[g] = dict(self.caches[g], kp=cache["kp"],
+                                      vp=cache["vp"])
+        dt = time.time() - t0
+        self.stats.compile_s += dt
+        return dt
 
     # -- request intake ------------------------------------------------------
 
@@ -398,12 +549,19 @@ class ServeEngine:
         return self.stats.bytes_never_crossed
 
     def step(self) -> List[GenResult]:
-        """One engine tick: admit into free slots, then one decode step.
-        Returns the requests that finished during this tick."""
+        """One engine tick: admit into free slots, advance one chunk of any
+        in-flight chunked prefill, then run one decode block (``k_block``
+        fused steps on device; ``k_block=1`` is the per-step host reference
+        loop).  Returns the requests that finished during this tick."""
         n_before = len(self._finished)
         self._admit()
-        if self.num_active:
-            self._decode_step()
+        if self.chunk_prefill is not None:
+            self._chunk_prefill_tick()
+        if any(s.decoding for s in self.slots):
+            if self.k_block > 1:
+                self._decode_block_step()
+            else:
+                self._decode_step()
         return self._finished[n_before:]
 
     def run_until_complete(self) -> List[GenResult]:
@@ -463,6 +621,9 @@ class ServeEngine:
             slot.out = []
             slot.prefill_s = 0.0
             slot.decode_s = 0.0
+            slot.prefilling = self.chunk_prefill is not None and \
+                len(req.prompt) > self.chunk_prefill
+            slot.prefill_done_tokens = 0
             slot._prompt = req.prompt          # consumed by the bucket pass
             if self.kv_layout == "paged":
                 slot.reserved_pages = self._reservation(len(req.prompt),
@@ -475,11 +636,14 @@ class ServeEngine:
             self.stats.requests += 1
             self.stats.tier_requests[tier] = \
                 self.stats.tier_requests.get(tier, 0) + 1
-        if self.kv_layout == "paged":
-            self._pages_dirty = True
+        oneshot = [s for s in admitted if not s.prefilling]
+        if self.kv_layout == "paged" and oneshot:
+            # mid-prefill slots keep their device row -1 (decode writes hit
+            # the scratch page) until their last chunk is spliced
+            self._set_pages_rows([s.index for s in oneshot])
 
         buckets: Dict[int, List[_Slot]] = {}
-        for slot in admitted:
+        for slot in oneshot:
             buckets.setdefault(self._bucket_len(len(slot._prompt)),
                                []).append(slot)
         for padded, group in sorted(buckets.items()):
@@ -488,12 +652,18 @@ class ServeEngine:
     def _prefill_bucket(self, group: List[_Slot], padded: int) -> None:
         b = len(group)
         lengths = [len(s._prompt) for s in group]
-        tokens = np.zeros((b, padded), np.int32)
+        # fixed batch dimension: pad the bucket with dummy length-1 rows so
+        # each bucket length compiles exactly once (pre-warmable) instead of
+        # once per admission group size; rows are independent, so the pads
+        # cost compute but never touch the real rows' math
+        tokens = np.zeros((self.num_slots, padded), np.int32)
+        lens = np.ones((self.num_slots,), np.int32)
         for i, s in enumerate(group):
             tokens[i, : lengths[i]] = s._prompt
+            lens[i] = lengths[i]
         t0 = time.time()
         batch = {"tokens": jnp.asarray(tokens),
-                 "lengths": jnp.asarray(lengths, jnp.int32)}
+                 "lengths": jnp.asarray(lens)}
         nxt, pre_caches = self._prefill(self.params, batch)
         self.caches = _splice_slots(self.caches, pre_caches,
                                     [s.index for s in group], lengths,
@@ -507,20 +677,78 @@ class ServeEngine:
             del s._prompt
             # the prefill-sampled token is the first generated token
             self._push_token(s, s.cur_token)
+        if self.k_block > 1:
+            self._sync_slot_dev(group)
+
+    def _chunk_prefill_tick(self) -> None:
+        """Advance one chunk of at most ONE mid-prefill slot.
+
+        Long prompts no longer monopolize a tick: each tick splices one
+        fixed-size chunk into the paged pool and then still runs a decode
+        block for everyone else, so the scheduler's ``observe()`` samples
+        stay bounded by one chunk + one block instead of one whole prompt.
+        """
+        slot = next((s for s in self.slots if s.active and s.prefilling),
+                    None)
+        if slot is None:
+            return
+        chunk = self.chunk_prefill
+        prompt = slot._prompt
+        c0 = slot.prefill_done_tokens
+        real = min(chunk, len(prompt) - c0)
+        tokens = np.zeros((1, chunk), np.int32)
+        tokens[0, :real] = prompt[c0: c0 + real]
+        qpos = np.full((1, chunk), -1, np.int32)
+        qpos[0, :real] = np.arange(c0, c0 + real, dtype=np.int32)
+        view = self._chunk_view(self.page_table[slot.index])
+        t0 = time.time()
+        nxt, new_view = self._prefill_chunk(
+            self.params, view, jnp.asarray(tokens), jnp.asarray(qpos),
+            jnp.asarray([real - 1], jnp.int32))
+        dt = time.time() - t0
+        for g, cache in new_view.items():
+            if isinstance(cache, dict) and "kp" in cache:
+                self.caches[g] = dict(self.caches[g], kp=cache["kp"],
+                                      vp=cache["vp"])
+        slot.prefill_done_tokens = c0 + real
+        slot.prefill_s += dt
+        self.stats.prefill_s += dt
+        self._account_prefill(real)
+        if slot.prefill_done_tokens == len(prompt):
+            slot.prefilling = False
+            slot.cur_token = int(nxt[0])
+            del slot._prompt
+            self._set_pages_rows([slot.index])
+            self._push_token(slot, slot.cur_token)
+            if self.k_block > 1:
+                self._sync_slot_dev([slot])
+
+    def _chunk_view(self, table_row: np.ndarray):
+        """B=1 view of the paged caches for one slot: the shared kp/vp
+        pools under the slot's own page-table row — the chunk splices into
+        the pool without the other slots' batch dimension in the program."""
+        row = jnp.asarray(table_row[None])            # (1, maxp)
+        view = {}
+        for g, cache in self.caches.items():
+            ng = cache["pages"].shape[0]
+            view[g] = dict(cache, pages=jnp.broadcast_to(
+                row[None], (ng,) + row.shape))
+        return view
 
     # -- decode --------------------------------------------------------------
 
     def _decode_step(self) -> None:
+        """K=1 host reference loop: one decode step, one token readback per
+        slot.  The fused block (``_decode_block_step``) must stay
+        token-identical to this path."""
         tokens = np.zeros((self.num_slots, 1), np.int32)
         positions = np.zeros((self.num_slots,), np.int32)
         for s in self.slots:
-            if s.active:
+            if s.decoding:
                 tokens[s.index, 0] = s.cur_token
                 positions[s.index] = s.pos
         if self.kv_layout == "paged":
-            self._grow_pages()
-            if self._pages_dirty:
-                self._push_page_table()
+            self._grow_pages(1)
         t0 = time.time()
         nxt, self.caches = self._decode(self.params, self.caches,
                                         jnp.asarray(tokens),
@@ -528,19 +756,70 @@ class ServeEngine:
         nxt = np.asarray(nxt)
         dt = time.time() - t0
         self.stats.decode_s += dt
+        self.stats.decode_steps += 1
 
-        active = [s for s in self.slots if s.active]
-        self._account_decode(len(active), int(max(s.pos for s in active)) + 1)
-        tier_counts: Dict[str, int] = {}
-        for s in active:
-            tier_counts[s.tier] = tier_counts.get(s.tier, 0) + 1
-        for tier, cnt in tier_counts.items():
-            self.admission.observe(tier, dt * cnt / len(active), cnt)
+        active = [s for s in self.slots if s.decoding]
+        self._observe_step(active, dt)
         for s in active:
             s.decode_s += dt
             s.pos += 1
             s.cur_token = int(nxt[s.index])
             self._push_token(s, s.cur_token)
+
+    def _observe_step(self, live: List[_Slot], step_s: float) -> None:
+        """Per-decode-step ledger + scheduler bookkeeping — the single
+        accounting path shared by the K=1 loop and the fused block's
+        replay, so stats/rebalance behavior cannot drift between them."""
+        self._account_decode(len(live), int(max(s.pos for s in live)) + 1)
+        tier_counts: Dict[str, int] = {}
+        for s in live:
+            tier_counts[s.tier] = tier_counts.get(s.tier, 0) + 1
+        for tier, cnt in tier_counts.items():
+            self.admission.observe(tier, step_s * cnt / len(live), cnt)
+
+    def _decode_block_step(self) -> None:
+        """Fused device-resident tick: up to ``k_block`` decode steps in one
+        jitted dispatch.  The only per-block host↔device traffic is the
+        (K, num_slots) token block coming back; sampling, positions and
+        termination masks live on device, and the cache pools are donated so
+        they update in place.  The host then *replays* the block's per-step
+        bookkeeping (stats, ledger, scheduler observations, page frees)
+        from the token block alone."""
+        if self.kv_layout == "paged":
+            # pre-reserve the whole block's pages so growth inside the scan
+            # is a pure page-table lookup (reservation makes this infallible)
+            self._grow_pages(self.k_block)
+        t0 = time.time()
+        out = self._decode_block(self.params, self.caches, self._tok_dev,
+                                 self._pos_dev, self._alive_dev,
+                                 self._rem_dev)
+        block, n_steps, tok, pos, alive, rem, caches = out
+        self.caches = caches
+        self._tok_dev, self._pos_dev = tok, pos
+        self._alive_dev, self._rem_dev = alive, rem
+        block = np.asarray(block)                 # ONE readback per block
+        n_steps = int(n_steps)
+        dt = time.time() - t0
+        self.stats.decode_s += dt
+        self.stats.decode_steps += n_steps
+
+        active = [s for s in self.slots if s.decoding]
+        # a slot emitted at step i iff its token row is >= 0 — the live
+        # counts drive the proportional split of the block's wall time
+        emitted = block[:n_steps, [s.index for s in active]] >= 0
+        per_step = split_block_service(dt, emitted.sum(axis=1).tolist())
+        for i in range(n_steps):
+            live = [s for s in active if s.decoding]
+            if not live:
+                break
+            self._observe_step(live, per_step[i])
+            for s in live:
+                t = int(block[i, s.index])
+                assert t >= 0, "device/host liveness diverged"
+                s.decode_s += per_step[i]
+                s.pos += 1
+                s.cur_token = t
+                self._push_token(s, t)
 
     def _push_token(self, slot: _Slot, tok: int) -> None:
         """Record a generated token and finish/evict the slot if done."""
@@ -556,17 +835,28 @@ class ServeEngine:
         if eos or full or len(slot.out) >= slot.max_new:
             self._finish(slot)
 
-    def _grow_pages(self) -> None:
-        """Allocate the page each active slot's next write position needs.
-        Admission reserved the worst case, so this never exhausts the pool
+    def _grow_pages(self, steps: int = 1) -> None:
+        """Allocate every page the next ``steps`` decode writes can touch —
+        at most ``min(steps, tokens left)`` positions per slot, so a K-block
+        never reserves past a slot's own max-new budget.  Admission reserved
+        the worst case, so this never exhausts the pool
         (``_reservable_pages`` accounts for the unallocated tail)."""
+        grew = False
+        ps = self.page_size
         for s in self.slots:
-            if not s.active:
+            if not s.decoding:
                 continue
-            lp = s.pos // self.page_size
-            if self.page_table[s.index, lp] < 0:
-                self.page_table[s.index, lp] = self.pager.alloc(1)[0]
-                self._pages_dirty = True
+            e = min(steps, max(s.max_new - len(s.out), 1))
+            last = min(s.pos + e - 1, self.max_len - 1)
+            for lp in range(s.pos // ps, last // ps + 1):
+                if self.page_table[s.index, lp] < 0:
+                    page = self.pager.alloc(1)[0]
+                    self.page_table[s.index, lp] = page
+                    self._pages_dev = self._pages_dev.at[s.index, lp].set(
+                        page)
+                    grew = True
+        if grew:
+            self._sync_pages_leaves()
 
     def _finish(self, slot: _Slot) -> None:
         self._finished.append(GenResult(tokens=slot.out, rid=slot.rid,
@@ -574,6 +864,7 @@ class ServeEngine:
                                         prefill_s=slot.prefill_s,
                                         decode_s=slot.decode_s))
         slot.active = False
+        slot.prefilling = False
         slot.out = []
         slot.rid = -1
         if self.kv_layout == "paged":
@@ -586,7 +877,7 @@ class ServeEngine:
                 self.pager.free(live)
             self.page_table[slot.index, :] = -1
             slot.reserved_pages = 0
-            self._pages_dirty = True
+            self._set_pages_rows([slot.index])
 
     # -- transfer accounting -------------------------------------------------
 
@@ -682,11 +973,13 @@ def _splice_paged_group(dst, src, slot_ids: List[int], lengths: List[int],
 
 def _splice_strip_group(pool, pre, slot_ids: List[int], lengths: List[int]):
     """Dense per-slot splice: ``pool`` leaves are (num_groups, num_slots,
-    ...); ``pre`` leaves are (num_groups, b, ...) for the bucket's ``b``
-    sequences.  kpos rows become per-slot tracks: prefill positions >= the
-    true prompt length (padding) are masked to -1, everything past the
-    copied span stays -1.
+    ...); ``pre`` leaves are (num_groups, bpad, ...) for the prefill batch
+    (the bucket's ``b`` real sequences first, dummy pad rows after — see
+    ``_prefill_bucket``'s fixed batch).  kpos rows become per-slot tracks:
+    prefill positions >= the true prompt length (padding) are masked to -1,
+    everything past the copied span stays -1.
     """
+    b = len(slot_ids)
     slots = jnp.asarray(slot_ids)
     lens = jnp.asarray(lengths)
 
@@ -697,14 +990,14 @@ def _splice_strip_group(pool, pre, slot_ids: List[int], lengths: List[int]):
             # src (ng, n) shared track -> per-slot rows (ng, b, n)
             n = min(src.shape[1], dst.shape[2])
             row = jnp.broadcast_to(src[:, None, :n],
-                                   (src.shape[0], len(slot_ids), n))
+                                   (src.shape[0], b, n))
             row = jnp.where((row >= 0) & (row < lens[None, :, None]), row, -1)
             dst = dst.at[:, slots, :].set(-1)
             return dst.at[:, slots, :n].set(row)
         if name in ("k", "v", "ckv", "krope"):
             n = min(src.shape[2], dst.shape[2])
-            return dst.at[:, slots, :n].set(src[:, :, :n].astype(dst.dtype))
+            return dst.at[:, slots, :n].set(src[:, :b, :n].astype(dst.dtype))
         # recurrent / stateful leaves: whole per-sequence rows
-        return dst.at[:, slots].set(src.astype(dst.dtype))
+        return dst.at[:, slots].set(src[:, :b].astype(dst.dtype))
 
     return jax.tree_util.tree_map_with_path(splice, pool, pre)

@@ -113,7 +113,8 @@ def test_ops_dispatch_paged(rng):
 @given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
 def test_paged_engine_token_identical_to_strip(cfg, params, seed):
     """Random mixed-length workloads with eviction + refill: the paged
-    engine must emit exactly the strip engine's tokens, finish with a
+    engine — running the fused K-block loop AND chunked prefill — must emit
+    exactly the K=1 strip host-reference loop's tokens, finish with a
     balanced free-list, and peak below the dense worst case."""
     rng = np.random.default_rng(seed)
     n_req = int(rng.integers(4, 7))
@@ -121,8 +122,9 @@ def test_paged_engine_token_identical_to_strip(cfg, params, seed):
                for _ in range(n_req)]
     max_news = [int(rng.integers(1, 7)) for _ in range(n_req)]
 
-    strip = make_engine(cfg, params, kv_layout="strip")
-    paged = make_engine(cfg, params, kv_layout="paged", page_size=8)
+    strip = make_engine(cfg, params, kv_layout="strip", k_block=1)
+    paged = make_engine(cfg, params, kv_layout="paged", page_size=8,
+                        k_block=8, chunk_prefill=8)
     for p, m in zip(prompts, max_news):
         strip.submit(p, max_new=m)
         paged.submit(p, max_new=m)
@@ -145,7 +147,11 @@ def test_paged_engine_eos_eviction_frees_same_step(cfg, params, rng):
     prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (8, 10)]
     reference = make_engine(cfg, params).generate(prompts, max_new=6)
     eos = reference[0].tokens[2]
-    engine = make_engine(cfg, params, eos_id=eos, page_size=8)
+    # k_block=1: per-step ticks, so the EOS tick is observable while the
+    # other slot is still mid-decode (the fused-block analogue — pages
+    # freed in the same tick the block reports EOS — is in
+    # test_decode_block.py)
+    engine = make_engine(cfg, params, eos_id=eos, page_size=8, k_block=1)
     for p in prompts:
         engine.submit(p, max_new=6)
     done = []
@@ -213,15 +219,17 @@ def test_submit_rejects_request_larger_than_pool(cfg, params, rng):
 def test_paged_engine_pallas_interpret_token_identical(cfg, params, rng,
                                                        monkeypatch):
     """Force the fused Pallas kernel (interpret mode on CPU) through the
-    engine's decode step: generated tokens must match the strip engine's."""
+    engine's decode path — INSIDE the fused K-block loop and with chunked
+    prefill — and require exactly the K=1 strip host loop's tokens."""
     import functools
     prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (5, 9, 13)]
     want = [r.tokens for r in
-            make_engine(cfg, params, kv_layout="strip").generate(
+            make_engine(cfg, params, kv_layout="strip", k_block=1).generate(
                 prompts, max_new=3)]
     monkeypatch.setattr(kops, "paged_decode_partial", functools.partial(
         kops.paged_decode_partial, impl="pallas"))
     got = [r.tokens for r in
-           make_engine(cfg, params, kv_layout="paged", page_size=8)
+           make_engine(cfg, params, kv_layout="paged", page_size=8,
+                       k_block=8, chunk_prefill=4)
            .generate(prompts, max_new=3)]
     assert got == want

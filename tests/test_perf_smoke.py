@@ -16,14 +16,25 @@ def test_engine_perf_smoke(tmp_path):
     out = tmp_path / "BENCH_fig5.json"
     payload = run_engine_compare(emit=lambda _: None, n_requests=3,
                                  max_new=3, num_slots=2, page_size=8,
-                                 json_path=str(out))
+                                 k_block=8, json_path=str(out))
     assert payload["tokens_identical"]
+    assert payload["k_block"] == 8
     for layout in ("paged", "strip"):
         t = payload[layout]["tokens_per_s"]
         assert math.isfinite(t) and t > 0
-    # the tentpole claim: peak KV tracks live tokens, not slots * max_len
+        assert payload[layout]["steps_per_s"] > 0
+        assert payload[layout]["decode_steps"] > 0
+        assert payload[layout]["compile_s"] > 0          # prewarm ran
+        for phase in ("dispatch_s_per_step", "compute_s_per_step"):
+            assert math.isfinite(payload[layout]["phases"][phase])
+    # PR-2 tentpole: peak KV tracks live tokens, not slots * max_len
     assert payload["paged"]["peak_kv_bytes"] < payload["paged"]["dense_kv_bytes"]
     assert payload["paged"]["kv_reduction"] > 0
+    # PR-3 tentpole gate (also enforced inside run_engine_compare): the
+    # paged fused loop may not fall behind strip by more than 1.5x plus
+    # the 50 ms jitter slack (smoke workloads decode in single-digit ms)
+    assert payload["paged"]["decode_s"] <= \
+        1.5 * payload["strip"]["decode_s"] + 0.05
     on_disk = json.loads(out.read_text())
     assert on_disk["bench"] == "fig5_engine"
     assert on_disk["paged"]["tokens"] == payload["paged"]["tokens"]

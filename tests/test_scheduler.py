@@ -210,3 +210,31 @@ def test_optimal_batch_ratio_bounds(host, csd):
     assert r > 0
     if host > csd:
         assert r > 1.0
+
+
+# ---------------------------------------------------------------------------
+# K-block service attribution (fused decode loop -> per-step observe samples)
+# ---------------------------------------------------------------------------
+
+
+def test_split_block_service_proportional_and_exact():
+    from repro.core.scheduler import split_block_service
+    parts = split_block_service(1.0, [4, 4, 2])
+    assert parts == pytest.approx([0.4, 0.4, 0.2])
+    assert sum(parts) == pytest.approx(1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(block_s=st.floats(0.0, 10.0),
+       items=st.lists(st.integers(0, 8), min_size=1, max_size=16))
+def test_split_block_service_conserves_time(block_s, items):
+    from repro.core.scheduler import split_block_service
+    parts = split_block_service(block_s, items)
+    assert len(parts) == len(items)
+    assert all(p >= 0 for p in parts)
+    assert sum(parts) == pytest.approx(block_s)
+    if sum(items) > 0:
+        # a step serving more slots is charged at least as much time
+        order = sorted(range(len(items)), key=lambda i: items[i])
+        for a, b in zip(order, order[1:]):
+            assert parts[a] <= parts[b] + 1e-12
