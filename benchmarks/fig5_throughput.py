@@ -224,34 +224,44 @@ def run_engine_compare(emit=print, n_requests: int = 8, seed: int = 0,
     return payload
 
 
-def run_guard(json_path: str, floor: float = 0.5, emit=print):
+def run_guard(json_path: str, floor: float = 0.8, emit=print,
+              attempts: int = 3):
     """CI bench guard: re-run the committed BENCH workload and fail if
     tokens/s fell below ``floor`` × the committed numbers (either layout).
-    """
+
+    The floor ratchets with the committed file (0.8x now that prewarm keeps
+    compile time out of the serving numbers); wall-clock noise on a shared
+    CI box is handled by best-of-``attempts`` — a real regression fails
+    every attempt, scheduler jitter does not."""
     import json
 
     with open(json_path) as f:
         committed = json.load(f)
-    payload = run_engine_compare(
-        emit=emit, n_requests=committed["requests"],
-        max_new=committed["max_new"], num_slots=committed["num_slots"],
-        page_size=committed["page_size"],
-        k_block=committed.get("k_block", 1),
-        chunk_prefill=committed.get("chunk_prefill"), json_path=None)
-    failures = []
-    for layout in ("paged", "strip"):
-        got = payload[layout]["tokens_per_s"]
-        want = committed[layout]["tokens_per_s"]
-        emit(f"bench-guard[{layout}]: {got:.1f} tok/s vs committed "
-             f"{want:.1f} (floor {floor:.1f}x = {floor * want:.1f})")
-        if got < floor * want:
-            failures.append(layout)
-    if failures:
-        raise RuntimeError(
-            f"bench-guard: {', '.join(failures)} tokens/s fell below "
-            f"{floor}x the committed {json_path}")
-    emit("bench-guard: ok")
-    return payload
+    payload = None
+    for attempt in range(1, attempts + 1):
+        payload = run_engine_compare(
+            emit=emit, n_requests=committed["requests"],
+            max_new=committed["max_new"], num_slots=committed["num_slots"],
+            page_size=committed["page_size"],
+            k_block=committed.get("k_block", 1),
+            chunk_prefill=committed.get("chunk_prefill"), json_path=None)
+        failures = []
+        for layout in ("paged", "strip"):
+            got = payload[layout]["tokens_per_s"]
+            want = committed[layout]["tokens_per_s"]
+            emit(f"bench-guard[{layout}]: {got:.1f} tok/s vs committed "
+                 f"{want:.1f} (floor {floor:.1f}x = {floor * want:.1f})")
+            if got < floor * want:
+                failures.append(layout)
+        if not failures:
+            emit("bench-guard: ok")
+            return payload
+        if attempt < attempts:
+            emit(f"bench-guard: attempt {attempt}/{attempts} missed the "
+                 f"floor for {', '.join(failures)}; retrying")
+    raise RuntimeError(
+        f"bench-guard: {', '.join(failures)} tokens/s fell below "
+        f"{floor}x the committed {json_path} in all {attempts} attempts")
 
 
 def main(argv=None):
@@ -266,7 +276,7 @@ def main(argv=None):
     ap.add_argument("--guard", type=str, default=None, metavar="BENCH_JSON",
                     help="with --engine: re-run the committed workload and "
                          "fail if tokens/s drops below the guard floor")
-    ap.add_argument("--guard-floor", type=float, default=0.5)
+    ap.add_argument("--guard-floor", type=float, default=0.8)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--num-slots", type=int, default=4)

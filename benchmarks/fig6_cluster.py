@@ -1,0 +1,245 @@
+"""Fig. 6-style cluster scaling through the REAL replica serve engines:
+tokens/s and mJ/query over 1→N drives, per routing policy.
+
+The paper's Fig. 6 scales one storage server from 0 to 36 CSDs and shows
+throughput rising while energy-per-query falls (Table I).  This benchmark
+replays that experiment on the LM serving cluster
+(``train.cluster_loop.ClusterEngine``): a sharded request trace is served
+by 1..N replica drives under each routing policy, and every run reports
+
+  * aggregate tokens/s under the parallel-drives wall-clock model,
+  * the live energy integral's mJ/query (validated against
+    ``core.energy.energy_per_query_mj`` on the same throughput),
+  * merged link/KV reductions plus the shard-spill bytes the routing
+    policy's locality decisions cost.
+
+``--json`` writes ``BENCH_fig6_cluster.json`` and FAILS loudly unless
+  * every cluster run is token-identical to a single engine serially
+    replaying the same trace,
+  * tokens/s scales monotonically from 1 to 2 drives under least_loaded,
+  * data_local moves fewer link bytes than round_robin on the sharded
+    trace,
+  * the live mJ/query matches the analytic model.
+
+``--smoke`` is the CI cluster-smoke tier: a 2-drive engine for a few
+ticks, failing on crash or broken throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+
+from repro.core.cluster import ROUTING_POLICIES as DRIVE_POLICIES
+
+
+def build_trace(rng, n_requests: int, n_shards: int, vocab: int,
+                min_prompt: int = 4, max_prompt: int = 16):
+    """Sharded request trace: mixed-length prompts, each pinned to the
+    shard (≈ drive) holding its data — shard assignment is random, so
+    locality-oblivious policies genuinely mis-place requests."""
+    prompts = [rng.integers(0, vocab,
+                            rng.integers(min_prompt, max_prompt + 1)).tolist()
+               for _ in range(n_requests)]
+    shards = rng.integers(0, max(n_shards, 1), n_requests).tolist()
+    return prompts, shards
+
+
+def _metrics(stats) -> dict:
+    return {
+        "completed": stats.completed,
+        "tokens": stats.tokens,
+        "tokens_per_s": stats.tokens_per_s,
+        "throughput_qps": stats.throughput_qps,
+        "cluster_s": stats.cluster_s,
+        "serial_s": stats.serial_s,
+        "mean_active": stats.mean_active,
+        "energy_per_query_mj": stats.energy_per_query_mj,
+        "energy_reduction_vs_host": stats.energy_reduction_vs_host,
+        "link_bytes": stats.link_bytes,
+        "host_link_bytes": stats.host_link_bytes,
+        "link_reduction": stats.link_reduction,
+        "kv_reduction": stats.kv_reduction,
+        "spill_bytes": stats.spill_bytes,
+        "remote_requests": stats.remote_requests,
+    }
+
+
+def run_cluster(emit=print, n_requests: int = 8, max_new: int = 6,
+                num_slots: int = 2, max_drives: int = 2, n_shards=None,
+                seed: int = 0, policies=DRIVE_POLICIES, json_path=None,
+                prewarm: bool = True, strict: bool = True):
+    """Serve one sharded trace through every (policy, n_drives) cluster and
+    validate the scaling/locality/energy acceptance gates (see module
+    docstring).  Returns the JSON payload."""
+    import jax
+
+    from repro.config import reduced_config
+    from repro.core.energy import energy_per_query_mj
+    from repro.models import model as M
+    from repro.train.cluster_loop import ClusterEngine
+    from repro.train.serve_loop import ServeEngine
+
+    cfg = dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    if n_shards is None:
+        n_shards = max_drives
+    prompts, shards = build_trace(rng, n_requests, n_shards, cfg.vocab_size)
+
+    # the oracle AND the jit donor: one engine serially replaying the trace
+    # (replicas reuse its compiled callables — N drives, one compile)
+    ref = ServeEngine(cfg, params, max_len=64, num_slots=num_slots,
+                      prewarm=prewarm)
+    ref_tokens = [r.tokens for r in ref.generate(prompts, max_new=max_new)]
+
+    drive_counts = list(range(1, max_drives + 1))
+    emit("table,policy,n_drives,tokens_per_s,mj_per_query,mean_active,"
+         "link_mb,spill_mb,remote,link_reduction,kv_reduction,energy_vs_host")
+    runs: dict = {p: {} for p in policies}
+    identical = True
+
+    def measure(policy, n):
+        """Fresh cluster over the trace.  Every measurement — including
+        warm passes and scaling-gate re-measurements — goes through the
+        token-identity flag, the finite-throughput check, and the
+        live-vs-analytic energy gate (server_power is affine in active
+        drives, so the integral must match the Table I model exactly)."""
+        nonlocal identical
+        clu = ClusterEngine(cfg, params, n_drives=n, routing=policy,
+                            jit_donor=ref, max_len=64,
+                            num_slots=num_slots, prewarm=prewarm)
+        results = clu.generate(prompts, max_new=max_new, shard_ids=shards)
+        if [r.tokens for r in results] != ref_tokens:
+            identical = False
+        m = _metrics(clu.stats)
+        if not math.isfinite(m["tokens_per_s"]) or m["tokens_per_s"] <= 0:
+            raise RuntimeError(f"{policy}/{n} throughput is broken: "
+                               f"{m['tokens_per_s']}")
+        analytic = energy_per_query_mj(m["throughput_qps"], m["mean_active"])
+        if not math.isclose(m["energy_per_query_mj"], analytic,
+                            rel_tol=1e-6):
+            raise RuntimeError(
+                f"{policy}/{n}: live energy {m['energy_per_query_mj']:.3f}"
+                f" mJ/query != analytic {analytic:.3f}")
+        return m
+
+    for policy in policies:
+        for n in drive_counts:
+            # warm pass: this (policy, n) admission pattern hits eager
+            # gather/scatter shapes (prefill splice) the process has not
+            # compiled yet; a second, fresh cluster then measures
+            # steady-state serving — what a long-running server sees
+            measure(policy, n)
+            m = runs[policy][str(n)] = measure(policy, n)
+            emit(f"fig6_cluster,{policy},{n},{m['tokens_per_s']:.1f},"
+                 f"{m['energy_per_query_mj']:.1f},{m['mean_active']:.2f},"
+                 f"{m['link_bytes'] / 1e6:.3f},{m['spill_bytes'] / 1e6:.4f},"
+                 f"{m['remote_requests']},{m['link_reduction']:.3f},"
+                 f"{m['kv_reduction']:.3f},"
+                 f"{m['energy_reduction_vs_host']:.3f}")
+
+    if strict and "least_loaded" in policies and max_drives >= 2:
+        # a loaded CI box can flatten a wall-clock scaling measurement;
+        # re-measure (shapes are warm) before declaring a real regression
+        for attempt in range(3):
+            t1 = runs["least_loaded"]["1"]["tokens_per_s"]
+            t2 = runs["least_loaded"]["2"]["tokens_per_s"]
+            if t2 >= t1:
+                break
+            emit(f"scaling gate missed ({t1:.1f} -> {t2:.1f} tok/s), "
+                 f"re-measuring ({attempt + 1}/3)")
+            runs["least_loaded"]["1"] = measure("least_loaded", 1)
+            runs["least_loaded"]["2"] = measure("least_loaded", 2)
+        t1 = runs["least_loaded"]["1"]["tokens_per_s"]
+        t2 = runs["least_loaded"]["2"]["tokens_per_s"]
+        if t2 < t1:
+            raise RuntimeError(
+                f"least_loaded tokens/s did not scale 1→2 drives: "
+                f"{t1:.1f} -> {t2:.1f}")
+    if strict and {"data_local", "round_robin"} <= set(policies) \
+            and max_drives >= 2:
+        nd = str(max_drives)
+        local = runs["data_local"][nd]
+        rr = runs["round_robin"][nd]
+        if local["spill_bytes"] > rr["spill_bytes"] or \
+                local["link_bytes"] >= rr["link_bytes"]:
+            raise RuntimeError(
+                f"data_local moved no fewer link bytes than round_robin: "
+                f"{local['link_bytes']:.0f} vs {rr['link_bytes']:.0f} "
+                f"(spill {local['spill_bytes']:.0f} vs "
+                f"{rr['spill_bytes']:.0f})")
+    # the payload is assembled AFTER every gate (including re-measurements)
+    # so the written file can never carry a stale identity flag
+    if not identical:
+        raise RuntimeError("cluster decode diverged from the single-engine "
+                           "serial replay")
+    payload = {
+        "bench": "fig6_cluster",
+        "requests": n_requests,
+        "max_new": max_new,
+        "num_slots": num_slots,
+        "n_shards": n_shards,
+        "drive_counts": drive_counts,
+        "tokens_identical": identical,
+        "runs": runs,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        emit(f"wrote {json_path}")
+    best = max(drive_counts)
+    pol = "least_loaded" if "least_loaded" in policies else policies[0]
+    m1, mN = runs[pol]["1"], runs[pol][str(best)]
+    emit(f"cluster_scaling[{pol}]: {m1['tokens_per_s']:.1f} tok/s @1 drive "
+         f"-> {mN['tokens_per_s']:.1f} tok/s @{best} drives "
+         f"({mN['tokens_per_s'] / max(m1['tokens_per_s'], 1e-9):.2f}x); "
+         f"{m1['energy_per_query_mj']:.0f} -> "
+         f"{mN['energy_per_query_mj']:.0f} mJ/query; tokens identical: "
+         f"{identical}")
+    return payload
+
+
+def run_smoke(emit=print) -> None:
+    """CI cluster-smoke: a 2-replica engine serves a few requests for a few
+    ticks; fails on crash, broken throughput, or divergent tokens."""
+    payload = run_cluster(emit=emit, n_requests=4, max_new=3, num_slots=2,
+                          max_drives=2, policies=("least_loaded",),
+                          json_path=None, strict=False)
+    m = payload["runs"]["least_loaded"]["2"]
+    if m["completed"] != 4:
+        raise RuntimeError(f"cluster-smoke served {m['completed']}/4 requests")
+    emit("cluster-smoke: ok")
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write the cluster scaling payload + run the "
+                         "acceptance gates")
+    ap.add_argument("--json-path", default="BENCH_fig6_cluster.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI cluster-smoke: 2 replicas, a few ticks")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--num-slots", type=int, default=2)
+    ap.add_argument("--drives", type=int, default=2,
+                    help="scale from 1 to this many replica drives")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="data shards in the trace (0 = one per drive)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run_smoke()
+        return
+    run_cluster(n_requests=args.requests, max_new=args.max_new,
+                num_slots=args.num_slots, max_drives=args.drives,
+                n_shards=args.shards or None, seed=args.seed,
+                json_path=args.json_path if args.json else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,331 @@
+"""Multi-drive CSD cluster layer: routing policies over replica serve
+engines behind one queue, merged transfer stats, and live energy accounting.
+
+The paper's headline numbers come from a *cluster* of CSDs in one storage
+server (36 drives, Table I / Fig. 6), not from a single device.  This module
+is the pure/mechanical half of that tier — the serving half
+(``train.cluster_loop.ClusterEngine``) owns the replica engines and drives
+the pieces defined here:
+
+  * ``Router`` — pluggable dispatch policies over a shared request queue:
+      round_robin   cycle over accepting drives (ignores load and locality);
+      least_loaded  pick the drive with the lowest live slot/page occupancy;
+      data_local    requests carry a ``shard_id``; the router pins them to
+                    the drive holding that shard (bring compute to data),
+                    spilling to the least-loaded remote drive only when the
+                    home drive has no capacity — and every remote serve is
+                    charged the shard bytes that now have to cross the link;
+  * ``merge_ledgers`` — fold per-drive ``TransferLedger``s (plus the
+    cluster's own spill ledger) into one cluster-wide accounting;
+  * ``ClusterStats`` — the merged view: aggregate tokens/s under the
+    parallel-drives wall-clock model (per tick the cluster advances by the
+    *slowest* stepped drive — drives are independent hardware), per-tick
+    active-engine counts integrated into wall energy via
+    ``core.energy.server_power``, and the Table I metric
+    ``energy_per_query_mj`` next to the link/KV reductions.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+from repro.core import energy as E
+from repro.core.transfer import TransferLedger
+
+ROUTING_POLICIES = ("round_robin", "least_loaded", "data_local")
+
+Placement = Union[Dict[int, int], Callable[[int], int], None]
+
+
+def merge_ledgers(ledgers: Sequence[TransferLedger]) -> TransferLedger:
+    """Fold per-drive ledgers into one cluster ledger (tiers and notes sum)."""
+    out = TransferLedger()
+    for led in ledgers:
+        out.link_bytes += led.link_bytes
+        out.local_bytes += led.local_bytes
+        out.output_bytes += led.output_bytes
+        out.kv_bytes += led.kv_bytes
+        for note, n in led.notes.items():
+            out.notes[note] = out.notes.get(note, 0.0) + n
+    return out
+
+
+def shard_spill_bytes(prompt_len: int, max_new: int, d_model: int,
+                      bytes_per_el: int) -> float:
+    """Link bytes a remote serve costs: the request's resident token rows
+    (prompt + everything it will generate) live on the home drive and must
+    cross the drive-to-drive link when another drive computes on them —
+    the inverse of the paper's bring-compute-to-data placement."""
+    return float((prompt_len + max_new) * d_model * bytes_per_el)
+
+
+@dataclass
+class DriveLoad:
+    """One drive's live occupancy as the router sees it."""
+    drive_id: int
+    num_slots: int
+    active: int = 0            # slots mid-flight
+    pending: int = 0           # requests queued on the drive itself
+    page_fill: float = 0.0     # fraction of the KV page pool in use
+    accepting: bool = True     # False while draining / after a failure
+
+    @property
+    def capacity(self) -> int:
+        """Requests the drive can take before they queue behind a slot."""
+        return self.num_slots - self.active - self.pending
+
+    @property
+    def load(self) -> float:
+        """Slot occupancy, page occupancy as the tie-break (two drives with
+        the same slot count but different live KV tails differ in how soon
+        their pools backpressure)."""
+        return (self.active + self.pending) / max(self.num_slots, 1) \
+            + 0.25 * self.page_fill
+
+
+@dataclass(frozen=True)
+class Route:
+    drive_id: int
+    remote: bool = False       # data_local spill (or home drive unavailable)
+
+
+class Router:
+    """Pluggable routing policy over a set of ``DriveLoad``s.
+
+    ``pick`` returns ``None`` when no eligible drive can accept the request
+    this tick — the request stays in the shared queue (FIFO order is
+    preserved by the caller; the cluster never reorders around a blocked
+    head, which keeps replay deterministic).
+    """
+
+    def __init__(self, policy: str, n_drives: int,
+                 placement: Placement = None, spill: bool = True):
+        if policy not in ROUTING_POLICIES:
+            raise ValueError(f"routing policy must be one of "
+                             f"{ROUTING_POLICIES}, got {policy!r}")
+        if n_drives < 1:
+            raise ValueError("need at least one drive")
+        self.policy = policy
+        self.n_drives = n_drives
+        self.placement = placement
+        self.spill = spill
+        self._rr = 0
+
+    def home(self, shard_id: int) -> int:
+        """The drive holding ``shard_id``'s data (static placement)."""
+        if callable(self.placement):
+            d = self.placement(shard_id)
+        elif isinstance(self.placement, dict):
+            d = self.placement[shard_id]
+        else:
+            d = shard_id % self.n_drives
+        if not 0 <= d < self.n_drives:
+            raise ValueError(f"placement maps shard {shard_id} to drive {d} "
+                             f"outside [0, {self.n_drives})")
+        return d
+
+    def pick(self, shard_id: Optional[int],
+             loads: Sequence[DriveLoad]) -> Optional[Route]:
+        eligible = [l for l in loads if l.accepting and l.capacity > 0]
+        if not eligible:
+            return None
+        if self.policy == "round_robin":
+            return self._round_robin(shard_id, loads, eligible)
+        if self.policy == "least_loaded":
+            return self._least_loaded(shard_id, eligible)
+        return self._data_local(shard_id, loads, eligible)
+
+    # -- policies ------------------------------------------------------------
+
+    def _is_remote(self, shard_id: Optional[int], drive_id: int) -> bool:
+        """A sharded request served off its home drive pays the spill bytes
+        regardless of which policy put it there — that is exactly the cost a
+        locality-oblivious policy silently eats."""
+        return shard_id is not None and self.home(shard_id) != drive_id
+
+    def _round_robin(self, shard_id, loads, eligible) -> Route:
+        ids = {l.drive_id for l in eligible}
+        for off in range(self.n_drives):
+            d = (self._rr + off) % self.n_drives
+            if d in ids:
+                self._rr = (d + 1) % self.n_drives
+                return Route(d, remote=self._is_remote(shard_id, d))
+        raise AssertionError("unreachable: eligible was non-empty")
+
+    def _least_loaded(self, shard_id, eligible) -> Route:
+        best = min(eligible, key=lambda l: (l.load, l.drive_id))
+        return Route(best.drive_id,
+                     remote=self._is_remote(shard_id, best.drive_id))
+
+    def _data_local(self, shard_id, loads, eligible) -> Optional[Route]:
+        if shard_id is None:                 # nothing to be local to
+            return self._least_loaded(None, eligible)
+        h = self.home(shard_id)
+        home = next((l for l in loads if l.drive_id == h), None)
+        if home is not None and home.accepting and home.capacity > 0:
+            return Route(h, remote=False)
+        home_alive = home is not None and home.accepting
+        if self.spill or not home_alive:
+            # overloaded (or dead) home: serve remotely and pay the shard
+            # bytes rather than head-of-line-block the whole queue
+            return self._least_loaded(shard_id, eligible)
+        return None                          # wait for the home drive
+
+
+@dataclass
+class ClusterStats:
+    """Merged per-drive stats + the cluster's own wall-clock/energy track.
+
+    Wall-clock model: drives are independent hardware, so one cluster tick
+    costs the *maximum* of the per-drive tick times (``cluster_s``); the
+    serial sum of per-drive busy time (``serial_s``) is what one host-side
+    engine would have needed — the pair gives both the scaling curve and the
+    host baseline the energy reduction is measured against.
+
+    Energy model (paper Table I): every tick integrates
+    ``server_power(n_active_drives) * tick_s`` into ``energy_j``; because
+    ``server_power`` is affine in the active-engine count, the accumulated
+    energy equals ``server_power(mean_active) * cluster_s`` exactly, and
+    ``energy_per_query_mj`` therefore matches
+    ``core.energy.energy_per_query_mj(throughput_qps, mean_active)``.
+    """
+    drives: List = field(default_factory=list)        # per-drive ServeStats
+    spill_ledger: TransferLedger = field(default_factory=TransferLedger)
+    completed: int = 0         # requests fully served by the cluster
+    remote_requests: int = 0   # served off their shard's home drive
+    ticks: int = 0
+    cluster_s: float = 0.0     # sum over ticks of max per-drive tick time
+    serial_s: float = 0.0      # sum over ticks of SUM of per-drive times
+    energy_j: float = 0.0      # integral of server_power(n_active) dt
+    _active_dt: float = 0.0    # integral of n_active dt (for mean_active)
+
+    def record_tick(self, n_active: int, tick_s: float,
+                    tick_serial_s: Optional[float] = None) -> None:
+        """One cluster tick: ``tick_s`` is the slowest stepped drive
+        (parallel hardware), ``tick_serial_s`` the sum over stepped drives —
+        what a lone host engine replaying the same work would have paid
+        (defaults to ``tick_s``: one drive stepped)."""
+        if tick_s < 0:
+            raise ValueError("negative tick duration")
+        self.ticks += 1
+        self.cluster_s += tick_s
+        self.serial_s += tick_serial_s if tick_serial_s is not None else tick_s
+        self.energy_j += E.server_power(n_active) * tick_s
+        self._active_dt += n_active * tick_s
+
+    # -- merged transfer accounting ------------------------------------------
+
+    @property
+    def ledger(self) -> TransferLedger:
+        return merge_ledgers([d.ledger for d in self.drives]
+                             + [self.spill_ledger])
+
+    @property
+    def baseline(self) -> TransferLedger:
+        return merge_ledgers([d.baseline for d in self.drives])
+
+    @property
+    def spill_bytes(self) -> float:
+        return self.spill_ledger.link_bytes
+
+    @property
+    def link_bytes(self) -> float:
+        return self.ledger.link_bytes
+
+    @property
+    def host_link_bytes(self) -> float:
+        return self.baseline.link_bytes
+
+    @property
+    def link_reduction(self) -> float:
+        if self.host_link_bytes <= 0:
+            return 0.0
+        return max(1.0 - self.link_bytes / self.host_link_bytes, 0.0)
+
+    @property
+    def kv_reduction(self) -> float:
+        base = self.baseline.kv_bytes
+        if base <= 0:
+            return 0.0
+        return max(1.0 - self.ledger.kv_bytes / base, 0.0)
+
+    # -- aggregate serving numbers -------------------------------------------
+
+    @property
+    def tokens(self) -> int:
+        return sum(d.tokens for d in self.drives)
+
+    @property
+    def requests_admitted(self) -> int:
+        """Per-drive admissions (a failed-over request counts on each drive
+        that admitted it; ``completed`` counts global requests once)."""
+        return sum(d.requests for d in self.drives)
+
+    @property
+    def busy_s(self) -> float:
+        """Jit-only busy time summed over drives (excludes host overhead —
+        compare against ``serial_s``, which includes it on both sides)."""
+        return sum(d.prefill_s + d.decode_s for d in self.drives)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / max(self.cluster_s, 1e-9)
+
+    @property
+    def throughput_qps(self) -> float:
+        return self.completed / max(self.cluster_s, 1e-9)
+
+    # -- energy (paper Table I, live) ----------------------------------------
+
+    @property
+    def mean_active(self) -> float:
+        """Time-weighted mean number of simultaneously active drives."""
+        return self._active_dt / max(self.cluster_s, 1e-9)
+
+    @property
+    def energy_per_query_mj(self) -> float:
+        """Table I metric from the live integral: wall energy / queries."""
+        if self.completed <= 0:
+            return 0.0
+        return self.energy_j / self.completed * 1e3
+
+    @property
+    def energy_reduction_vs_host(self) -> float:
+        """Energy-per-query saving vs one host-side engine serving the same
+        workload serially at ISP-disabled wall power (``server_power(0)``)."""
+        if self.completed <= 0 or self.serial_s <= 0 or self.cluster_s <= 0:
+            return 0.0
+        e_host = E.energy_per_query_mj(self.completed / self.serial_s, 0)
+        e_cluster = self.energy_per_query_mj
+        if not math.isfinite(e_host) or e_host <= 0:
+            return 0.0
+        return 1.0 - e_cluster / e_host
+
+    # -- reporting -----------------------------------------------------------
+
+    def summary(self) -> str:
+        lines = [
+            f"cluster: {len(self.drives)} drives, {self.completed} requests, "
+            f"{self.tokens} tokens in {self.cluster_s:.2f}s parallel "
+            f"({self.tokens_per_s:.1f} tok/s; serial {self.serial_s:.2f}s)",
+            f"energy: {self.energy_per_query_mj:.1f} mJ/query at "
+            f"{self.mean_active:.2f} mean active drives "
+            f"({self.energy_reduction_vs_host:.0%} vs host-serial)",
+            f"link bytes: {self.link_bytes / 1e6:.2f} MB vs host-only "
+            f"{self.host_link_bytes / 1e6:.2f} MB "
+            f"({self.link_reduction:.0%} never crossed the link; "
+            f"{self.spill_bytes / 1e6:.3f} MB shard spill, "
+            f"{self.remote_requests} remote requests)",
+        ]
+        if self.baseline.kv_bytes > 0:
+            lines.append(f"KV bytes touched: {self.ledger.kv_bytes / 1e6:.2f}"
+                         f" MB vs dense {self.baseline.kv_bytes / 1e6:.2f} MB"
+                         f" ({self.kv_reduction:.0%} fewer KV reads)")
+        for i, d in enumerate(self.drives):
+            lines.append(
+                f"drive[{i}]: {d.requests} reqs, {d.tokens} tok, "
+                f"busy {d.prefill_s + d.decode_s:.2f}s, "
+                f"link cut {d.link_reduction:.0%}, "
+                f"KV cut {d.kv_reduction:.0%}")
+        return "\n".join(lines)

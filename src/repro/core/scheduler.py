@@ -206,10 +206,24 @@ def rebalance_shares(step_times: Dict[str, float], current_shares: Dict[str, int
         raise ValueError(
             f"cannot split {total} items across {len(step_times)} workers "
             f"with min_share={min_share}")
-    tput = {w: current_shares[w] / max(t, 1e-9) for w, t in step_times.items()}
-    z = sum(tput.values())
-    raw = {w: total * tput[w] / z for w in tput}
-    blended = {w: smoothing * raw[w] + (1 - smoothing) * current_shares[w] for w in raw}
+    # Cold-start guard: a worker that has served nothing yet reports a
+    # zero/NaN service time (a cluster replica before its first observe()).
+    # 1/t would read that as infinite throughput and hand it everything —
+    # keep the current *proportions* (settled to the exact total below, so
+    # the sum contract holds) until every worker has a real measurement.
+    if any(not math.isfinite(t) or t <= 0.0 for t in step_times.values()):
+        z = sum(current_shares[w] for w in step_times)
+        if z <= 0:
+            blended = {w: total / len(step_times) for w in step_times}
+        else:
+            blended = {w: total * current_shares[w] / z for w in step_times}
+    else:
+        tput = {w: current_shares[w] / max(t, 1e-9)
+                for w, t in step_times.items()}
+        z = sum(tput.values())
+        raw = {w: total * tput[w] / z for w in tput}
+        blended = {w: smoothing * raw[w] + (1 - smoothing) * current_shares[w]
+                   for w in raw}
     # round, then resolve the drift exactly: increments go to the workers the
     # rounding short-changed most; decrements come from the workers rounding
     # (or the min_share floor) over-paid most, never dipping below min_share.

@@ -10,6 +10,13 @@ Request sources (first match wins):
 
 Always prints the engine's per-tier throughput and the ledger's link-byte
 reduction (the paper's "data that never left the drive" counter).
+
+With ``--replicas N`` (N > 1) the requests are served by a multi-drive
+cluster instead: N replica engines behind one queue, routed per
+``--routing`` (round_robin / least_loaded / data_local); ``--shards K``
+tags request i with shard ``i % K`` so data_local has locality to exploit.
+The cluster prints per-drive AND aggregate stats, including the live
+energy-per-query integral (paper Table I).
 """
 from __future__ import annotations
 
@@ -20,7 +27,9 @@ import jax
 import numpy as np
 
 from repro.config import get_config, reduced_config
+from repro.core.cluster import ROUTING_POLICIES
 from repro.models import model as M
+from repro.train.cluster_loop import ClusterEngine
 from repro.train.serve_loop import AdmissionController, ServeEngine
 
 
@@ -75,19 +84,34 @@ def main() -> int:
     ap.add_argument("--prewarm", action="store_true",
                     help="compile decode + prefill buckets before serving "
                          "(first-request latency excludes compile time)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica drives; >1 serves through the cluster "
+                         "engine (one queue, routed dispatch)")
+    ap.add_argument("--routing", choices=ROUTING_POLICIES,
+                    default="least_loaded",
+                    help="cluster dispatch policy (with --replicas > 1)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="tag request i with shard i %% K for data_local "
+                         "routing (0 = unsharded requests)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    admission = AdmissionController(args.num_slots, host_rate=args.host_rate,
+    engine_kw = dict(max_len=args.max_len, num_slots=args.num_slots,
+                     kv_layout=args.kv_layout, page_size=args.page_size,
+                     num_pages=args.num_pages or None, k_block=args.k_block,
+                     chunk_prefill=args.chunk_prefill or None,
+                     prewarm=args.prewarm)
+    def admission():
+        return AdmissionController(args.num_slots, host_rate=args.host_rate,
                                    csd_rate=args.csd_rate, n_csds=args.csds)
-    engine = ServeEngine(cfg, params, max_len=args.max_len,
-                         num_slots=args.num_slots, admission=admission,
-                         kv_layout=args.kv_layout, page_size=args.page_size,
-                         num_pages=args.num_pages or None,
-                         k_block=args.k_block,
-                         chunk_prefill=args.chunk_prefill or None,
-                         prewarm=args.prewarm)
+
+    if args.replicas > 1:
+        engine = ClusterEngine(cfg, params, n_drives=args.replicas,
+                               routing=args.routing,
+                               admission_factory=admission, **engine_kw)
+    else:
+        engine = ServeEngine(cfg, params, admission=admission(), **engine_kw)
 
     rng = np.random.default_rng(args.seed)
     if args.trace:
@@ -109,8 +133,12 @@ def main() -> int:
         return 1
 
     t0 = time.time()
-    for prompt, max_new in requests:
-        engine.submit(prompt, max_new=max_new)
+    for i, (prompt, max_new) in enumerate(requests):
+        if args.replicas > 1:
+            shard = i % args.shards if args.shards else None
+            engine.submit(prompt, max_new=max_new, shard_id=shard)
+        else:
+            engine.submit(prompt, max_new=max_new)
     results = engine.run_until_complete()
     dt = time.time() - t0
 
@@ -120,10 +148,12 @@ def main() -> int:
           f"first: {results[0].tokens[:8]}")
     for line in engine.stats.summary().splitlines():
         print(f"[serve] {line}")
-    kv = engine.kv_stats()
-    print(f"[serve] KV[{kv['layout']}]: peak {kv['peak_kv_bytes'] / 1e6:.3f} "
-          f"MB vs dense {kv['dense_kv_bytes'] / 1e6:.3f} MB "
-          f"(page_size={kv['page_size']})")
+    kvs = engine.kv_stats()                 # cluster: one entry per drive
+    for kv in kvs if isinstance(kvs, list) else [kvs]:
+        print(f"[serve] KV[{kv['layout']}]: peak "
+              f"{kv['peak_kv_bytes'] / 1e6:.3f} MB vs dense "
+              f"{kv['dense_kv_bytes'] / 1e6:.3f} MB "
+              f"(page_size={kv['page_size']})")
     return 0
 
 

@@ -1,0 +1,300 @@
+"""Multi-drive cluster serving: N replica ``ServeEngine``s — each modeling
+one CSD drive with its own paged-KV pool, scheduler, and transfer ledger —
+behind ONE shared request queue with locality-aware routing.
+
+This is the paper's storage server (36 Solana drives in one box) applied to
+LM serving: the host keeps a single queue, a router decides which drive
+pulls each request (``core.cluster.Router``: round_robin / least_loaded /
+data_local), and the cluster's stats merge every drive's ledger plus the
+live energy integral (``core.energy.server_power`` over per-tick
+active-drive counts — Table I's wall-power accounting, finally wired into
+serving instead of only the offline benchmarks).
+
+Mechanics:
+  * one global FIFO queue; dispatch happens at tick start, at most one
+    request per free slot per drive, never reordering around a blocked head
+    (deterministic replay — a cluster serves exactly the tokens one engine
+    would);
+  * requests optionally carry a ``shard_id``.  ``data_local`` pins them to
+    the drive holding the shard; serving a sharded request anywhere else
+    (a data_local spill, or any placement by the locality-oblivious
+    policies) charges ``shard_spill_bytes`` to the cluster's spill ledger —
+    the bytes that had to cross the drive-to-drive link because compute did
+    not come to the data;
+  * every tick steps each drive that has work and records
+    ``max(per-drive tick time)`` as the cluster tick (drives are
+    independent hardware; in-process they run serially, so the max is the
+    parallel-wall-clock model) plus the active-drive count for the energy
+    integral;
+  * ``drain(d)`` stops routing to a drive and re-queues its un-prefilled
+    (still drive-queued) requests; ``fail(d)`` additionally restarts its
+    in-flight requests from their prompts on the surviving drives (greedy
+    decode is deterministic, so a restarted request still yields identical
+    tokens) and keeps the dead drive's stats merged into the cluster view;
+  * replicas share one set of jitted callables (``jit_donor``), so an
+    N-drive cluster costs one XLA compile, not N.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core.cluster import (ClusterStats, DriveLoad, Placement, Router,
+                                shard_spill_bytes)
+from repro.train.serve_loop import GenResult, ServeEngine, collect_results
+
+
+@dataclass
+class ClusterRequest:
+    rid: int                      # cluster-global request id
+    prompt: List[int]
+    max_new: int
+    shard_id: Optional[int] = None
+    spilled_bytes: float = 0.0    # spill charge of the current dispatch
+
+
+@dataclass
+class _Drive:
+    drive_id: int
+    engine: ServeEngine
+    draining: bool = False
+    failed: bool = False
+    # engine-local rid -> cluster-global rid (a request re-queued by
+    # drain/fail gets a fresh local rid on whichever drive takes it next)
+    rid_map: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def accepting(self) -> bool:
+        return not (self.draining or self.failed)
+
+    @property
+    def has_work(self) -> bool:
+        return not self.failed and \
+            (self.engine.pending > 0 or self.engine.num_active > 0)
+
+    def load(self) -> DriveLoad:
+        eng = self.engine
+        fill = 0.0
+        if eng.pager is not None and eng.pager.num_pages > 0:
+            fill = eng.pager.num_in_use / eng.pager.num_pages
+        return DriveLoad(drive_id=self.drive_id, num_slots=eng.num_slots,
+                         active=eng.num_active, pending=eng.pending,
+                         page_fill=fill, accepting=self.accepting)
+
+
+class ClusterEngine:
+    """N replica serve engines behind one queue with pluggable routing."""
+
+    def __init__(self, cfg: ModelConfig, params, n_drives: int = 2,
+                 routing: str = "least_loaded", placement: Placement = None,
+                 spill: bool = True, jit_donor: Optional[ServeEngine] = None,
+                 admission_factory=None, **engine_kw):
+        if n_drives < 1:
+            raise ValueError("need at least one drive")
+        self.cfg = cfg
+        self.router = Router(routing, n_drives, placement=placement,
+                             spill=spill)
+        self.drives: List[_Drive] = []
+        # an AdmissionController is mutable pull state — replicas must not
+        # share one; pass admission_factory to configure per-drive admission
+        if "admission" in engine_kw:
+            raise ValueError("pass admission_factory (one controller per "
+                             "drive), not a shared admission instance")
+        for d in range(n_drives):
+            donor = jit_donor if jit_donor is not None else \
+                (self.drives[0].engine if self.drives else None)
+            kw = dict(engine_kw)
+            if admission_factory is not None:
+                kw["admission"] = admission_factory()
+            eng = ServeEngine(cfg, params, jit_donor=donor, **kw)
+            self.drives.append(_Drive(drive_id=d, engine=eng))
+        self.queue: Deque[ClusterRequest] = deque()
+        self.stats = ClusterStats(
+            drives=[d.engine.stats for d in self.drives])
+        self._inflight: Dict[int, ClusterRequest] = {}
+        self._next_rid = 0
+        self._finished: List[GenResult] = []
+        self._spill_bytes_per_el = jnp.dtype(cfg.dtype).itemsize
+
+    # -- intake --------------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new: int = 32,
+               shard_id: Optional[int] = None) -> int:
+        prompt = list(prompt)
+        # reject at enqueue time what no drive can ever serve — a deferred
+        # ValueError inside _dispatch would tear down the whole run
+        self.drives[0].engine.validate_request(prompt, max_new)
+        rid = self._next_rid
+        self._next_rid += 1
+        req = ClusterRequest(rid, prompt, max_new, shard_id)
+        self._inflight[rid] = req
+        self.queue.append(req)
+        return rid
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    @property
+    def num_active(self) -> int:
+        """Slots mid-flight across live drives (same semantics as
+        ``ServeEngine.num_active``; drive-queued requests count under
+        ``in_flight``, not here)."""
+        return sum(d.engine.num_active for d in self.drives if not d.failed)
+
+    @property
+    def in_flight(self) -> int:
+        """Everything dispatched but unfinished: active slots plus requests
+        waiting in per-drive queues."""
+        return sum(d.engine.num_active + d.engine.pending
+                   for d in self.drives if not d.failed)
+
+    # -- drive lifecycle -----------------------------------------------------
+
+    def drain(self, drive_id: int) -> int:
+        """Stop routing to a drive and pull its un-prefilled requests back
+        into the shared queue (front, original order — they were dispatched
+        earliest).  In-flight slots finish normally.  Returns the number of
+        requests re-queued."""
+        d = self.drives[drive_id]
+        d.draining = True
+        return self._requeue_unprefilled(d)
+
+    def fail(self, drive_id: int) -> int:
+        """Hard drive failure: re-queue its un-prefilled requests AND
+        restart its in-flight ones from their prompts (partial output is
+        lost; greedy decode is deterministic so the retry reproduces the
+        same tokens).  The dead drive's stats stay merged in the cluster
+        view — the work it did (and the energy it burned) happened.
+        Returns the number of requests re-queued."""
+        d = self.drives[drive_id]
+        n = self._requeue_unprefilled(d)
+        retry: List[ClusterRequest] = []
+        for slot in d.engine.slots:
+            if slot.active and slot.rid in d.rid_map:
+                grid = d.rid_map.pop(slot.rid)
+                retry.append(self._inflight[grid])
+        # slots are scanned in pool order, which is refill order, not
+        # submission order — restore FIFO by global rid before requeueing
+        # (in-flight requests go ahead of the drive-queued ones
+        # _requeue_unprefilled just put back: they were dispatched earlier)
+        for req in sorted(retry, key=lambda r: r.rid, reverse=True):
+            self.queue.appendleft(req)
+        d.failed = True
+        d.draining = True
+        return n + len(retry)
+
+    def _requeue_unprefilled(self, d: _Drive) -> int:
+        """Pull everything still sitting in the drive's own queue back into
+        the shared queue's head.  These requests never touched the drive, so
+        a spill charged at their dispatch never actually crossed the link —
+        refund it (in-flight requests keep their charge: their shard bytes
+        did move)."""
+        backed: List[ClusterRequest] = []
+        while d.engine.queue:
+            local = d.engine.queue.popleft()
+            grid = d.rid_map.pop(local.rid)
+            backed.append(self._inflight[grid])
+        for req in reversed(backed):
+            if req.spilled_bytes:
+                self.stats.spill_ledger.add("link", -req.spilled_bytes,
+                                            "remote shard spill")
+                self.stats.remote_requests -= 1
+                req.spilled_bytes = 0.0
+            self.queue.appendleft(req)
+        return len(backed)
+
+    # -- dispatch + tick -----------------------------------------------------
+
+    def _dispatch(self) -> None:
+        """Route queued requests to drives, at most one per free slot, FIFO
+        (a blocked head waits; nothing is reordered around it)."""
+        while self.queue:
+            loads = [d.load() for d in self.drives]
+            route = self.router.pick(self.queue[0].shard_id, loads)
+            if route is None:
+                return
+            req = self.queue.popleft()
+            drive = self.drives[route.drive_id]
+            local = drive.engine.submit(req.prompt, max_new=req.max_new)
+            drive.rid_map[local] = req.rid
+            req.spilled_bytes = 0.0
+            if route.remote:
+                self.stats.remote_requests += 1
+                req.spilled_bytes = shard_spill_bytes(
+                    len(req.prompt), req.max_new, self.cfg.d_model,
+                    self._spill_bytes_per_el)
+                self.stats.spill_ledger.add("link", req.spilled_bytes,
+                                            "remote shard spill")
+
+    def step(self) -> List[GenResult]:
+        """One cluster tick: dispatch, then step every drive that has work.
+        The tick costs the slowest drive's step time (parallel hardware);
+        the active-drive count feeds the live energy integral."""
+        self._dispatch()
+        out: List[GenResult] = []
+        dts: List[float] = []
+        n_active = 0
+        for d in self.drives:
+            if not d.has_work:
+                continue
+            t0 = time.time()
+            finished = d.engine.step()
+            dts.append(time.time() - t0)
+            n_active += 1
+            for r in finished:
+                if r.rid not in d.rid_map:
+                    continue               # abandoned by an earlier fail()
+                grid = d.rid_map.pop(r.rid)
+                self._inflight.pop(grid, None)
+                r.rid = grid
+                r.drive = d.drive_id
+                out.append(r)
+                self.stats.completed += 1
+            # the cluster owns result delivery: drop the engine's internal
+            # copy so a long-running server doesn't accumulate one
+            # GenResult per request per drive forever
+            d.engine._finished.clear()
+        if dts:
+            self.stats.record_tick(n_active, max(dts), sum(dts))
+        self._finished.extend(out)
+        return out
+
+    def run_until_complete(self) -> List[GenResult]:
+        while self.queue or any(d.has_work for d in self.drives):
+            if self.queue and not any(d.accepting for d in self.drives) \
+                    and not any(d.has_work for d in self.drives):
+                raise RuntimeError(
+                    f"{len(self.queue)} queued requests but every drive is "
+                    f"draining/failed — nothing can serve them")
+            self.step()
+        out, self._finished = self._finished, []
+        return sorted(out, key=lambda r: r.rid)
+
+    def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
+                 shard_ids: Optional[Sequence[Optional[int]]] = None
+                 ) -> List[GenResult]:
+        """Greedy generation for a batch of prompts.  Drains the whole
+        queue; results of requests queued earlier via ``submit()`` are kept
+        for their caller, not discarded (same contract as
+        ``ServeEngine.generate``)."""
+        if shard_ids is None:
+            shard_ids = [None] * len(prompts)
+        if len(shard_ids) != len(prompts):
+            raise ValueError("shard_ids must match prompts 1:1")
+        rids = [self.submit(p, max_new=max_new, shard_id=s)
+                for p, s in zip(prompts, shard_ids)]
+        return collect_results(self, rids)
+
+    # -- reporting -----------------------------------------------------------
+
+    def kv_stats(self) -> List[Dict[str, float]]:
+        return [d.engine.kv_stats() for d in self.drives]
+
+    def summary(self) -> str:
+        return self.stats.summary()

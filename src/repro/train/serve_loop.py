@@ -79,6 +79,7 @@ class GenResult:
     decode_s: float
     rid: int = 0
     tier: str = "host"
+    drive: int = 0               # cluster serving: which replica served it
 
 
 @dataclass
@@ -267,7 +268,8 @@ class ServeEngine:
                  admission: Optional[AdmissionController] = None,
                  kv_layout: str = "paged", page_size: int = 16,
                  num_pages: Optional[int] = None, k_block: int = 8,
-                 chunk_prefill: Optional[int] = None, prewarm: bool = False):
+                 chunk_prefill: Optional[int] = None, prewarm: bool = False,
+                 jit_donor: Optional["ServeEngine"] = None):
         if kv_layout not in ("paged", "strip"):
             raise ValueError(f"kv_layout must be 'paged' or 'strip', "
                              f"got {kv_layout!r}")
@@ -286,24 +288,44 @@ class ServeEngine:
         # termination masks).  k_block=1 is the per-step host reference loop
         # every fused configuration is property-tested against.
         self.k_block = max(int(k_block), 1)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: M.decode_fn(p, c, t, pos, cfg, self.recipe))
-        self._prefill = jax.jit(
-            lambda p, b: M.prefill_fn(p, b, cfg, self.recipe))
-        # Donate the cache pools (and the per-slot decode state) to the
-        # fused block so strips/pages update in place instead of being
-        # copied every call; CPU has no donation support, so skip the
-        # warning noise there.
-        donate = (1, 2, 3, 4, 5) if jax.default_backend() != "cpu" else ()
-        self._decode_block = jax.jit(
-            lambda p, c, t, pos, alive, rem: M.decode_block_fn(
-                p, c, t, pos, alive, rem, cfg, self.recipe,
-                k_steps=self.k_block, eos_id=eos_id, max_len=max_len),
-            donate_argnums=donate)
-        self._prefill_chunk = jax.jit(
-            lambda p, c, t, qpos, last: M.prefill_chunk_fn(
-                p, c, t, qpos, last, cfg, self.recipe),
-            donate_argnums=(1,) if donate else ())
+        if jit_donor is not None:
+            # Cluster replicas share one set of jitted callables: the
+            # closures only capture static wiring (cfg/recipe/k_block/
+            # eos/max_len) and every mutable piece is an argument, so N
+            # drives cost one XLA compile instead of N — but only if the
+            # wiring is byte-identical.
+            same = (jit_donor.cfg == cfg and jit_donor.recipe is self.recipe
+                    and jit_donor.k_block == self.k_block
+                    and jit_donor.eos_id == eos_id
+                    and jit_donor.max_len == max_len)
+            if not same:
+                raise ValueError(
+                    "jit_donor wiring (cfg/recipe/k_block/eos_id/max_len) "
+                    "differs from this engine; replicas must be identical")
+            self._decode = jit_donor._decode
+            self._prefill = jit_donor._prefill
+            self._decode_block = jit_donor._decode_block
+            self._prefill_chunk = jit_donor._prefill_chunk
+        else:
+            self._decode = jax.jit(
+                lambda p, c, t, pos: M.decode_fn(p, c, t, pos, cfg,
+                                                 self.recipe))
+            self._prefill = jax.jit(
+                lambda p, b: M.prefill_fn(p, b, cfg, self.recipe))
+            # Donate the cache pools (and the per-slot decode state) to the
+            # fused block so strips/pages update in place instead of being
+            # copied every call; CPU has no donation support, so skip the
+            # warning noise there.
+            donate = (1, 2, 3, 4, 5) if jax.default_backend() != "cpu" else ()
+            self._decode_block = jax.jit(
+                lambda p, c, t, pos, alive, rem: M.decode_block_fn(
+                    p, c, t, pos, alive, rem, cfg, self.recipe,
+                    k_steps=self.k_block, eos_id=eos_id, max_len=max_len),
+                donate_argnums=donate)
+            self._prefill_chunk = jax.jit(
+                lambda p, c, t, qpos, last: M.prefill_chunk_fn(
+                    p, c, t, qpos, last, cfg, self.recipe),
+                donate_argnums=(1,) if donate else ())
         # KV layout: "paged" (default) keeps full-attention KV in fixed-size
         # pages handed out by a free-list allocator — memory and decode
         # reads track live tokens; "strip" is the dense per-slot reference
@@ -498,8 +520,11 @@ class ServeEngine:
 
     # -- request intake ------------------------------------------------------
 
-    def submit(self, prompt: Sequence[int], max_new: int = 32) -> int:
-        prompt = list(prompt)
+    def validate_request(self, prompt: Sequence[int],
+                         max_new: int = 32) -> None:
+        """Raise ValueError if this engine can never serve the request —
+        shared by ``submit`` and the cluster dispatcher (which must reject
+        a bad request at enqueue time, not mid-dispatch)."""
         if not prompt:
             raise ValueError("empty prompt")
         if len(prompt) >= self.max_len:
@@ -510,6 +535,10 @@ class ServeEngine:
             raise ValueError(
                 f"request needs {self._reservation(len(prompt), max_new)} KV "
                 f"pages but the pool only has {self.pager.num_pages}")
+
+    def submit(self, prompt: Sequence[int], max_new: int = 32) -> int:
+        prompt = list(prompt)
+        self.validate_request(prompt, max_new)
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(_Request(rid, prompt, max_new))
@@ -578,14 +607,7 @@ class ServeEngine:
         ``submit()`` are kept for their caller, not discarded.
         """
         rids = [self.submit(p, max_new) for p in prompts]
-        mine = set(rids)
-        by_rid = {}
-        for r in self.run_until_complete():
-            if r.rid in mine:
-                by_rid[r.rid] = r
-            else:                         # someone else's submit(): keep it
-                self._finished.append(r)
-        return [by_rid[r] for r in rids]
+        return collect_results(self, rids)
 
     # -- admission + prefill -------------------------------------------------
 
@@ -921,6 +943,20 @@ class ServeEngine:
             touched = dense
         self.ledger.add("kv", touched, "decode KV rows")
         self.baseline.add("kv", dense, "decode KV rows")
+
+
+def collect_results(engine, rids: List[int]) -> List[GenResult]:
+    """Drain ``engine`` and return ``rids``'s results in submission order,
+    re-appending other submitters' finished results for *their* caller —
+    the generate() contract shared by ServeEngine and ClusterEngine."""
+    mine = set(rids)
+    by_rid = {}
+    for r in engine.run_until_complete():
+        if r.rid in mine:
+            by_rid[r.rid] = r
+        else:                             # someone else's submit(): keep it
+            engine._finished.append(r)
+    return [by_rid[r] for r in rids]
 
 
 def _splice_slots(pool, pre, slot_ids: List[int], lengths: List[int],

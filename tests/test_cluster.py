@@ -1,0 +1,422 @@
+"""Multi-drive cluster tier: routing policies, ledger merging, Table I
+energy through the cluster path, drain/fail requeue, and spill accounting.
+
+Pure-math tests (router / merge / ClusterStats) are fast-marked; the
+engine-backed tests drive real replica ``ServeEngine``s and assert the
+cluster serves token-identically to a single engine."""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import reduced_config
+from repro.core.cluster import (ClusterStats, DriveLoad, Router,
+                                merge_ledgers, shard_spill_bytes)
+from repro.core.energy import energy_per_query_mj, server_power
+from repro.core.transfer import TransferLedger
+from repro.models import model as M
+from repro.train.cluster_loop import ClusterEngine
+from repro.train.serve_loop import ServeEngine, ServeStats
+
+MAX_LEN = 64
+
+
+# ---------------------------------------------------------------------------
+# pure: ledger merging
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_merge_ledgers_sums_tiers_and_notes():
+    a, b = TransferLedger(), TransferLedger()
+    a.add("link", 10.0, "prefill")
+    a.add("kv", 5.0, "decode KV rows")
+    a.add("local", 2.0)
+    b.add("link", 7.0, "prefill")
+    b.add("output", 1.0, "results")
+    b.add("kv", 3.0, "decode KV rows")
+    m = merge_ledgers([a, b])
+    assert m.link_bytes == 17.0
+    assert m.kv_bytes == 8.0
+    assert m.local_bytes == 2.0
+    assert m.output_bytes == 1.0
+    assert m.notes == {"prefill": 17.0, "decode KV rows": 8.0, "results": 1.0}
+    # inputs untouched
+    assert a.link_bytes == 10.0 and b.link_bytes == 7.0
+    assert merge_ledgers([]).link_bytes == 0.0
+
+
+@pytest.mark.fast
+def test_merged_ledger_reduction_matches_per_drive_sum():
+    stats = []
+    for chosen, base in ((10.0, 100.0), (30.0, 100.0)):
+        s = ServeStats()
+        s.ledger.add("link", chosen)
+        s.baseline.add("link", base)
+        stats.append(s)
+    cs = ClusterStats(drives=stats)
+    assert cs.link_bytes == 40.0
+    assert cs.host_link_bytes == 200.0
+    assert cs.link_reduction == pytest.approx(0.8)
+    cs.spill_ledger.add("link", 60.0, "remote shard spill")
+    assert cs.link_bytes == 100.0
+    assert cs.link_reduction == pytest.approx(0.5)
+    assert cs.spill_bytes == 60.0
+
+
+# ---------------------------------------------------------------------------
+# pure: routing policies
+# ---------------------------------------------------------------------------
+
+
+def loads(*caps, slots=2):
+    """DriveLoads with the given free capacities (active fills the rest)."""
+    return [DriveLoad(drive_id=i, num_slots=slots, active=slots - c)
+            for i, c in enumerate(caps)]
+
+
+@pytest.mark.fast
+def test_router_validates_policy_and_placement():
+    with pytest.raises(ValueError):
+        Router("fastest", 2)
+    r = Router("data_local", 2, placement={7: 5})
+    with pytest.raises(ValueError):
+        r.home(7)
+    assert Router("data_local", 3).home(7) == 1        # shard % n_drives
+
+
+@pytest.mark.fast
+def test_round_robin_cycles_and_skips_full_drives():
+    r = Router("round_robin", 3)
+    got = [r.pick(None, loads(1, 1, 1)).drive_id for _ in range(4)]
+    assert got == [0, 1, 2, 0]
+    r = Router("round_robin", 3)
+    got = [r.pick(None, loads(1, 0, 1)).drive_id for _ in range(3)]
+    assert got == [0, 2, 0]                            # drive 1 full: skipped
+    assert r.pick(None, loads(0, 0, 0)) is None        # everyone full: wait
+
+
+@pytest.mark.fast
+def test_least_loaded_uses_occupancy_and_page_fill_tiebreak():
+    r = Router("least_loaded", 3)
+    assert r.pick(None, loads(1, 2, 1)).drive_id == 1
+    tied = loads(1, 1, 1)
+    tied[0].page_fill = 0.9                            # fuller KV pool loses
+    assert r.pick(None, tied).drive_id == 1
+
+
+@pytest.mark.fast
+def test_data_local_pins_home_then_spills_when_full():
+    r = Router("data_local", 2)
+    route = r.pick(1, loads(1, 1))
+    assert (route.drive_id, route.remote) == (1, False)
+    route = r.pick(1, loads(1, 0))                     # home full -> spill
+    assert (route.drive_id, route.remote) == (0, True)
+    r = Router("data_local", 2, spill=False)
+    assert r.pick(1, loads(1, 0)) is None              # no spill: wait
+    # a dead home drive forces the spill even with spill=False
+    dead = loads(1, 1)
+    dead[1].accepting = False
+    route = r.pick(1, dead)
+    assert (route.drive_id, route.remote) == (0, True)
+    # unsharded requests fall back to least_loaded, never "remote"
+    assert r.pick(None, loads(0, 1)).remote is False
+
+
+@pytest.mark.fast
+def test_shard_spill_bytes_scales_with_request_footprint():
+    assert shard_spill_bytes(10, 6, 64, 4) == 16 * 64 * 4
+    assert shard_spill_bytes(1, 0, 8, 2) == 16
+
+
+# ---------------------------------------------------------------------------
+# pure: ClusterStats energy — all six published Table I numbers through the
+# cluster path (live integral == core.energy analytics on the same load)
+# ---------------------------------------------------------------------------
+
+TABLE1 = [
+    # (throughput qps, active ISP engines, paper mJ/query)
+    (96.0, 0, 5021.0),
+    (296.0, 36, 1662.0),
+    (579.0, 0, 832.0),
+    (1506.0, 36, 327.0),
+    (9496.0, 0, 50.8),
+    (20994.0, 36, 23.4),
+]
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("qps,n_active,paper_mj", TABLE1)
+def test_cluster_stats_reproduces_table1(qps, n_active, paper_mj):
+    stats = ClusterStats()
+    ticks, tick_s = 8, 0.25
+    for _ in range(ticks):
+        stats.record_tick(n_active, tick_s)
+    stats.completed = int(round(qps * ticks * tick_s))
+    assert stats.throughput_qps == pytest.approx(qps, rel=1e-3)
+    assert stats.mean_active == pytest.approx(n_active)
+    # the live integral must equal the analytic Table I model exactly...
+    assert stats.energy_per_query_mj == pytest.approx(
+        energy_per_query_mj(stats.throughput_qps, n_active), rel=1e-9)
+    # ...and therefore land on the published numbers
+    tol = 2.0 if paper_mj > 100 else 1.0
+    assert abs(stats.energy_per_query_mj - paper_mj) < tol
+
+
+@pytest.mark.fast
+def test_cluster_stats_energy_integral_with_varying_activity():
+    """server_power is affine in n_active, so the integral over a varying
+    activity trace equals server_power(time-weighted mean) * time."""
+    stats = ClusterStats()
+    trace = [(4, 0.5), (1, 0.25), (0, 1.0), (3, 0.25)]
+    for n, dt in trace:
+        stats.record_tick(n, dt)
+    total_t = sum(dt for _, dt in trace)
+    stats.completed = 10
+    assert stats.cluster_s == pytest.approx(total_t)
+    assert stats.energy_j == pytest.approx(
+        sum(server_power(n) * dt for n, dt in trace))
+    assert stats.energy_per_query_mj == pytest.approx(
+        energy_per_query_mj(stats.throughput_qps, stats.mean_active),
+        rel=1e-9)
+    with pytest.raises(ValueError):
+        stats.record_tick(1, -0.1)
+
+
+@pytest.mark.fast
+def test_cluster_stats_energy_reduction_vs_host():
+    """2 drives halving the wall time at marginal ISP watts must save
+    energy per query; degenerate stats must not blow up."""
+    stats = ClusterStats()
+    for _ in range(4):
+        stats.record_tick(2, 0.5, tick_serial_s=1.0)   # parallel halves wall
+    stats.completed = 8
+    assert stats.serial_s == pytest.approx(2 * stats.cluster_s)
+    e_host = energy_per_query_mj(stats.completed / stats.serial_s, 0)
+    expect = 1.0 - stats.energy_per_query_mj / e_host
+    assert stats.energy_reduction_vs_host == pytest.approx(expect)
+    assert expect > 0.4
+    assert ClusterStats().energy_reduction_vs_host == 0.0
+    assert ClusterStats().energy_per_query_mj == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine-backed: replica serving, locality, drain/fail
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def ref(cfg, params):
+    """Single engine: the serial-replay oracle AND the shared jit donor."""
+    return ServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2)
+
+
+@pytest.fixture(scope="module")
+def trace(cfg):
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (5, 11, 7, 14, 9, 6)]
+    shards = [1, 0, 1, 1, 0, 1]
+    return prompts, shards
+
+
+def make_cluster(cfg, params, ref, **kw):
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("num_slots", 2)
+    return ClusterEngine(cfg, params, jit_donor=ref, **kw)
+
+
+def test_cluster_token_identical_to_serial_replay(cfg, params, ref, trace):
+    prompts, shards = trace
+    want = [r.tokens for r in ref.generate(prompts, max_new=4)]
+    clu = make_cluster(cfg, params, ref, n_drives=2, routing="least_loaded")
+    res = clu.generate(prompts, max_new=4, shard_ids=shards)
+    assert [r.tokens for r in res] == want
+    assert sorted({r.drive for r in res}) == [0, 1]    # both drives served
+    st = clu.stats
+    assert st.completed == len(prompts)
+    assert st.tokens == sum(len(t) for t in want)
+    assert st.ticks > 0 and st.cluster_s > 0
+    assert st.serial_s >= st.cluster_s                 # parallel model
+    assert 1.0 <= st.mean_active <= 2.0
+    assert st.energy_per_query_mj == pytest.approx(
+        energy_per_query_mj(st.throughput_qps, st.mean_active), rel=1e-6)
+    assert 0.0 < st.link_reduction <= 1.0
+    assert st.kv_reduction > 0.0                       # paged replicas
+
+
+def test_data_local_pins_and_charges_spills(cfg, params, ref, trace):
+    prompts, shards = trace
+    want = [r.tokens for r in ref.generate(prompts, max_new=4)]
+    # spill disabled: every request must be served on its shard's home
+    clu = make_cluster(cfg, params, ref, n_drives=2, routing="data_local",
+                       spill=False)
+    res = clu.generate(prompts, max_new=4, shard_ids=shards)
+    assert [r.tokens for r in res] == want
+    assert all(r.drive == s % 2 for r, s in zip(res, shards))
+    assert clu.stats.spill_bytes == 0.0
+    assert clu.stats.remote_requests == 0
+    # round_robin on the same sharded trace cannot stay home
+    rr = make_cluster(cfg, params, ref, n_drives=2, routing="round_robin")
+    res = rr.generate(prompts, max_new=4, shard_ids=shards)
+    assert [r.tokens for r in res] == want
+    assert rr.stats.remote_requests > 0
+    assert rr.stats.spill_bytes > 0
+    assert rr.stats.link_bytes > clu.stats.link_bytes  # locality saved bytes
+    assert rr.stats.spill_ledger.notes.get("remote shard spill", 0.0) == \
+        pytest.approx(rr.stats.spill_bytes)
+
+
+def test_drain_requeues_unprefilled_and_stops_routing(cfg, params, ref,
+                                                      trace):
+    prompts, shards = trace
+    want = [r.tokens for r in ref.generate(prompts, max_new=4)]
+    clu = make_cluster(cfg, params, ref, n_drives=2, routing="round_robin")
+    rids = [clu.submit(p, max_new=4, shard_id=s)
+            for p, s in zip(prompts, shards)]
+    # requeue BEFORE any tick: drive 1 must never see work
+    n = clu.drain(1)
+    assert n == 0                       # nothing dispatched yet
+    res = {r.rid: r for r in clu.run_until_complete()}
+    assert sorted(res) == rids
+    assert all(res[r].drive == 0 for r in rids)
+    assert clu.stats.drives[1].requests == 0
+    assert [res[r].tokens for r in rids] == want
+
+
+def test_drain_mid_flight_requeues_backpressured_drive_queue(cfg, params,
+                                                            ref):
+    """A tiny KV page pool leaves a dispatched request un-admitted in the
+    drive's own queue (page backpressure); draining the drive must pull
+    that un-prefilled request back and finish it on the other drive."""
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 100, 6).tolist() for _ in range(3)]
+    # 6 + 40 tokens → 3 pages/request; a 4-page pool admits one at a time
+    clu = make_cluster(cfg, params, ref, n_drives=2, routing="data_local",
+                       spill=False, num_pages=4)
+    rids = [clu.submit(p, max_new=40, shard_id=1) for p in prompts]
+    clu.step()
+    # dispatch filled both drive-1 slots, but the pool admitted only one:
+    # the second sits un-prefilled in the drive's own queue
+    assert clu.stats.drives[1].requests == 1
+    assert clu.drives[1].engine.pending == 1
+    requeued = clu.drain(1)
+    assert requeued == 1
+    res = {r.rid: r for r in clu.run_until_complete()}
+    assert sorted(res) == rids
+    assert res[rids[0]].drive == 1                 # in-flight finished home
+    assert res[rids[1]].drive == 0 and res[rids[2]].drive == 0
+    assert clu.stats.remote_requests >= 2          # forced off the home
+    assert clu.stats.spill_bytes > 0
+
+
+def test_drain_refunds_spill_of_never_admitted_requests(cfg, params, ref):
+    """A remote-charged request that never left the drive's own queue moved
+    no bytes: draining the drive must refund its spill charge (in-flight
+    remote requests keep theirs — their shard bytes really crossed)."""
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, 100, 6).tolist() for _ in range(4)]
+    clu = make_cluster(cfg, params, ref, n_drives=2, routing="round_robin",
+                       num_pages=4)
+    # every request homes on drive 0; round_robin sends half remote, and
+    # the 4-page pool admits only one per drive — the rest queue un-admitted
+    rids = [clu.submit(p, max_new=40, shard_id=0) for p in prompts]
+    clu.step()
+    one_spill = shard_spill_bytes(6, 40, cfg.d_model, 4)
+    assert clu.stats.remote_requests == 2
+    assert clu.stats.spill_bytes == pytest.approx(2 * one_spill)
+    assert clu.drives[1].engine.pending == 1       # un-admitted remote
+    assert clu.drain(1) == 1
+    assert clu.stats.remote_requests == 1          # refunded
+    assert clu.stats.spill_bytes == pytest.approx(one_spill)
+    res = {r.rid: r for r in clu.run_until_complete()}
+    assert sorted(res) == rids
+    # requeued request went home to drive 0: no new charge
+    assert clu.stats.remote_requests == 1
+    assert clu.stats.spill_bytes == pytest.approx(one_spill)
+    # the cluster owns result delivery: drive engines must not leak results
+    assert all(d.engine._finished == [] for d in clu.drives)
+
+
+def test_cluster_submit_validates_like_single_engine(cfg, params, ref):
+    clu = make_cluster(cfg, params, ref, n_drives=2)
+    with pytest.raises(ValueError, match="empty"):
+        clu.submit([])
+    with pytest.raises(ValueError, match="max_len"):
+        clu.submit(list(range(MAX_LEN)))
+    assert clu.pending == 0                        # nothing half-enqueued
+
+
+def test_fail_restarts_inflight_requests(cfg, params):
+    """k_block=1 engines decode one token per tick, so a fail() lands
+    mid-flight; the restarted requests must reproduce identical tokens."""
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 100, n).tolist() for n in (5, 9, 7, 11)]
+    ref1 = ServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2, k_block=1)
+    want = [r.tokens for r in ref1.generate(prompts, max_new=6)]
+    clu = ClusterEngine(cfg, params, n_drives=2, routing="round_robin",
+                        jit_donor=ref1, max_len=MAX_LEN, num_slots=2,
+                        k_block=1)
+    rids = [clu.submit(p, max_new=6) for p in prompts]
+    clu.step()
+    clu.step()                                   # drive 1 is now mid-decode
+    assert clu.stats.drives[1].requests > 0
+    n = clu.fail(1)
+    assert n > 0                                 # in-flight work requeued
+    res = {r.rid: r for r in clu.run_until_complete()}
+    assert sorted(res) == rids
+    assert all(r.drive == 0 for r in res.values() if r.rid in rids[2:])
+    assert [res[r].tokens for r in rids] == want
+    # the dead drive's stats stay merged (its ledger bytes happened)
+    assert clu.stats.drives[1].ledger.link_bytes > 0
+    assert len(clu.stats.drives) == 2
+
+
+def test_all_drives_down_raises(cfg, params, ref):
+    clu = make_cluster(cfg, params, ref, n_drives=2)
+    clu.submit([1, 2, 3], max_new=2)
+    clu.fail(0)
+    clu.fail(1)
+    with pytest.raises(RuntimeError, match="draining/failed"):
+        clu.run_until_complete()
+
+
+def test_jit_donor_rejects_mismatched_wiring(cfg, params, ref):
+    with pytest.raises(ValueError, match="jit_donor"):
+        ServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2, k_block=2,
+                    jit_donor=ref)
+    with pytest.raises(ValueError, match="jit_donor"):
+        ServeEngine(cfg, params, max_len=32, num_slots=2, jit_donor=ref)
+
+
+def test_generate_validates_shard_ids(cfg, params, ref):
+    clu = make_cluster(cfg, params, ref, n_drives=2)
+    with pytest.raises(ValueError, match="shard_ids"):
+        clu.generate([[1, 2]], max_new=1, shard_ids=[0, 1])
+    assert not math.isnan(clu.stats.energy_per_query_mj)
+
+
+def test_cluster_generate_keeps_earlier_submissions(cfg, params, ref, rng):
+    """Same contract as ServeEngine.generate: draining the queue must not
+    discard results of requests queued earlier via submit()."""
+    clu = make_cluster(cfg, params, ref, n_drives=2)
+    p0 = rng.integers(0, cfg.vocab_size, 7).tolist()
+    rid0 = clu.submit(p0, max_new=3)
+    results = clu.generate([rng.integers(0, cfg.vocab_size, 9).tolist()],
+                           max_new=2)
+    assert len(results) == 1 and results[0].rid != rid0
+    leftover = clu.run_until_complete()
+    assert [r.rid for r in leftover] == [rid0]
+    assert len(leftover[0].tokens) == 3

@@ -1,13 +1,16 @@
 """Perf smoke (fast tier): the engine benchmark at a tiny config must run,
 produce finite non-zero throughput in both KV layouts, keep paged and strip
 token-identical, and show the paged peak-KV win — the same gate
-``scripts/ci.sh perf-smoke`` applies, wired into ``-m fast``."""
+``scripts/ci.sh perf-smoke`` applies, wired into ``-m fast``.  The cluster
+case is ``scripts/ci.sh cluster-smoke``'s gate: a 2-replica cluster must
+serve token-identically to one engine replaying the trace serially."""
 import json
 import math
 
 import pytest
 
 from benchmarks.fig5_throughput import run_engine_compare
+from benchmarks.fig6_cluster import run_cluster
 
 pytestmark = pytest.mark.fast
 
@@ -38,3 +41,24 @@ def test_engine_perf_smoke(tmp_path):
     on_disk = json.loads(out.read_text())
     assert on_disk["bench"] == "fig5_engine"
     assert on_disk["paged"]["tokens"] == payload["paged"]["tokens"]
+
+
+def test_cluster_smoke_token_identical_to_serial_replay(tmp_path):
+    """PR-4 tentpole gate: a 2-replica cluster behind one queue serves the
+    exact tokens a single engine produces replaying the same trace
+    serially, with finite throughput and a live energy-per-query that
+    matches the analytic Table I model (checked inside run_cluster)."""
+    out = tmp_path / "BENCH_fig6_cluster.json"
+    payload = run_cluster(emit=lambda _: None, n_requests=4, max_new=3,
+                          num_slots=2, max_drives=2,
+                          policies=("least_loaded",), strict=False,
+                          json_path=str(out))
+    assert payload["tokens_identical"]
+    for n in ("1", "2"):
+        m = payload["runs"]["least_loaded"][n]
+        assert m["completed"] == 4
+        assert math.isfinite(m["tokens_per_s"]) and m["tokens_per_s"] > 0
+        assert m["energy_per_query_mj"] > 0
+        assert 0.0 < m["link_reduction"] <= 1.0
+    assert payload["runs"]["least_loaded"]["2"]["mean_active"] > 1.0
+    assert json.loads(out.read_text())["bench"] == "fig6_cluster"

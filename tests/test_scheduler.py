@@ -139,6 +139,30 @@ def test_rebalance_exact_sum_or_raises(times, total, min_share):
     assert set(new) == set(times)
 
 
+def test_rebalance_cold_start_guard_keeps_current_shares():
+    """A worker with no observations yet (zero/NaN service time — e.g. a
+    cluster replica that has served nothing) must not poison the refit:
+    the current share proportions come back unchanged (settled to the
+    exact total) until every worker has data."""
+    shares = {"host": 6, "csd": 2}
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        got = rebalance_shares({"host": 0.05, "csd": bad}, shares, 8)
+        assert got == shares
+        assert got is not shares               # a copy, not an alias
+    # all-cold is equally inert
+    assert rebalance_shares({"host": 0.0, "csd": 0.0}, shares, 8) == shares
+    # the exact-sum contract holds on the guard path too (pool grew)
+    got = rebalance_shares({"host": 0.05, "csd": 0.0}, shares, 16)
+    assert got == {"host": 12, "csd": 4}
+    # infeasible totals still raise, even when cold
+    with pytest.raises(ValueError):
+        rebalance_shares({"host": 0.0, "csd": 0.0}, shares, 1)
+    # with real measurements on both workers the refit engages again
+    got = rebalance_shares({"host": 0.01, "csd": 1.0}, shares, 8,
+                           smoothing=1.0)
+    assert got["host"] > shares["host"]
+
+
 # --- incremental tick() API ---------------------------------------------------
 
 
