@@ -19,10 +19,20 @@ by 1..N replica drives under each routing policy, and every run reports
   * tokens/s scales monotonically from 1 to 2 drives under least_loaded,
   * data_local moves fewer link bytes than round_robin on the sharded
     trace,
-  * the live mJ/query matches the analytic model.
+  * the live mJ/query matches the analytic model,
+  * on a heterogeneous 2-drive cluster (``speed_factor=[1.0, 0.5]``) the
+    ``rate_aware`` policy — fed by the cluster pull scheduler's learned
+    per-drive rates — beats both ``round_robin`` and ``least_loaded``
+    tokens/s (§IV-A's batch-ratio rule, measured live),
+  * after ``drain()`` with shard re-placement, re-submitting the sharded
+    trace pays fewer link bytes than the no-replacement path (one
+    migration charge vs a per-request spill forever).
 
 ``--smoke`` is the CI cluster-smoke tier: a 2-drive engine for a few
-ticks, failing on crash or broken throughput.
+ticks, failing on crash or broken throughput.  ``--hetero --smoke`` is
+the CI hetero-smoke tier: a small heterogeneous cluster must learn the
+2x rate skew and serve token-identically; ``--hetero`` alone runs the
+full hetero gate without the homogeneous sweep.
 """
 from __future__ import annotations
 
@@ -64,35 +74,55 @@ def _metrics(stats) -> dict:
         "kv_reduction": stats.kv_reduction,
         "spill_bytes": stats.spill_bytes,
         "remote_requests": stats.remote_requests,
+        "migrated_shards": stats.migrated_shards,
+        "shard_migration_bytes": stats.shard_migration_bytes,
     }
+
+
+def _engine_metrics(clu) -> dict:
+    """Cluster-engine extras next to the stats: the pull scheduler's
+    learned per-drive rates (JSON-safe: NaN -> None) and the per-drive
+    request counts the routing produced."""
+    return {
+        "drive_rates": [None if not math.isfinite(r) else r
+                        for r in clu.drive_rates()],
+        "requests_per_drive": [d.requests for d in clu.stats.drives],
+        "speed_factor": [d.speed for d in clu.drives],
+    }
+
+
+def make_setup(seed: int = 0, num_slots: int = 2, prewarm: bool = True):
+    """Model + params + the reference engine shared by every section: the
+    serial-replay oracle AND the jit donor (N drives, one compile)."""
+    import jax
+
+    from repro.config import reduced_config
+    from repro.models import model as M
+    from repro.train.serve_loop import ServeEngine
+
+    cfg = dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    ref = ServeEngine(cfg, params, max_len=64, num_slots=num_slots,
+                      prewarm=prewarm)
+    return cfg, params, ref
 
 
 def run_cluster(emit=print, n_requests: int = 8, max_new: int = 6,
                 num_slots: int = 2, max_drives: int = 2, n_shards=None,
                 seed: int = 0, policies=DRIVE_POLICIES, json_path=None,
-                prewarm: bool = True, strict: bool = True):
+                prewarm: bool = True, strict: bool = True, setup=None):
     """Serve one sharded trace through every (policy, n_drives) cluster and
     validate the scaling/locality/energy acceptance gates (see module
     docstring).  Returns the JSON payload."""
-    import jax
-
-    from repro.config import reduced_config
     from repro.core.energy import energy_per_query_mj
-    from repro.models import model as M
     from repro.train.cluster_loop import ClusterEngine
-    from repro.train.serve_loop import ServeEngine
 
-    cfg = dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
-    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    cfg, params, ref = setup if setup is not None else \
+        make_setup(seed, num_slots, prewarm)
     rng = np.random.default_rng(seed)
     if n_shards is None:
         n_shards = max_drives
     prompts, shards = build_trace(rng, n_requests, n_shards, cfg.vocab_size)
-
-    # the oracle AND the jit donor: one engine serially replaying the trace
-    # (replicas reuse its compiled callables — N drives, one compile)
-    ref = ServeEngine(cfg, params, max_len=64, num_slots=num_slots,
-                      prewarm=prewarm)
     ref_tokens = [r.tokens for r in ref.generate(prompts, max_new=max_new)]
 
     drive_counts = list(range(1, max_drives + 1))
@@ -115,6 +145,7 @@ def run_cluster(emit=print, n_requests: int = 8, max_new: int = 6,
         if [r.tokens for r in results] != ref_tokens:
             identical = False
         m = _metrics(clu.stats)
+        m.update(_engine_metrics(clu))
         if not math.isfinite(m["tokens_per_s"]) or m["tokens_per_s"] <= 0:
             raise RuntimeError(f"{policy}/{n} throughput is broken: "
                                f"{m['tokens_per_s']}")
@@ -186,6 +217,15 @@ def run_cluster(emit=print, n_requests: int = 8, max_new: int = 6,
         "tokens_identical": identical,
         "runs": runs,
     }
+    if strict:
+        # heterogeneous + re-placement sections share the jit donor; their
+        # gates run (and can fail) before anything is written
+        payload["hetero"] = run_hetero(emit=emit, num_slots=num_slots,
+                                       seed=seed, strict=True,
+                                       setup=(cfg, params, ref))
+        payload["replacement"] = run_replacement(
+            emit=emit, num_slots=num_slots, seed=seed, strict=True,
+            setup=(cfg, params, ref))
     if json_path:
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
@@ -200,6 +240,154 @@ def run_cluster(emit=print, n_requests: int = 8, max_new: int = 6,
          f"{mN['energy_per_query_mj']:.0f} mJ/query; tokens identical: "
          f"{identical}")
     return payload
+
+
+HETERO_SPEEDS = (1.0, 0.5)
+HETERO_POLICIES = ("round_robin", "least_loaded", "rate_aware")
+
+
+def run_hetero(emit=print, n_requests: int = 32, max_new: int = 24,
+               num_slots: int = 2, seed: int = 0, strict: bool = True,
+               speed_factor=HETERO_SPEEDS, policies=HETERO_POLICIES,
+               attempts: int = 3, setup=None):
+    """Heterogeneous cluster gate (§IV-A): one drive modeled 2x slower.
+
+    ``rate_aware`` routing — driven by the cluster pull scheduler's learned
+    per-drive rates and expected-completion deferral — must beat both
+    rate-blind policies on tokens/s under the async parallel wall-clock
+    model, while every run stays token-identical to the serial replay.
+    Wall-clock gates on a shared box get best-of-``attempts``
+    re-measurement before declaring a regression."""
+    from repro.train.cluster_loop import ClusterEngine
+
+    cfg, params, ref = setup if setup is not None else \
+        make_setup(seed, num_slots, True)
+    rng = np.random.default_rng(seed + 1)
+    prompts, shards = build_trace(rng, n_requests, len(speed_factor),
+                                  cfg.vocab_size)
+    ref_tokens = [r.tokens for r in ref.generate(prompts, max_new=max_new)]
+
+    def measure(policy):
+        m = None
+        for _ in range(2):          # warm pass, then a steady-state measure
+            clu = ClusterEngine(cfg, params, n_drives=len(speed_factor),
+                                routing=policy, jit_donor=ref, max_len=64,
+                                num_slots=num_slots,
+                                speed_factor=list(speed_factor))
+            results = clu.generate(prompts, max_new=max_new,
+                                   shard_ids=shards)
+            if [r.tokens for r in results] != ref_tokens:
+                raise RuntimeError(f"hetero/{policy}: tokens diverged from "
+                                   f"the serial replay")
+            m = _metrics(clu.stats)
+            m.update(_engine_metrics(clu))
+        return m
+
+    runs = {p: measure(p) for p in policies}
+    for p, m in runs.items():
+        emit(f"fig6_hetero,{p},{m['tokens_per_s']:.1f},"
+             f"{m['requests_per_drive']},"
+             f"{[None if r is None else round(r, 1) for r in m['drive_rates']]}")
+    if strict and "rate_aware" in policies and len(policies) > 1:
+        rivals = [p for p in policies if p != "rate_aware"]
+        for attempt in range(attempts):
+            ra = runs["rate_aware"]["tokens_per_s"]
+            worst = max(runs[p]["tokens_per_s"] for p in rivals)
+            if ra > worst:
+                break
+            emit(f"hetero gate missed (rate_aware {ra:.1f} vs best rival "
+                 f"{worst:.1f} tok/s), re-measuring ({attempt + 1}/{attempts})")
+            runs = {p: measure(p) for p in policies}
+        ra = runs["rate_aware"]["tokens_per_s"]
+        for p in rivals:
+            if ra <= runs[p]["tokens_per_s"]:
+                raise RuntimeError(
+                    f"rate_aware ({ra:.1f} tok/s) did not beat {p} "
+                    f"({runs[p]['tokens_per_s']:.1f} tok/s) on the "
+                    f"speed_factor={list(speed_factor)} cluster")
+        emit(f"hetero gate: rate_aware {ra:.1f} tok/s beats "
+             + ", ".join(f"{p} {runs[p]['tokens_per_s']:.1f}"
+                         for p in rivals))
+    return {"speed_factor": list(speed_factor), "requests": n_requests,
+            "max_new": max_new, "runs": runs}
+
+
+def run_replacement(emit=print, n_requests: int = 12, max_new: int = 10,
+                    num_slots: int = 2, seed: int = 0, strict: bool = True,
+                    setup=None):
+    """Shard re-placement gate: serve a sharded trace under ``data_local``,
+    ``drain()`` one drive, re-submit the same trace.  With re-placement the
+    drained drive's shards migrate ONCE (one ``shard_bytes`` charge each);
+    without it every re-submitted request homed there spills over the link
+    forever — the re-submitted trace must therefore pay fewer link bytes
+    with re-placement than without."""
+    from repro.train.cluster_loop import ClusterEngine
+
+    cfg, params, ref = setup if setup is not None else \
+        make_setup(seed, num_slots, True)
+    rng = np.random.default_rng(seed + 2)
+    prompts, shards = build_trace(rng, n_requests, 2, cfg.vocab_size)
+    ref_tokens = [r.tokens for r in ref.generate(prompts, max_new=max_new)]
+
+    def phase_pair(replacement: bool) -> dict:
+        clu = ClusterEngine(cfg, params, n_drives=2, routing="data_local",
+                            jit_donor=ref, max_len=64, num_slots=num_slots,
+                            shard_replacement=replacement)
+        first = clu.generate(prompts, max_new=max_new, shard_ids=shards)
+        link_before = clu.stats.link_bytes
+        spill_before = clu.stats.spill_bytes
+        clu.drain(1)
+        second = clu.generate(prompts, max_new=max_new, shard_ids=shards)
+        for res in (first, second):
+            if [r.tokens for r in res] != ref_tokens:
+                raise RuntimeError("replacement phase diverged from the "
+                                   "serial replay")
+        return {
+            "resubmit_link_bytes": clu.stats.link_bytes - link_before,
+            "resubmit_spill_bytes": clu.stats.spill_bytes - spill_before,
+            "migrated_shards": clu.stats.migrated_shards,
+            "shard_migration_bytes": clu.stats.shard_migration_bytes,
+            "remote_requests": clu.stats.remote_requests,
+        }
+
+    with_rp = phase_pair(True)
+    without_rp = phase_pair(False)
+    emit(f"fig6_replacement,with,{with_rp['resubmit_link_bytes']:.0f},"
+         f"{with_rp['migrated_shards']} shards migrated")
+    emit(f"fig6_replacement,without,{without_rp['resubmit_link_bytes']:.0f},"
+         f"{without_rp['remote_requests']} remote requests")
+    if strict:
+        if with_rp["migrated_shards"] < 1:
+            raise RuntimeError("drain() migrated no shards")
+        if with_rp["resubmit_link_bytes"] >= \
+                without_rp["resubmit_link_bytes"]:
+            raise RuntimeError(
+                f"shard re-placement paid no fewer link bytes on the "
+                f"re-submitted trace: {with_rp['resubmit_link_bytes']:.0f} "
+                f"vs {without_rp['resubmit_link_bytes']:.0f} without")
+        emit(f"replacement gate: {with_rp['resubmit_link_bytes']:.0f} < "
+             f"{without_rp['resubmit_link_bytes']:.0f} link bytes")
+    return {"requests": n_requests, "max_new": max_new,
+            "with_replacement": with_rp, "without_replacement": without_rp}
+
+
+def run_hetero_smoke(emit=print) -> None:
+    """CI hetero-smoke: a small speed-skewed cluster must serve
+    token-identically, learn a rate for every drive, and rank the fast
+    drive above the slowed one."""
+    payload = run_hetero(emit=emit, n_requests=10, max_new=12,
+                         policies=("rate_aware",), strict=False)
+    m = payload["runs"]["rate_aware"]
+    if m["completed"] != 10:
+        raise RuntimeError(f"hetero-smoke served {m['completed']}/10 "
+                           f"requests")
+    rates = m["drive_rates"]
+    if any(r is None or not r > 0 for r in rates):
+        raise RuntimeError(f"pull scheduler left a drive unrated: {rates}")
+    if rates[0] <= rates[1]:
+        raise RuntimeError(f"learned rates do not reflect the 2x speed "
+                           f"skew: {rates}")
+    emit("hetero-smoke: ok")
 
 
 def run_smoke(emit=print) -> None:
@@ -222,9 +410,15 @@ def main(argv=None):
                          "acceptance gates")
     ap.add_argument("--json-path", default="BENCH_fig6_cluster.json")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI cluster-smoke: 2 replicas, a few ticks")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=6)
+                    help="CI cluster-smoke: 2 replicas, a few ticks "
+                         "(with --hetero: the hetero-smoke tier)")
+    ap.add_argument("--hetero", action="store_true",
+                    help="heterogeneous-cluster section only "
+                         "(speed_factor-skewed drives, rate_aware gate)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="trace size (default: 8; 32 with --hetero)")
+    ap.add_argument("--max-new", type=int, default=None,
+                    help="tokens per request (default: 6; 24 with --hetero)")
     ap.add_argument("--num-slots", type=int, default=2)
     ap.add_argument("--drives", type=int, default=2,
                     help="scale from 1 to this many replica drives")
@@ -232,10 +426,28 @@ def main(argv=None):
                     help="data shards in the trace (0 = one per drive)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.hetero:
+        if args.smoke:
+            run_hetero_smoke()
+        else:
+            payload = run_hetero(seed=args.seed, num_slots=args.num_slots,
+                                 n_requests=args.requests or 32,
+                                 max_new=args.max_new or 24)
+            if args.json:
+                # never clobber the committed full-payload file with a
+                # hetero-only section under the default path
+                path = "BENCH_fig6_hetero.json" \
+                    if args.json_path == "BENCH_fig6_cluster.json" \
+                    else args.json_path
+                with open(path, "w") as f:
+                    json.dump({"bench": "fig6_hetero", **payload}, f,
+                              indent=2)
+                print(f"wrote {path}")
+        return
     if args.smoke:
         run_smoke()
         return
-    run_cluster(n_requests=args.requests, max_new=args.max_new,
+    run_cluster(n_requests=args.requests or 8, max_new=args.max_new or 6,
                 num_slots=args.num_slots, max_drives=args.drives,
                 n_shards=args.shards or None, seed=args.seed,
                 json_path=args.json_path if args.json else None)

@@ -119,8 +119,22 @@ def main():
                    for _ in range(4 * n_drives)]
         shard_ids = rng.integers(0, n_drives, len(prompts)).tolist()
         clu.generate(prompts, max_new=6, shard_ids=shard_ids)
-        for line in clu.stats.summary().splitlines():
+        for line in clu.summary().splitlines():
             print(f"[cluster-engine] {line}")
+
+        # 6. heterogeneous drives: model the last drive 2x slower
+        #    (speed_factor) and let the cluster pull scheduler learn the
+        #    skew — rate_aware routing then sheds load onto the fast
+        #    drives (the paper's §IV-A batch-ratio rule, live)
+        if n_drives > 1:
+            speeds = [1.0] * (n_drives - 1) + [0.5]
+            het = ClusterEngine(cfg, params, n_drives=n_drives,
+                                routing="rate_aware", max_len=64,
+                                num_slots=2, speed_factor=speeds,
+                                jit_donor=clu.drives[0].engine)
+            het.generate(prompts, max_new=6)
+            for line in het.summary().splitlines():
+                print(f"[hetero-engine] {line}")
 
 
 if __name__ == "__main__":

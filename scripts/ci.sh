@@ -16,6 +16,10 @@
 #                               for a few ticks; fails on crash, broken
 #                               throughput, or tokens diverging from the
 #                               single-engine serial replay
+#   scripts/ci.sh hetero-smoke  heterogeneous 2-replica cluster (one drive
+#                               modeled 2x slower): the pull scheduler must
+#                               rate both drives (fast > slow) and serving
+#                               must stay token-identical to serial replay
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
@@ -28,5 +32,6 @@ case "${1:-tier1}" in
   bench-guard)   exec python -m benchmarks.fig5_throughput --engine \
                       --guard BENCH_fig5.json --guard-floor 0.8 ;;
   cluster-smoke) exec python -m benchmarks.fig6_cluster --smoke ;;
+  hetero-smoke)  exec python -m benchmarks.fig6_cluster --hetero --smoke ;;
   tier1|*)       exec python -m pytest -x -q ;;
 esac

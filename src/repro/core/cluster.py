@@ -15,6 +15,15 @@ the pieces defined here:
                     spilling to the least-loaded remote drive only when the
                     home drive has no capacity — and every remote serve is
                     charged the shard bytes that now have to cross the link;
+      rate_aware    pick the drive with the shortest *expected completion*
+                    (virtual clock + backlog / learned rate — the cluster
+                    pull scheduler's live per-drive estimates), WAITING for
+                    that drive when it is momentarily full rather than
+                    burdening a slower-but-free one: a 2x-slower drive ends
+                    up with proportionally fewer requests instead of an
+                    equal share.  Unobserved drives are tried first so
+                    every drive produces a measurement (explore, then
+                    exploit);
   * ``merge_ledgers`` — fold per-drive ``TransferLedger``s (plus the
     cluster's own spill ledger) into one cluster-wide accounting;
   * ``ClusterStats`` — the merged view: aggregate tokens/s under the
@@ -33,7 +42,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 from repro.core import energy as E
 from repro.core.transfer import TransferLedger
 
-ROUTING_POLICIES = ("round_robin", "least_loaded", "data_local")
+ROUTING_POLICIES = ("round_robin", "least_loaded", "data_local",
+                    "rate_aware")
 
 Placement = Union[Dict[int, int], Callable[[int], int], None]
 
@@ -69,11 +79,20 @@ class DriveLoad:
     pending: int = 0           # requests queued on the drive itself
     page_fill: float = 0.0     # fraction of the KV page pool in use
     accepting: bool = True     # False while draining / after a failure
+    clock: float = 0.0         # drive's virtual clock (cumulative busy time)
+    service_s: float = math.nan  # est. seconds to serve one request
+    quota: Optional[int] = None  # optional hard cap on in-flight requests
 
     @property
     def capacity(self) -> int:
-        """Requests the drive can take before they queue behind a slot."""
-        return self.num_slots - self.active - self.pending
+        """Requests the drive can take before they queue behind a slot —
+        optionally hard-capped by an explicit pull quota.  (The default
+        rate_aware gate prefers ETA deferral over this cap: one engine tick
+        costs the same whether 1 or all slots are live, so capping a slow
+        drive below its slot count wastes whole ticks on partial batches.)"""
+        cap = self.num_slots if self.quota is None \
+            else min(self.num_slots, self.quota)
+        return cap - self.active - self.pending
 
     @property
     def load(self) -> float:
@@ -111,9 +130,16 @@ class Router:
         self.placement = placement
         self.spill = spill
         self._rr = 0
+        # shard re-placement: overrides win over the static placement, so a
+        # drained/failed drive's shards can move to a survivor once instead
+        # of paying spill bytes on every future request
+        self._overrides: Dict[int, int] = {}
 
     def home(self, shard_id: int) -> int:
-        """The drive holding ``shard_id``'s data (static placement)."""
+        """The drive holding ``shard_id``'s data (re-placement overrides
+        first, then the static placement)."""
+        if shard_id in self._overrides:
+            return self._overrides[shard_id]
         if callable(self.placement):
             d = self.placement(shard_id)
         elif isinstance(self.placement, dict):
@@ -125,6 +151,14 @@ class Router:
                              f"outside [0, {self.n_drives})")
         return d
 
+    def replace_shard(self, shard_id: int, drive_id: int) -> None:
+        """Move ``shard_id``'s home to ``drive_id`` (the caller charges the
+        migrated bytes; from here on the shard is local to its new home)."""
+        if not 0 <= drive_id < self.n_drives:
+            raise ValueError(f"cannot place shard {shard_id} on drive "
+                             f"{drive_id} outside [0, {self.n_drives})")
+        self._overrides[shard_id] = drive_id
+
     def pick(self, shard_id: Optional[int],
              loads: Sequence[DriveLoad]) -> Optional[Route]:
         eligible = [l for l in loads if l.accepting and l.capacity > 0]
@@ -134,6 +168,8 @@ class Router:
             return self._round_robin(shard_id, loads, eligible)
         if self.policy == "least_loaded":
             return self._least_loaded(shard_id, eligible)
+        if self.policy == "rate_aware":
+            return self._rate_aware(shard_id, loads, eligible)
         return self._data_local(shard_id, loads, eligible)
 
     # -- policies ------------------------------------------------------------
@@ -145,18 +181,60 @@ class Router:
         return shard_id is not None and self.home(shard_id) != drive_id
 
     def _round_robin(self, shard_id, loads, eligible) -> Route:
-        ids = {l.drive_id for l in eligible}
-        for off in range(self.n_drives):
-            d = (self._rr + off) % self.n_drives
-            if d in ids:
-                self._rr = (d + 1) % self.n_drives
-                return Route(d, remote=self._is_remote(shard_id, d))
-        raise AssertionError("unreachable: eligible was non-empty")
+        # Rotate over the ELIGIBLE set: the next pick is the first eligible
+        # drive in cyclic order strictly after the last one picked.  Keying
+        # the rotation to the last picked drive (rather than stepping a raw
+        # pointer that can come to rest on an ineligible drive) keeps the
+        # distribution uniform over the survivors when a drive drains or
+        # fails mid-rotation — no survivor permanently inherits the drained
+        # drive's turns.
+        ids = sorted(l.drive_id for l in eligible)
+        d = next((i for i in ids if i >= self._rr), ids[0])
+        self._rr = (d + 1) % self.n_drives
+        return Route(d, remote=self._is_remote(shard_id, d))
 
     def _least_loaded(self, shard_id, eligible) -> Route:
         best = min(eligible, key=lambda l: (l.load, l.drive_id))
         return Route(best.drive_id,
                      remote=self._is_remote(shard_id, best.drive_id))
+
+    def _rate_aware(self, shard_id, loads, eligible) -> Optional[Route]:
+        """Shortest expected COMPLETION across the whole cluster: the
+        request goes to the drive minimizing
+
+            virtual clock + (in-flight + 1) × est. seconds per request
+
+        i.e. when the drive would actually finish it, given how far ahead
+        its clock already is and its learned service rate.  If that drive
+        has no free slot the head WAITS for it (returns None) — handing
+        the request to a slower-but-free drive would finish it later, and
+        one engine tick costs the same whether 1 or all slots are live, so
+        partially loading the slow drive wastes whole (2x-priced) ticks.
+        This deferral IS the pull quota in continuous form: a 2x-slower
+        drive's clock runs ahead 2x faster, so it ends up pulling
+        proportionally fewer requests without any hard cap.
+
+        Drives without an estimate yet are tried FIRST (they must serve
+        something before the scheduler can rate them), ordered like
+        least_loaded — a cold cluster routes exactly like least_loaded
+        until the rates arrive."""
+        cold = [l for l in eligible
+                if not (math.isfinite(l.service_s) and l.service_s > 0.0)]
+        if cold:
+            best = min(cold, key=lambda l: (l.load, l.drive_id))
+            return Route(best.drive_id,
+                         remote=self._is_remote(shard_id, best.drive_id))
+        rated = [l for l in loads if l.accepting
+                 and math.isfinite(l.service_s) and l.service_s > 0.0]
+        if not rated:
+            return self._least_loaded(shard_id, eligible)
+        best = min(rated, key=lambda l: (
+            l.clock + (l.active + l.pending + 1) * l.service_s,
+            l.load, l.drive_id))
+        if best.capacity > 0:
+            return Route(best.drive_id,
+                         remote=self._is_remote(shard_id, best.drive_id))
+        return None                # wait for the fastest-finishing drive
 
     def _data_local(self, shard_id, loads, eligible) -> Optional[Route]:
         if shard_id is None:                 # nothing to be local to
@@ -177,11 +255,17 @@ class Router:
 class ClusterStats:
     """Merged per-drive stats + the cluster's own wall-clock/energy track.
 
-    Wall-clock model: drives are independent hardware, so one cluster tick
-    costs the *maximum* of the per-drive tick times (``cluster_s``); the
-    serial sum of per-drive busy time (``serial_s``) is what one host-side
-    engine would have needed — the pair gives both the scaling curve and the
-    host baseline the energy reduction is measured against.
+    Wall-clock model: drives are independent hardware with no tick barrier
+    (the paper's pull protocol is ack-driven, not lockstep), so the engine
+    keeps one virtual clock per drive and a cluster tick costs the advance
+    of the *leading* clock — work a lagging drive does in the leader's
+    shadow adds no wall time, which is what makes rate-proportional load
+    splitting measurable (a straggler-bound per-tick max would be invariant
+    to the split).  ``cluster_s`` integrates those advances (= the leading
+    drive's cumulative busy time, the parallel makespan); the serial sum of
+    per-drive busy time (``serial_s``) is what one host-side engine would
+    have needed — the pair gives both the scaling curve and the host
+    baseline the energy reduction is measured against.
 
     Energy model (paper Table I): every tick integrates
     ``server_power(n_active_drives) * tick_s`` into ``energy_j``; because
@@ -194,6 +278,7 @@ class ClusterStats:
     spill_ledger: TransferLedger = field(default_factory=TransferLedger)
     completed: int = 0         # requests fully served by the cluster
     remote_requests: int = 0   # served off their shard's home drive
+    migrated_shards: int = 0   # shards re-placed after a drain/fail
     ticks: int = 0
     cluster_s: float = 0.0     # sum over ticks of max per-drive tick time
     serial_s: float = 0.0      # sum over ticks of SUM of per-drive times
@@ -202,10 +287,11 @@ class ClusterStats:
 
     def record_tick(self, n_active: int, tick_s: float,
                     tick_serial_s: Optional[float] = None) -> None:
-        """One cluster tick: ``tick_s`` is the slowest stepped drive
-        (parallel hardware), ``tick_serial_s`` the sum over stepped drives —
-        what a lone host engine replaying the same work would have paid
-        (defaults to ``tick_s``: one drive stepped)."""
+        """One cluster tick: ``tick_s`` is the cluster wall-clock advance
+        (the engine passes the leading virtual clock's delta; a lagging
+        drive's overlapped work may make it 0), ``tick_serial_s`` the sum
+        over stepped drives — what a lone host engine replaying the same
+        work would have paid (defaults to ``tick_s``: one drive stepped)."""
         if tick_s < 0:
             raise ValueError("negative tick duration")
         self.ticks += 1
@@ -227,7 +313,15 @@ class ClusterStats:
 
     @property
     def spill_bytes(self) -> float:
+        """All cluster-level link bytes: per-request remote-serve spills
+        plus one-time shard migrations."""
         return self.spill_ledger.link_bytes
+
+    @property
+    def shard_migration_bytes(self) -> float:
+        """Bytes moved by shard re-placement (charged once per migration,
+        instead of a per-request spill forever)."""
+        return self.spill_ledger.notes.get("shard migration", 0.0)
 
     @property
     def link_bytes(self) -> float:
@@ -316,7 +410,9 @@ class ClusterStats:
             f"{self.host_link_bytes / 1e6:.2f} MB "
             f"({self.link_reduction:.0%} never crossed the link; "
             f"{self.spill_bytes / 1e6:.3f} MB shard spill, "
-            f"{self.remote_requests} remote requests)",
+            f"{self.remote_requests} remote requests, "
+            f"{self.migrated_shards} shards migrated "
+            f"[{self.shard_migration_bytes / 1e6:.3f} MB])",
         ]
         if self.baseline.kv_bytes > 0:
             lines.append(f"KV bytes touched: {self.ledger.kv_bytes / 1e6:.2f}"

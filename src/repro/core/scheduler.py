@@ -193,6 +193,102 @@ def split_block_service(block_s: float, per_step_items: List[int]) -> List[float
     return [block_s * items / total for items in per_step_items]
 
 
+class ClusterAdmission:
+    """Cluster-wide pull scheduler: learn each drive's service rate online
+    and size per-drive pull quotas the way §IV-A sizes host-vs-CSD batches.
+
+    The paper's pull protocol lets heterogeneous nodes cooperate without
+    stragglers because each node's batch is sized to its *measured* rate.
+    PR 4's cluster kept one private ``AdmissionController`` per drive and a
+    rate-blind router, so a slow drive was handed the same share as a fast
+    one.  This controller closes that gap at the cluster level:
+
+      * ``observe()`` feeds one engine tick per drive — the tick's wall
+        time is spread over its inner decode steps with
+        ``split_block_service`` (the same attribution the single-engine
+        scheduler uses for fused K-blocks), and each step's per-item
+        service time updates an EWMA;
+      * ``rate()`` is the learned items/s estimate (NaN until observed);
+      * ``quotas()`` refits per-drive in-flight quotas with
+        ``rebalance_shares`` — share ∝ measured rate, blended against the
+        current shares, exact-sum, and protected by the cold-start guard
+        (an unobserved drive keeps the current proportions instead of
+        being read as infinitely fast).
+    """
+
+    def __init__(self, n_drives: int, alpha: float = 0.15,
+                 smoothing: float = 0.5):
+        if n_drives < 1:
+            raise ValueError("need at least one drive")
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.n_drives = n_drives
+        self.alpha = alpha
+        self.smoothing = smoothing
+        # EWMA of per-item service seconds; NaN = never observed
+        self._ewma: Dict[int, float] = {d: math.nan for d in range(n_drives)}
+        self.samples: Dict[int, int] = {d: 0 for d in range(n_drives)}
+        self._shares: Dict[int, int] = {}
+
+    def observe(self, drive: int, block_s: float,
+                per_step_items: List[int]) -> None:
+        """One engine tick: ``block_s`` of serving wall time (compile time
+        already excluded by the caller) over ``per_step_items`` items per
+        inner step."""
+        if drive not in self._ewma:
+            raise KeyError(f"unknown drive {drive}")
+        if block_s <= 0.0 or not math.isfinite(block_s):
+            return
+        for dur, items in zip(split_block_service(block_s, per_step_items),
+                              per_step_items):
+            if items <= 0 or dur <= 0.0:
+                continue
+            per_item = dur / items
+            prev = self._ewma[drive]
+            self._ewma[drive] = per_item if not math.isfinite(prev) else \
+                self.alpha * per_item + (1.0 - self.alpha) * prev
+            self.samples[drive] += 1
+
+    def rate(self, drive: int) -> float:
+        """Learned service rate in items/s; NaN until the drive has been
+        observed (callers must treat NaN as "no estimate yet")."""
+        t = self._ewma[drive]
+        return 1.0 / t if (math.isfinite(t) and t > 0.0) else math.nan
+
+    def rates(self) -> List[float]:
+        return [self.rate(d) for d in range(self.n_drives)]
+
+    def quotas(self, total: int, live: List[int]) -> Dict[int, int]:
+        """Per-drive pull quotas over the ``live`` drives, summing exactly
+        to ``total`` (the cluster's concurrency budget).
+
+        ``rebalance_shares`` wants per-worker *step times for their current
+        share*; feeding it ``share * ewma_per_item`` makes its throughput
+        estimate ``share / t = 1/ewma`` — i.e. new share ∝ measured rate,
+        which is the paper's batch-ratio rule applied across drives.  The
+        cold-start guard inside ``rebalance_shares`` keeps the current
+        proportions while any live drive is still unobserved.
+        """
+        if not live:
+            return {}
+        live = sorted(set(live))
+        if total < len(live):
+            raise ValueError(f"quota total {total} cannot cover "
+                             f"{len(live)} drives")
+        cur = {d: self._shares.get(d, 0) for d in live}
+        if sum(cur.values()) <= 0:
+            base, extra = divmod(total, len(live))
+            cur = {d: base + (1 if i < extra else 0)
+                   for i, d in enumerate(live)}
+        step_times = {d: (cur[d] * self._ewma[d]
+                          if math.isfinite(self._ewma[d]) else math.nan)
+                      for d in live}
+        new = rebalance_shares(step_times, cur, total,
+                               smoothing=self.smoothing)
+        self._shares = dict(new)
+        return new
+
+
 def rebalance_shares(step_times: Dict[str, float], current_shares: Dict[str, int],
                      total: int, smoothing: float = 0.5,
                      min_share: int = 1) -> Dict[str, int]:

@@ -13,10 +13,14 @@ reduction (the paper's "data that never left the drive" counter).
 
 With ``--replicas N`` (N > 1) the requests are served by a multi-drive
 cluster instead: N replica engines behind one queue, routed per
-``--routing`` (round_robin / least_loaded / data_local); ``--shards K``
-tags request i with shard ``i % K`` so data_local has locality to exploit.
-The cluster prints per-drive AND aggregate stats, including the live
-energy-per-query integral (paper Table I).
+``--routing`` (round_robin / least_loaded / data_local / rate_aware);
+``--shards K`` tags request i with shard ``i % K`` so data_local has
+locality to exploit, ``--speed-factor 1.0,0.5`` models heterogeneous
+drives (the pull scheduler learns the skew, rate_aware routing exploits
+it), and shard re-placement on drain/fail is on unless
+``--no-shard-replacement``.  The cluster prints per-drive AND aggregate
+stats — learned rates included — plus the live energy-per-query integral
+(paper Table I).
 """
 from __future__ import annotations
 
@@ -93,6 +97,15 @@ def main() -> int:
     ap.add_argument("--shards", type=int, default=0,
                     help="tag request i with shard i %% K for data_local "
                          "routing (0 = unsharded requests)")
+    ap.add_argument("--speed-factor", type=str, default=None,
+                    help="comma-separated per-drive speed factors (e.g. "
+                         "'1.0,0.5' models one drive 2x slower); the "
+                         "cluster pull scheduler learns the skew live and "
+                         "rate_aware routing exploits it")
+    ap.add_argument("--no-shard-replacement", action="store_true",
+                    help="keep static shard placement on drain/fail "
+                         "(every re-routed request re-pays the shard's "
+                         "link bytes instead of one migration charge)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
@@ -107,9 +120,15 @@ def main() -> int:
                                    csd_rate=args.csd_rate, n_csds=args.csds)
 
     if args.replicas > 1:
+        speed = None
+        if args.speed_factor:
+            speed = [float(s) for s in args.speed_factor.split(",")]
         engine = ClusterEngine(cfg, params, n_drives=args.replicas,
                                routing=args.routing,
-                               admission_factory=admission, **engine_kw)
+                               admission_factory=admission,
+                               speed_factor=speed,
+                               shard_replacement=not args.no_shard_replacement,
+                               **engine_kw)
     else:
         engine = ServeEngine(cfg, params, admission=admission(), **engine_kw)
 
@@ -146,7 +165,9 @@ def main() -> int:
     print(f"[serve] {args.arch}: {len(results)} requests, {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s); "
           f"first: {results[0].tokens[:8]}")
-    for line in engine.stats.summary().splitlines():
+    summary = engine.summary() if args.replicas > 1 \
+        else engine.stats.summary()
+    for line in summary.splitlines():
         print(f"[serve] {line}")
     kvs = engine.kv_stats()                 # cluster: one entry per drive
     for kv in kvs if isinstance(kvs, list) else [kvs]:

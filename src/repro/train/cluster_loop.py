@@ -21,21 +21,35 @@ Mechanics:
     policies) charges ``shard_spill_bytes`` to the cluster's spill ledger —
     the bytes that had to cross the drive-to-drive link because compute did
     not come to the data;
-  * every tick steps each drive that has work and records
-    ``max(per-drive tick time)`` as the cluster tick (drives are
-    independent hardware; in-process they run serially, so the max is the
-    parallel-wall-clock model) plus the active-drive count for the energy
-    integral;
+  * every tick steps each drive that has work; each drive's measured step
+    time advances its own *virtual clock* (drives are independent
+    hardware; in-process they run serially), and the cluster tick costs
+    the LEADING clock's advance — the async parallel-wall-clock model —
+    plus the active-drive count for the energy integral;
   * ``drain(d)`` stops routing to a drive and re-queues its un-prefilled
     (still drive-queued) requests; ``fail(d)`` additionally restarts its
     in-flight requests from their prompts on the surviving drives (greedy
     decode is deterministic, so a restarted request still yields identical
     tokens) and keeps the dead drive's stats merged into the cluster view;
   * replicas share one set of jitted callables (``jit_donor``), so an
-    N-drive cluster costs one XLA compile, not N.
+    N-drive cluster costs one XLA compile, not N;
+  * a cluster-wide pull scheduler (``core.scheduler.ClusterAdmission``)
+    learns every drive's service rate from per-tick observations
+    (``ServeEngine.last_tick``); ``rate_aware`` routing consumes the live
+    estimates and the scheduler's quotas cap each drive's in-flight share
+    ∝ its rate — the paper's host-vs-CSD batch-ratio rule applied
+    drive-vs-drive, so a ``speed_factor``-slowed drive pulls
+    proportionally less instead of straggling the cluster;
+  * per-drive measured tick times have the engine-reported lazy-compile
+    delta subtracted before they reach the wall-clock/energy accounting
+    (XLA compiles happen once per process, not once per drive tick);
+  * shards homed on a drained/failed drive are re-placed onto survivors,
+    each migration charged ONCE to the spill ledger (``shard_bytes``),
+    instead of every future request re-fetching the shard over the link.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -46,6 +60,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.core.cluster import (ClusterStats, DriveLoad, Placement, Router,
                                 shard_spill_bytes)
+from repro.core.scheduler import ClusterAdmission
 from repro.train.serve_loop import GenResult, ServeEngine, collect_results
 
 
@@ -62,6 +77,7 @@ class ClusterRequest:
 class _Drive:
     drive_id: int
     engine: ServeEngine
+    speed: float = 1.0            # modeled hardware speed (0.5 = half rate)
     draining: bool = False
     failed: bool = False
     # engine-local rid -> cluster-global rid (a request re-queued by
@@ -77,14 +93,16 @@ class _Drive:
         return not self.failed and \
             (self.engine.pending > 0 or self.engine.num_active > 0)
 
-    def load(self) -> DriveLoad:
+    def load(self, clock: float = 0.0, service_s: float = math.nan,
+             quota: Optional[int] = None) -> DriveLoad:
         eng = self.engine
         fill = 0.0
         if eng.pager is not None and eng.pager.num_pages > 0:
             fill = eng.pager.num_in_use / eng.pager.num_pages
         return DriveLoad(drive_id=self.drive_id, num_slots=eng.num_slots,
                          active=eng.num_active, pending=eng.pending,
-                         page_fill=fill, accepting=self.accepting)
+                         page_fill=fill, accepting=self.accepting,
+                         clock=clock, service_s=service_s, quota=quota)
 
 
 class ClusterEngine:
@@ -93,12 +111,30 @@ class ClusterEngine:
     def __init__(self, cfg: ModelConfig, params, n_drives: int = 2,
                  routing: str = "least_loaded", placement: Placement = None,
                  spill: bool = True, jit_donor: Optional[ServeEngine] = None,
-                 admission_factory=None, **engine_kw):
+                 admission_factory=None,
+                 speed_factor: Optional[Sequence[float]] = None,
+                 rate_alpha: float = 0.15,
+                 quota_gate: bool = False,
+                 shard_replacement: bool = True,
+                 shard_bytes: Optional[float] = None, **engine_kw):
         if n_drives < 1:
             raise ValueError("need at least one drive")
         self.cfg = cfg
         self.router = Router(routing, n_drives, placement=placement,
                              spill=spill)
+        # speed_factor models heterogeneous hardware in one process: a
+        # drive's measured tick time is divided by its factor (0.5 = an
+        # ARM-class drive twice as slow as its peers), which flows into the
+        # wall-clock model, the energy integral, and the learned rates
+        if speed_factor is None:
+            speed_factor = [1.0] * n_drives
+        speed_factor = [float(s) for s in speed_factor]
+        if len(speed_factor) != n_drives:
+            raise ValueError(f"speed_factor needs {n_drives} entries, "
+                             f"got {len(speed_factor)}")
+        if any(not (s > 0.0) or not math.isfinite(s) for s in speed_factor):
+            raise ValueError(f"speed_factor entries must be finite and "
+                             f"positive, got {speed_factor}")
         self.drives: List[_Drive] = []
         # an AdmissionController is mutable pull state — replicas must not
         # share one; pass admission_factory to configure per-drive admission
@@ -112,7 +148,29 @@ class ClusterEngine:
             if admission_factory is not None:
                 kw["admission"] = admission_factory()
             eng = ServeEngine(cfg, params, jit_donor=donor, **kw)
-            self.drives.append(_Drive(drive_id=d, engine=eng))
+            self.drives.append(_Drive(drive_id=d, engine=eng,
+                                      speed=speed_factor[d]))
+        # the cluster-wide pull scheduler: one controller learns every
+        # drive's service rate from tick observations (the paper's
+        # batch-ratio rule lifted from host-vs-CSD to drive-vs-drive).
+        # rate_aware routing consumes the live estimates via expected-
+        # completion deferral (the quota in continuous form);
+        # quota_gate=True additionally applies the discrete quotas as hard
+        # in-flight caps — off by default because one engine tick costs the
+        # same at any slot occupancy, so a sub-slot cap wastes whole ticks
+        # on partial batches (measured in the fig6 hetero benchmark)
+        self.pull = ClusterAdmission(n_drives, alpha=rate_alpha)
+        self.quota_gate = bool(quota_gate)
+        # shard re-placement: on drain/fail, move the dead drive's shards
+        # to survivors ONCE (charged below) instead of paying a per-request
+        # spill forever; shard_bytes models one shard's resident footprint
+        # (default: one full max_len context of d_model rows)
+        self.shard_replacement = bool(shard_replacement)
+        if shard_bytes is None:
+            shard_bytes = float(self.drives[0].engine.max_len * cfg.d_model
+                                * jnp.dtype(cfg.dtype).itemsize)
+        self.shard_bytes = float(shard_bytes)
+        self._seen_shards: set = set()
         self.queue: Deque[ClusterRequest] = deque()
         self.stats = ClusterStats(
             drives=[d.engine.stats for d in self.drives])
@@ -120,6 +178,14 @@ class ClusterEngine:
         self._next_rid = 0
         self._finished: List[GenResult] = []
         self._spill_bytes_per_el = jnp.dtype(cfg.dtype).itemsize
+        # per-drive virtual clocks for the async parallel-drives model:
+        # drives are independent hardware with no tick barrier (the paper's
+        # pull protocol), so the cluster wall clock is the LEADING drive's
+        # cumulative busy time, and work done in the leader's shadow is
+        # free — which is exactly why sizing each drive's share to its
+        # rate (instead of a straggler-bound per-tick max) pays off
+        self._clocks = [0.0] * n_drives
+        self._lead = 0.0              # leading clock at the last tick
 
     # -- intake --------------------------------------------------------------
 
@@ -132,6 +198,8 @@ class ClusterEngine:
         rid = self._next_rid
         self._next_rid += 1
         req = ClusterRequest(rid, prompt, max_new, shard_id)
+        if shard_id is not None:
+            self._seen_shards.add(shard_id)
         self._inflight[rid] = req
         self.queue.append(req)
         return rid
@@ -159,11 +227,14 @@ class ClusterEngine:
     def drain(self, drive_id: int) -> int:
         """Stop routing to a drive and pull its un-prefilled requests back
         into the shared queue (front, original order — they were dispatched
-        earliest).  In-flight slots finish normally.  Returns the number of
-        requests re-queued."""
+        earliest).  In-flight slots finish normally.  Shards homed on the
+        drive are re-placed onto survivors (one migration charge each).
+        Returns the number of requests re-queued."""
         d = self.drives[drive_id]
         d.draining = True
-        return self._requeue_unprefilled(d)
+        n = self._requeue_unprefilled(d)
+        self._replace_shards_of(drive_id)
+        return n
 
     def fail(self, drive_id: int) -> int:
         """Hard drive failure: re-queue its un-prefilled requests AND
@@ -187,6 +258,7 @@ class ClusterEngine:
             self.queue.appendleft(req)
         d.failed = True
         d.draining = True
+        self._replace_shards_of(drive_id)
         return n + len(retry)
 
     def _requeue_unprefilled(self, d: _Drive) -> int:
@@ -209,14 +281,68 @@ class ClusterEngine:
             self.queue.appendleft(req)
         return len(backed)
 
+    # -- shard re-placement ----------------------------------------------------
+
+    def _replace_shards_of(self, drive_id: int) -> int:
+        """Re-home every seen shard living on ``drive_id`` onto a surviving
+        drive, paying each shard's bytes over the link exactly once —
+        instead of re-fetching them on every future request (the
+        no-replacement behavior, which charges a spill per request
+        forever).  Returns the number of shards migrated."""
+        if not self.shard_replacement:
+            return 0
+        moved = 0
+        for shard in sorted(self._seen_shards):
+            if self.router.home(shard) == drive_id:
+                moved += int(self._migrate_shard(shard))
+        return moved
+
+    def _migrate_shard(self, shard_id: int) -> bool:
+        """Move one shard to the least-loaded accepting drive and charge
+        the migration to the spill ledger."""
+        survivors = [d for d in self.drives if d.accepting]
+        if not survivors:
+            return False
+        target = min(survivors, key=lambda d: (d.load().load, d.drive_id))
+        self.router.replace_shard(shard_id, target.drive_id)
+        self.stats.spill_ledger.add("link", self.shard_bytes,
+                                    "shard migration")
+        self.stats.migrated_shards += 1
+        return True
+
     # -- dispatch + tick -----------------------------------------------------
+
+    def _pull_quotas(self) -> Dict[int, int]:
+        """Per-drive in-flight quotas from the cluster pull scheduler,
+        refit over the accepting drives (share ∝ learned rate)."""
+        live = [d.drive_id for d in self.drives if d.accepting]
+        if not live:
+            return {}
+        total = sum(self.drives[i].engine.num_slots for i in live)
+        return self.pull.quotas(total, live)
 
     def _dispatch(self) -> None:
         """Route queued requests to drives, at most one per free slot, FIFO
-        (a blocked head waits; nothing is reordered around it)."""
+        (a blocked head waits; nothing is reordered around it).  Under
+        quota gating each drive's in-flight share is additionally capped by
+        the pull scheduler's rate-proportional quota."""
+        quotas = self._pull_quotas() if self.quota_gate else {}
+        # expected seconds to serve one request on drive d: mean observed
+        # tokens per completed request / the drive's learned token rate
+        mean_items = (self.stats.tokens / self.stats.completed) \
+            if self.stats.completed > 0 else math.nan
         while self.queue:
-            loads = [d.load() for d in self.drives]
-            route = self.router.pick(self.queue[0].shard_id, loads)
+            head = self.queue[0]
+            if self.shard_replacement and head.shard_id is not None and \
+                    not self.drives[self.router.home(head.shard_id)].accepting:
+                # lazy re-placement: the head's shard still points at a
+                # drained/failed drive (a shard first seen after the drain)
+                self._migrate_shard(head.shard_id)
+            loads = [d.load(clock=self._clocks[d.drive_id],
+                            service_s=mean_items / self.pull.rate(d.drive_id),
+                            quota=quotas.get(d.drive_id))
+                     for d in self.drives]
+            route = self.router.pick(head.shard_id, loads)
             if route is None:
                 return
             req = self.queue.popleft()
@@ -234,8 +360,18 @@ class ClusterEngine:
 
     def step(self) -> List[GenResult]:
         """One cluster tick: dispatch, then step every drive that has work.
-        The tick costs the slowest drive's step time (parallel hardware);
-        the active-drive count feeds the live energy integral."""
+        Each drive's step time advances its virtual clock; the tick costs
+        the leading clock's advance (async parallel hardware), and the
+        active-drive count feeds the live energy integral.
+
+        Two corrections are applied to each drive's measured wall time:
+        the engine-reported lazy-compile delta is subtracted (an XLA
+        compile happens once per process, not once per replica tick —
+        charging it would inflate ``cluster_s``/``serial_s`` and the
+        ``server_power·dt`` energy integral on a cold cluster), and the
+        remainder is divided by the drive's ``speed_factor`` (modeled
+        heterogeneous hardware).  The corrected time also feeds the pull
+        scheduler's per-drive rate estimate."""
         self._dispatch()
         out: List[GenResult] = []
         dts: List[float] = []
@@ -245,8 +381,13 @@ class ClusterEngine:
                 continue
             t0 = time.time()
             finished = d.engine.step()
-            dts.append(time.time() - t0)
+            raw = time.time() - t0
+            obs = d.engine.last_tick
+            dt = max(raw - obs.compile_s, 0.0) / d.speed
+            dts.append(dt)
+            self._clocks[d.drive_id] += dt
             n_active += 1
+            self.pull.observe(d.drive_id, dt, obs.per_step_items)
             for r in finished:
                 if r.rid not in d.rid_map:
                     continue               # abandoned by an earlier fail()
@@ -261,7 +402,13 @@ class ClusterEngine:
             # GenResult per request per drive forever
             d.engine._finished.clear()
         if dts:
-            self.stats.record_tick(n_active, max(dts), sum(dts))
+            # async parallel model: the cluster advances only when the
+            # LEADING virtual clock advances; a slower/lagging drive's step
+            # overlaps the leader and adds no wall time (no tick barrier)
+            lead = max(self._clocks)
+            tick_s = max(lead - self._lead, 0.0)
+            self._lead = lead
+            self.stats.record_tick(n_active, tick_s, sum(dts))
         self._finished.extend(out)
         return out
 
@@ -296,5 +443,16 @@ class ClusterEngine:
     def kv_stats(self) -> List[Dict[str, float]]:
         return [d.engine.kv_stats() for d in self.drives]
 
+    def drive_rates(self) -> List[float]:
+        """The pull scheduler's live per-drive service-rate estimates
+        (items/s; NaN until a drive has been observed)."""
+        return self.pull.rates()
+
     def summary(self) -> str:
-        return self.stats.summary()
+        rates = ", ".join("cold" if math.isnan(r) else f"{r:.1f}"
+                          for r in self.drive_rates())
+        speeds = ", ".join(f"{d.speed:g}" for d in self.drives)
+        return (self.stats.summary()
+                + f"\npull rates (items/s): [{rates}] at speed factors "
+                  f"[{speeds}]"
+                + (f"; quota gate on" if self.quota_gate else ""))

@@ -158,6 +158,26 @@ class ServeStats:
 
 
 @dataclass
+class TickObservation:
+    """What one ``ServeEngine.step()`` actually did — the per-tick signal
+    the cluster pull scheduler (``core.scheduler.ClusterAdmission``) and the
+    cluster wall-clock/energy accounting consume.
+
+    ``busy_s`` is serving wall time only; ``compile_s`` is the lazy-XLA
+    share of the tick (first call at a new shape), reported separately so
+    callers timing the whole tick can subtract it — compile happens once
+    per process, not once per replica drive, and must not pollute the
+    cluster's parallel wall-clock model or the energy integral.
+    """
+    busy_s: float = 0.0          # serving wall time this tick
+    compile_s: float = 0.0       # lazy jit/eager-shape compile time
+    tokens: int = 0              # tokens emitted this tick
+    steps: int = 0               # inner decode steps executed
+    per_step_items: List[int] = field(default_factory=list)
+    admitted_rids: List[int] = field(default_factory=list)
+
+
+@dataclass
 class _Request:
     rid: int
     prompt: List[int]
@@ -378,6 +398,18 @@ class ServeEngine:
         self.baseline = self.stats.baseline      # everything-to-host baseline
         self._next_rid = 0
         self._finished: List[GenResult] = []
+        # lazy-compile attribution: the first call at a new (site, shape)
+        # key is XLA compile, not serving — its wall time goes to
+        # stats.compile_s (and the tick observation) instead of
+        # prefill_s/decode_s.  prewarm() registers its keys here so a
+        # pre-warmed engine's first real calls count as serving, and
+        # replicas SHARE their donor's live set (jit executables are
+        # cached per shared callable and eager ones process-wide, so a
+        # shape any replica has run is warm for all of them).
+        self._warm_keys: set = set() if jit_donor is None \
+            else jit_donor._warm_keys
+        self._tick_compile_s = 0.0
+        self.last_tick = TickObservation()
         if prewarm:
             self.prewarm()
 
@@ -401,15 +433,20 @@ class ServeEngine:
 
     def _set_pages_rows(self, slot_ids: List[int]) -> None:
         """Copy the host table's rows for ``slot_ids`` to the device table."""
+        t0 = time.time()
         idx = jnp.asarray(slot_ids, jnp.int32)
         rows = jnp.asarray(self.page_table[np.asarray(slot_ids)])
         self._pages_dev = self._pages_dev.at[idx].set(rows)
         self._sync_pages_leaves()
+        # first call per row count: the eager scatter/broadcast executables
+        # compile — attribute that to compile_s, not the serving tick
+        self._serving_time(("set_rows", len(slot_ids)), time.time() - t0)
 
     def _sync_slot_dev(self, slots: List[_Slot]) -> None:
         """Refresh the device-side decode state of ``slots`` (post-prefill /
         post-finish) with .at[] scatters — the only host→device traffic the
         fused loop needs between blocks."""
+        t0 = time.time()
         idx = jnp.asarray([s.index for s in slots], jnp.int32)
         self._tok_dev = self._tok_dev.at[idx].set(
             jnp.asarray([s.cur_token for s in slots], jnp.int32))
@@ -420,6 +457,7 @@ class ServeEngine:
         self._rem_dev = self._rem_dev.at[idx].set(
             jnp.asarray([max(s.max_new - len(s.out), 0) for s in slots],
                         jnp.int32))
+        self._serving_time(("sync_slot", len(slots)), time.time() - t0)
 
     def _reservation(self, prompt_len: int, max_new: int) -> int:
         """Pages a request can ever need: prompt + generated tokens, capped
@@ -459,6 +497,25 @@ class ServeEngine:
                 "pool_kv_bytes": pool * per_token,
                 "dense_kv_bytes": dense_tokens * per_token}
 
+    # -- compile attribution -------------------------------------------------
+
+    def _serving_time(self, key, dt: float) -> float:
+        """Split a measured call between serving and lazy compile.
+
+        The first call at a new (site, shape) key triggers an XLA compile
+        that dwarfs the actual run (seconds vs milliseconds), so the whole
+        first-call wall time is booked as ``compile_s`` and the call
+        contributes zero serving time — undercounting one warm run per
+        shape, which is noise next to attributing a compile to serving.
+        Returns the serving time to account (``dt`` once the key is warm).
+        """
+        if key in self._warm_keys:
+            return dt
+        self._warm_keys.add(key)
+        self.stats.compile_s += dt
+        self._tick_compile_s += dt
+        return 0.0
+
     # -- jit pre-warm --------------------------------------------------------
 
     def prewarm(self) -> float:
@@ -474,6 +531,7 @@ class ServeEngine:
         if self.k_block > 1:
             # all slots start dead, so the while_loop compiles fully but
             # executes zero steps — caches stay untouched
+            self._warm_keys.add(("decode_block",))
             out = self._decode_block(self.params, self.caches, self._tok_dev,
                                      self._pos_dev, self._alive_dev,
                                      self._rem_dev)
@@ -484,6 +542,7 @@ class ServeEngine:
             # an all-inactive step: paged writes land in the scratch page;
             # strip writes stamp position 0, which every admission splice
             # resets before it is ever read
+            self._warm_keys.add(("decode",))
             nxt, caches = self._decode(
                 self.params, self.caches,
                 jnp.zeros((self.num_slots, 1), jnp.int32),
@@ -500,11 +559,13 @@ class ServeEngine:
                 batch = {"tokens": jnp.zeros((self.num_slots, padded),
                                              jnp.int32),
                          "lengths": jnp.ones((self.num_slots,), jnp.int32)}
+                self._warm_keys.add(("prefill", padded))
                 jax.block_until_ready(self._prefill(self.params, batch)[0])
         if self.chunk_prefill is not None:
             # an all-pad chunk against an empty page row: every write routes
             # to the scratch page.  The pool view is donated, so keep the
             # returned kp/vp leaves (only scratch rows changed).
+            self._warm_keys.add(("chunk",))
             view = self._chunk_view(np.full((self._maxp,), -1, np.int32))
             tokens = jnp.zeros((1, self.chunk_prefill), jnp.int32)
             qpos = jnp.full((1, self.chunk_prefill), -1, jnp.int32)
@@ -581,8 +642,13 @@ class ServeEngine:
         """One engine tick: admit into free slots, advance one chunk of any
         in-flight chunked prefill, then run one decode block (``k_block``
         fused steps on device; ``k_block=1`` is the per-step host reference
-        loop).  Returns the requests that finished during this tick."""
+        loop).  Returns the requests that finished during this tick;
+        ``last_tick`` describes the tick for the cluster scheduler."""
         n_before = len(self._finished)
+        self.last_tick = obs = TickObservation()
+        self._tick_compile_s = 0.0
+        tok0, steps0 = self.stats.tokens, self.stats.decode_steps
+        busy0 = self.stats.prefill_s + self.stats.decode_s
         self._admit()
         if self.chunk_prefill is not None:
             self._chunk_prefill_tick()
@@ -591,6 +657,13 @@ class ServeEngine:
                 self._decode_block_step()
             else:
                 self._decode_step()
+        obs.compile_s = self._tick_compile_s
+        obs.tokens = self.stats.tokens - tok0
+        obs.steps = self.stats.decode_steps - steps0
+        obs.busy_s = self.stats.prefill_s + self.stats.decode_s - busy0
+        if not obs.per_step_items and obs.tokens:
+            # prefill-only / K=1 ticks: one aggregate sample
+            obs.per_step_items = [obs.tokens]
         return self._finished[n_before:]
 
     def run_until_complete(self) -> List[GenResult]:
@@ -655,6 +728,7 @@ class ServeEngine:
                 self.page_table[slot.index, :] = -1
                 self.page_table[slot.index, : len(pages)] = pages
             admitted.append(slot)
+            self.last_tick.admitted_rids.append(req.rid)
             self.stats.requests += 1
             self.stats.tier_requests[tier] = \
                 self.stats.tier_requests.get(tier, 0) + 1
@@ -687,10 +761,23 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(tokens),
                  "lengths": jnp.asarray(lens)}
         nxt, pre_caches = self._prefill(self.params, batch)
+        jax.block_until_ready(nxt)
+        t1 = time.time()
+        # prefill jit is keyed by the bucket length; the splice runs eager
+        # gather/scatter executables keyed by the total token count — both
+        # compile lazily on first sight, and that wall time is XLA, not
+        # serving (see _serving_time)
+        dt = self._serving_time(("prefill", padded), t1 - t0)
         self.caches = _splice_slots(self.caches, pre_caches,
                                     [s.index for s in group], lengths,
                                     self.page_table, self.page_size)
-        dt = time.time() - t0
+        # the eager splice executables are shaped by BOTH the gathered src
+        # leaves (padded) and the index arrays (total tokens) — a new
+        # padded length with a previously seen total is still a fresh
+        # compile, so the key needs both
+        splice_key = ("splice", padded, sum(lengths)) \
+            if self.kv_layout == "paged" else ("splice", b, padded)
+        dt += self._serving_time(splice_key, time.time() - t1)
         self._account_prefill(sum(lengths))
         for i, s in enumerate(group):
             s.prefill_s = dt
@@ -727,7 +814,8 @@ class ServeEngine:
         nxt, new_view = self._prefill_chunk(
             self.params, view, jnp.asarray(tokens), jnp.asarray(qpos),
             jnp.asarray([real - 1], jnp.int32))
-        dt = time.time() - t0
+        jax.block_until_ready(nxt)
+        dt = self._serving_time(("chunk",), time.time() - t0)
         for g, cache in new_view.items():
             if isinstance(cache, dict) and "kp" in cache:
                 self.caches[g] = dict(self.caches[g], kp=cache["kp"],
@@ -776,7 +864,7 @@ class ServeEngine:
                                         jnp.asarray(tokens),
                                         jnp.asarray(positions))
         nxt = np.asarray(nxt)
-        dt = time.time() - t0
+        dt = self._serving_time(("decode",), time.time() - t0)
         self.stats.decode_s += dt
         self.stats.decode_steps += 1
 
@@ -821,7 +909,7 @@ class ServeEngine:
         self._alive_dev, self._rem_dev = alive, rem
         block = np.asarray(block)                 # ONE readback per block
         n_steps = int(n_steps)
-        dt = time.time() - t0
+        dt = self._serving_time(("decode_block",), time.time() - t0)
         self.stats.decode_s += dt
         self.stats.decode_steps += n_steps
 
@@ -829,7 +917,8 @@ class ServeEngine:
         # a slot emitted at step i iff its token row is >= 0 — the live
         # counts drive the proportional split of the block's wall time
         emitted = block[:n_steps, [s.index for s in active]] >= 0
-        per_step = split_block_service(dt, emitted.sum(axis=1).tolist())
+        self.last_tick.per_step_items = emitted.sum(axis=1).tolist()
+        per_step = split_block_service(dt, self.last_tick.per_step_items)
         for i in range(n_steps):
             live = [s for s in active if s.decoding]
             if not live:
@@ -863,6 +952,7 @@ class ServeEngine:
         never reserves past a slot's own max-new budget.  Admission reserved
         the worst case, so this never exhausts the pool
         (``_reservable_pages`` accounts for the unallocated tail)."""
+        t0 = time.time()
         grew = False
         ps = self.page_size
         for s in self.slots:
@@ -879,6 +969,7 @@ class ServeEngine:
                     grew = True
         if grew:
             self._sync_pages_leaves()
+            self._serving_time(("grow_pages",), time.time() - t0)
 
     def _finish(self, slot: _Slot) -> None:
         self._finished.append(GenResult(tokens=slot.out, rid=slot.rid,

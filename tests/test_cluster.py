@@ -10,6 +10,7 @@ import math
 import jax
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.config import reduced_config
 from repro.core.cluster import (ClusterStats, DriveLoad, Router,
@@ -131,6 +132,94 @@ def test_shard_spill_bytes_scales_with_request_footprint():
     assert shard_spill_bytes(1, 0, 8, 2) == 16
 
 
+@pytest.mark.fast
+def test_round_robin_uniform_over_survivors_after_drain():
+    """A drive draining mid-rotation must not skew which survivor absorbs
+    its turns: the rotation stays uniform over the eligible set."""
+    from collections import Counter
+    r = Router("round_robin", 4)
+    # advance the rotation so the pointer sits mid-cycle when drive 2 dies
+    for _ in range(6):
+        r.pick(None, loads(1, 1, 1, 1))
+    drained = loads(1, 1, 1, 1)
+    drained[2].accepting = False
+    picks = Counter(r.pick(None, drained).drive_id for _ in range(300))
+    assert set(picks) == {0, 1, 3}
+    assert all(n == 100 for n in picks.values())       # exactly uniform
+    # same when the ineligibility comes from a FULL drive instead
+    r = Router("round_robin", 3)
+    picks = Counter(r.pick(None, loads(1, 0, 1)).drive_id
+                    for _ in range(200))
+    assert picks[0] == picks[2] == 100
+
+
+@pytest.mark.fast
+def test_driveload_quota_caps_capacity():
+    l = DriveLoad(drive_id=0, num_slots=4, active=1, pending=1)
+    assert l.capacity == 2
+    l.quota = 3                                        # cap below slots
+    assert l.capacity == 1
+    l.quota = 9                                        # slack cap: slots win
+    assert l.capacity == 2
+
+
+@pytest.mark.fast
+def test_rate_aware_explores_cold_drives_first():
+    """Drives without a rate estimate are routed to first (they must serve
+    something before the scheduler can rate them), in least_loaded order."""
+    r = Router("rate_aware", 2)
+    cold = loads(1, 1)
+    assert r.pick(None, cold).drive_id == 0
+    cold[0].service_s = 0.5                            # drive 1 still cold
+    cold[0].clock = 0.0
+    assert r.pick(None, cold).drive_id == 1
+
+
+@pytest.mark.fast
+def test_rate_aware_routes_by_expected_completion_and_defers():
+    """Rated drives: the request goes to the earliest expected completion
+    (clock + backlog x service time); when that drive is full the head
+    WAITS instead of burdening the slower drive."""
+    r = Router("rate_aware", 2)
+
+    def rated(fast_busy, slow_busy, slots=2):
+        ls = loads(slots - fast_busy, slots - slow_busy, slots=slots)
+        ls[0].service_s, ls[0].clock = 0.1, 0.0        # fast drive
+        ls[1].service_s, ls[1].clock = 0.2, 0.0        # 2x slower
+        return ls
+
+    # both idle: fast drive finishes sooner
+    assert r.pick(None, rated(0, 0)).drive_id == 0
+    # fast has 1 in flight: ETA 0.2 vs slow idle 0.2 — tie broken on load,
+    # the slow drive gets its exploratory share
+    assert r.pick(None, rated(1, 0)).drive_id == 1
+    # fast FULL, slow idle: waiting for the fast drive (2+1)*0.1 = 0.3 is
+    # still later than slow (0+1)*0.2 = 0.2 -> slow serves it
+    assert r.pick(None, rated(2, 0)).drive_id == 1
+    # fast full and far ahead of a busy slow drive: defer for the fast one
+    ls = rated(2, 1)
+    ls[1].clock = 1.0                                  # slow clock is ahead
+    assert r.pick(None, ls) is None
+    # a draining fast drive can't be waited for: the slow one serves
+    ls[0].accepting = False
+    got = r.pick(None, ls)
+    assert got is not None and got.drive_id == 1
+
+
+@pytest.mark.fast
+def test_router_replace_shard_overrides_home():
+    r = Router("data_local", 3)
+    assert r.home(4) == 1                              # static: shard % 3
+    r.replace_shard(4, 2)
+    assert r.home(4) == 2                              # override wins
+    route = r.pick(4, loads(1, 1, 1))
+    assert (route.drive_id, route.remote) == (2, False)
+    with pytest.raises(ValueError):
+        r.replace_shard(4, 3)                          # outside the cluster
+    # other shards keep the static placement
+    assert r.home(1) == 1
+
+
 # ---------------------------------------------------------------------------
 # pure: ClusterStats energy — all six published Table I numbers through the
 # cluster path (live integral == core.energy analytics on the same load)
@@ -224,6 +313,13 @@ def ref(cfg, params):
 
 
 @pytest.fixture(scope="module")
+def ref_k1(cfg, params):
+    """k_block=1 oracle/donor: one decode step per tick, so drain/fail
+    events land mid-flight deterministically."""
+    return ServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2, k_block=1)
+
+
+@pytest.fixture(scope="module")
 def trace(cfg):
     rng = np.random.default_rng(3)
     prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
@@ -300,12 +396,14 @@ def test_drain_mid_flight_requeues_backpressured_drive_queue(cfg, params,
                                                             ref):
     """A tiny KV page pool leaves a dispatched request un-admitted in the
     drive's own queue (page backpressure); draining the drive must pull
-    that un-prefilled request back and finish it on the other drive."""
+    that un-prefilled request back and finish it on the other drive.
+    (Re-placement is off: this test pins the per-request spill economics
+    of a static placement; the replacement path has its own tests.)"""
     rng = np.random.default_rng(5)
     prompts = [rng.integers(0, 100, 6).tolist() for _ in range(3)]
     # 6 + 40 tokens → 3 pages/request; a 4-page pool admits one at a time
     clu = make_cluster(cfg, params, ref, n_drives=2, routing="data_local",
-                       spill=False, num_pages=4)
+                       spill=False, num_pages=4, shard_replacement=False)
     rids = [clu.submit(p, max_new=40, shard_id=1) for p in prompts]
     clu.step()
     # dispatch filled both drive-1 slots, but the pool admitted only one:
@@ -420,3 +518,163 @@ def test_cluster_generate_keeps_earlier_submissions(cfg, params, ref, rng):
     leftover = clu.run_until_complete()
     assert [r.rid for r in leftover] == [rid0]
     assert len(leftover[0].tokens) == 3
+
+
+# ---------------------------------------------------------------------------
+# cluster pull scheduler: heterogeneous rates, speed_factor, shard
+# re-placement, spill conservation, compile-free tick accounting
+# ---------------------------------------------------------------------------
+
+
+def test_speed_factor_validated_and_learned(cfg, params, ref, trace):
+    """speed_factor must be shape/value-checked, flow into the learned
+    per-drive rates (the modeled 2x-slower drive rates lower), and leave
+    serving token-identical."""
+    with pytest.raises(ValueError, match="speed_factor"):
+        ClusterEngine(cfg, params, n_drives=2, jit_donor=ref,
+                      max_len=MAX_LEN, num_slots=2, speed_factor=[1.0])
+    with pytest.raises(ValueError, match="speed_factor"):
+        ClusterEngine(cfg, params, n_drives=2, jit_donor=ref,
+                      max_len=MAX_LEN, num_slots=2, speed_factor=[1.0, 0.0])
+    prompts, shards = trace
+    want = [r.tokens for r in ref.generate(prompts, max_new=8)]
+    clu = make_cluster(cfg, params, ref, n_drives=2, routing="round_robin",
+                       speed_factor=[1.0, 0.5])
+    res = clu.generate(prompts, max_new=8, shard_ids=shards)
+    assert [r.tokens for r in res] == want
+    r0, r1 = clu.drive_rates()
+    assert math.isfinite(r0) and math.isfinite(r1)
+    assert r0 > r1                     # the slowed drive rates lower
+    assert clu.summary()               # rates render without blowing up
+
+
+def test_drain_replaces_shards_once_and_saves_link_bytes(cfg, params, ref):
+    """After drain(), re-submitting a trace pinned to the drained drive's
+    shard must pay ONE migration charge instead of a per-request spill —
+    strictly fewer link bytes than the no-replacement path."""
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, 100, 6).tolist() for _ in range(4)]
+    one_req = shard_spill_bytes(6, 6, cfg.d_model, 4)
+    shard_cost = 2.5 * one_req         # pays off after 3 re-routed requests
+
+    def serve_after_drain(replacement):
+        clu = make_cluster(cfg, params, ref, n_drives=2,
+                           routing="data_local", spill=False,
+                           shard_replacement=replacement,
+                           shard_bytes=shard_cost)
+        first = clu.generate(prompts, max_new=6, shard_ids=[1] * 4)
+        clu.drain(1)
+        before = clu.stats.link_bytes
+        second = clu.generate(prompts, max_new=6, shard_ids=[1] * 4)
+        assert [r.tokens for r in first] == [r.tokens for r in second]
+        assert all(r.drive == 0 for r in second)
+        return clu, clu.stats.link_bytes - before
+
+    with_rp, paid_with = serve_after_drain(True)
+    without_rp, paid_without = serve_after_drain(False)
+    # one migration, charged exactly once, replacing ALL per-request spills
+    assert with_rp.stats.migrated_shards == 1
+    assert with_rp.stats.shard_migration_bytes == pytest.approx(shard_cost)
+    assert with_rp.stats.remote_requests == 0
+    assert without_rp.stats.migrated_shards == 0
+    assert without_rp.stats.remote_requests == 4
+    assert without_rp.stats.spill_bytes == pytest.approx(4 * one_req)
+    assert paid_with < paid_without
+    # with no accepting survivor left (drive 1 already drained), a further
+    # drain has nowhere to move the shard — no phantom charge
+    with_rp.drain(0)
+    assert with_rp.router.home(1) == 0
+    assert with_rp.stats.migrated_shards == 1
+
+
+def test_cold_cluster_energy_matches_warm(cfg, params):
+    """The bugfix gate: first-use XLA compiles (decode block, prefill
+    buckets, eager splice shapes) must NOT inflate the cluster wall clock
+    or the server_power*dt energy integral — a cold cluster's mJ/query has
+    to land near a warm one's despite seconds of lazy compile."""
+    rng = np.random.default_rng(17)
+    # enough requests that steady-state (non-compiling) ticks dominate the
+    # integral once the first waves have eaten the lazy compiles
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (5, 9, 12, 7, 6, 11, 8, 10)]
+    # fresh jit closures (no donor): this cluster really compiles lazily
+    cold = ClusterEngine(cfg, params, n_drives=2, routing="least_loaded",
+                         max_len=MAX_LEN, num_slots=2)
+    cold_res = cold.generate(prompts, max_new=8)
+    compile_s = sum(d.engine.stats.compile_s for d in cold.drives)
+    assert compile_s > 0.5             # the compiles really happened...
+    assert cold.stats.cluster_s < compile_s  # ...but never hit the clock
+    warm = ClusterEngine(cfg, params, n_drives=2, routing="least_loaded",
+                         jit_donor=cold.drives[0].engine, max_len=MAX_LEN,
+                         num_slots=2)
+    warm_res = warm.generate(prompts, max_new=8)
+    assert [r.tokens for r in cold_res] == [r.tokens for r in warm_res]
+    cold_mj = cold.stats.energy_per_query_mj
+    warm_mj = warm.stats.energy_per_query_mj
+    assert warm_mj > 0 and cold_mj > 0
+    # without the compile exclusion the cold integral lands ~100x high
+    # (seconds of XLA per tick vs milliseconds of serving); a generous
+    # band absorbs shared-box wall-clock noise while catching the bug
+    assert cold_mj < 5.0 * warm_mj
+    assert cold_mj > warm_mj / 10.0
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 40))
+def test_spill_ledger_conserved_under_drain_fail(cfg, params, ref_k1, seed):
+    """Property: net 'remote shard spill' ledger bytes equal the spill
+    bytes of remote dispatches that were ACTUALLY admitted to a drive
+    (bytes that really crossed the link), under randomized routing,
+    sharding, page backpressure, and drain/fail sequences — every refund
+    path must give back exactly what was never moved."""
+    rng = np.random.default_rng(seed)
+    policy = ("round_robin", "least_loaded",
+              "data_local", "rate_aware")[seed % 4]
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).tolist()
+               for n in rng.integers(4, 9, 8)]
+    shards = [int(s) if s >= 0 else None
+              for s in rng.integers(-1, 3, 8)]
+    clu = ClusterEngine(cfg, params, n_drives=3, routing=policy,
+                        jit_donor=ref_k1, max_len=MAX_LEN, num_slots=2,
+                        k_block=1, page_size=4, num_pages=6)
+    moved = {"bytes": 0.0, "remote": 0}
+    for d in clu.drives:
+        def stepped(d=d, orig=d.engine.step):
+            res = orig()
+            # ground truth, observed independently of the ledger: a
+            # request's shard bytes cross the link when a remote-charged
+            # dispatch is ADMITTED into a slot (prefill starts)
+            for local in d.engine.last_tick.admitted_rids:
+                req = clu._inflight[d.rid_map[local]]
+                moved["bytes"] += req.spilled_bytes
+                moved["remote"] += req.spilled_bytes > 0
+            return res
+        d.engine.step = stepped
+    rids = [clu.submit(p, max_new=3, shard_id=s)
+            for p, s in zip(prompts, shards)]
+    # random drain/fail schedule on drives 1 and 2 (0 stays up)
+    events = []
+    for drive in (1, 2):
+        if rng.random() < 0.7:
+            events.append((int(rng.integers(0, 6)),
+                           "fail" if rng.random() < 0.5 else "drain", drive))
+    tick = 0
+    while clu.queue or any(d.has_work for d in clu.drives):
+        for when, kind, drive in events:
+            if when == tick:
+                getattr(clu, kind)(drive)
+        clu.step()
+        tick += 1
+        assert tick < 500
+    res = {r.rid: r for r in clu.run_until_complete()}
+    assert sorted(res) == rids
+    want = [r.tokens for r in ref_k1.generate(prompts, max_new=3)]
+    assert [res[r].tokens for r in rids] == want
+    st_ = clu.stats
+    assert st_.spill_ledger.notes.get("remote shard spill", 0.0) == \
+        pytest.approx(moved["bytes"])
+    assert st_.remote_requests == moved["remote"]
+    assert st_.shard_migration_bytes == \
+        pytest.approx(st_.migrated_shards * clu.shard_bytes)
+    assert st_.spill_bytes == pytest.approx(
+        moved["bytes"] + st_.shard_migration_bytes)

@@ -262,3 +262,97 @@ def test_split_block_service_conserves_time(block_s, items):
         order = sorted(range(len(items)), key=lambda i: items[i])
         for a, b in zip(order, order[1:]):
             assert parts[a] <= parts[b] + 1e-12
+
+
+def test_split_block_service_edge_cases():
+    """Empty step lists, all-zero steps, and zero-duration blocks must not
+    divide by zero or invent time."""
+    from repro.core.scheduler import split_block_service
+    assert split_block_service(1.0, []) == []                # no steps at all
+    assert split_block_service(0.0, []) == []
+    # all-idle block: the wall time is spread evenly (nothing ran, but the
+    # time still passed and must be conserved)
+    assert split_block_service(0.9, [0, 0, 0]) == \
+        pytest.approx([0.3, 0.3, 0.3])
+    # zero-item steps inside a live block get zero charge
+    assert split_block_service(1.0, [2, 0, 2]) == \
+        pytest.approx([0.5, 0.0, 0.5])
+    # zero-duration block: zero everywhere, lengths preserved
+    assert split_block_service(0.0, [3, 1]) == [0.0, 0.0]
+
+
+# ---------------------------------------------------------------------------
+# ClusterAdmission — the cluster-wide pull scheduler (learned per-drive
+# rates -> pull quotas, the §IV-A batch-ratio rule drive-vs-drive)
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_admission_validates():
+    from repro.core.scheduler import ClusterAdmission
+    with pytest.raises(ValueError):
+        ClusterAdmission(0)
+    with pytest.raises(ValueError):
+        ClusterAdmission(2, alpha=0.0)
+    ca = ClusterAdmission(2)
+    with pytest.raises(KeyError):
+        ca.observe(5, 1.0, [1])
+    with pytest.raises(ValueError):
+        ca.quotas(1, [0, 1])                  # cannot cover both drives
+    assert ca.quotas(4, []) == {}
+
+
+def test_cluster_admission_converges_on_skewed_trace():
+    """A drive fed 2x the per-item service time must converge to half the
+    rate, and the pull quotas must skew toward the fast drive while
+    summing exactly to the budget."""
+    import math
+
+    from repro.core.scheduler import ClusterAdmission
+    ca = ClusterAdmission(2, alpha=0.2)
+    assert all(math.isnan(r) for r in ca.rates())      # cold: no estimates
+    # cold-start guard: quotas stay even until every drive is observed
+    assert ca.quotas(8, [0, 1]) == {0: 4, 1: 4}
+    ca.observe(0, 0.10, [2, 2])                        # 25 ms/item
+    assert ca.quotas(8, [0, 1]) == {0: 4, 1: 4}        # drive 1 still cold
+    for _ in range(64):                                # 2x-skewed tick trace
+        ca.observe(0, 0.10, [2, 2])                    # 25 ms/item
+        ca.observe(1, 0.20, [2, 2])                    # 50 ms/item
+    r0, r1 = ca.rates()
+    assert r0 == pytest.approx(40.0, rel=0.05)
+    assert r1 == pytest.approx(20.0, rel=0.05)
+    quotas = None
+    for _ in range(16):                                # smoothing settles
+        quotas = ca.quotas(9, [0, 1])
+    assert sum(quotas.values()) == 9
+    assert quotas[0] == pytest.approx(6, abs=1)        # ~2:1 split
+    assert quotas[0] > quotas[1] >= 1
+    # idle/garbage observations never poison the estimate
+    ca.observe(0, 0.0, [4])
+    ca.observe(0, float("nan"), [4])
+    ca.observe(1, 0.5, [0, 0])
+    assert ca.rates()[0] == pytest.approx(r0)
+    assert ca.rates()[1] == pytest.approx(r1)
+
+
+def test_cluster_admission_quotas_follow_live_set():
+    """Quotas refit over the LIVE drives only (a failed drive drops out),
+    and the block wall time is attributed per step via
+    split_block_service — a step serving more items contributes a smaller
+    per-item time."""
+    from repro.core.scheduler import ClusterAdmission
+    ca = ClusterAdmission(3, alpha=0.5)
+    for _ in range(8):
+        ca.observe(0, 0.1, [2, 2])
+        ca.observe(1, 0.1, [2, 2])
+        ca.observe(2, 0.4, [2, 2])
+    q = ca.quotas(6, [0, 1, 2])
+    assert sum(q.values()) == 6 and set(q) == {0, 1, 2}
+    assert q[2] <= q[0] and q[2] <= q[1]
+    q = ca.quotas(6, [0, 1])                           # drive 2 failed
+    assert set(q) == {0, 1} and sum(q.values()) == 6
+    # per-step attribution: [4, 0] concentrates the same wall time on
+    # fewer items than [2, 2] -> same per-item estimate either way
+    ca2 = ClusterAdmission(2, alpha=1.0)
+    ca2.observe(0, 0.1, [4, 0])
+    ca2.observe(1, 0.1, [2, 2])
+    assert ca2.rate(0) == pytest.approx(ca2.rate(1))

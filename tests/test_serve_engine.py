@@ -143,6 +143,38 @@ def test_admission_uses_scheduler_tiers(cfg, params, rng):
     assert tiers == {"host", "csd"}
 
 
+def test_last_tick_observation(cfg, params, rng):
+    """Every step() must describe itself for the cluster pull scheduler:
+    which requests were admitted, tokens/steps produced, and the
+    serving-vs-lazy-compile wall split (first-shape calls are compile)."""
+    from repro.train.serve_loop import TickObservation
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (6, 9)]
+    engine = make_engine(cfg, params, num_slots=2)
+    assert isinstance(engine.last_tick, TickObservation)
+    rids = [engine.submit(p, max_new=4) for p in prompts]
+    engine.step()
+    obs = engine.last_tick
+    assert obs.admitted_rids == rids
+    assert obs.tokens > 0 and obs.steps > 0
+    assert obs.per_step_items and sum(obs.per_step_items) > 0
+    # a fresh engine's first tick is dominated by lazy XLA compiles, which
+    # must land in compile_s (and stats.compile_s), not the serving time
+    assert obs.compile_s > 0
+    assert engine.stats.compile_s >= obs.compile_s
+    assert obs.busy_s < obs.compile_s
+    engine.run_until_complete()
+    # a warm replay of the same shapes is pure serving: no compile charges
+    rids2 = [engine.submit(p, max_new=4) for p in prompts]
+    engine.step()
+    warm_obs = engine.last_tick
+    assert warm_obs.admitted_rids == rids2
+    assert warm_obs.compile_s == 0.0
+    assert warm_obs.busy_s > 0
+    assert warm_obs.tokens > 0
+    engine.run_until_complete()
+    assert engine.stats.prefill_s + engine.stats.decode_s > 0
+
+
 def test_generate_keeps_earlier_submissions(cfg, params, rng):
     """generate() drains the queue but must not discard results of requests
     queued earlier via submit()."""
