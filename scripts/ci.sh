@@ -11,7 +11,13 @@
 #   scripts/ci.sh bench-guard   re-runs the committed BENCH_fig5.json workload
 #                               and fails if tokens/s drops below 0.8x the
 #                               committed numbers (ratcheted from the old 0.5x
-#                               now that prewarm keeps compile out of decode_s)
+#                               now that prewarm keeps compile out of decode_s);
+#                               also scans the committed BENCH_fig7_slo.json
+#                               for NaN metrics (a degenerate SLO run must
+#                               never be the committed reference)
+#   scripts/ci.sh slo-smoke     tiny bursty open-loop trace through the EDF
+#                               serve engine; fails on crash, lost requests,
+#                               or non-finite tail-latency stats
 #   scripts/ci.sh cluster-smoke 2-replica cluster engine serves a short trace
 #                               for a few ticks; fails on crash, broken
 #                               throughput, or tokens diverging from the
@@ -29,9 +35,11 @@ case "${1:-tier1}" in
   nonslow)       exec python -m pytest -x -q -m "not slow" ;;
   perf-smoke)    exec python -m benchmarks.fig5_throughput --engine --json \
                       --requests 4 --max-new 4 --num-slots 2 --k-block 8 ;;
-  bench-guard)   exec python -m benchmarks.fig5_throughput --engine \
+  bench-guard)   python -m benchmarks.fig7_slo --check
+                 exec python -m benchmarks.fig5_throughput --engine \
                       --guard BENCH_fig5.json --guard-floor 0.8 ;;
   cluster-smoke) exec python -m benchmarks.fig6_cluster --smoke ;;
+  slo-smoke)     exec python -m benchmarks.fig7_slo --smoke ;;
   hetero-smoke)  exec python -m benchmarks.fig6_cluster --hetero --smoke ;;
   tier1|*)       exec python -m pytest -x -q ;;
 esac

@@ -40,6 +40,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 from repro.core import energy as E
+from repro.core.latency import LatencyStats
 from repro.core.transfer import TransferLedger
 
 ROUTING_POLICIES = ("round_robin", "least_loaded", "data_local",
@@ -284,6 +285,12 @@ class ClusterStats:
     serial_s: float = 0.0      # sum over ticks of SUM of per-drive times
     energy_j: float = 0.0      # integral of server_power(n_active) dt
     _active_dt: float = 0.0    # integral of n_active dt (for mean_active)
+    # SLO accounting on the cluster's idle-aware wall clock: one
+    # LatencyRecord per tracked request, plus load-shedding tallies
+    # (shed_wasted_s = serving time already burned on then-dropped work)
+    latency: LatencyStats = field(default_factory=LatencyStats)
+    shed_requests: int = 0
+    shed_wasted_s: float = 0.0
 
     def record_tick(self, n_active: int, tick_s: float,
                     tick_serial_s: Optional[float] = None) -> None:
@@ -379,10 +386,33 @@ class ClusterStats:
 
     @property
     def energy_per_query_mj(self) -> float:
-        """Table I metric from the live integral: wall energy / queries."""
+        """Table I metric from the live integral: wall energy / queries.
+
+        Degenerate runs are reported, not raised: with zero completed
+        queries (everything shed, or stats read before the first finish)
+        there is no per-query denominator — the metric is 0.0 by
+        convention so dashboards render a number; callers gating on it
+        should check ``completed > 0`` first.
+        """
         if self.completed <= 0:
             return 0.0
         return self.energy_j / self.completed * 1e3
+
+    @property
+    def mean_power_w(self) -> float:
+        """Time-averaged wall power over the run; 0.0 for a zero-length
+        run (no time elapsed means no power draw to average)."""
+        if self.cluster_s <= 0:
+            return 0.0
+        return self.energy_j / self.cluster_s
+
+    @property
+    def shed_energy_mj(self) -> float:
+        """Energy burned on requests that were then shed: the serving time
+        already spent on dropped work, priced at the run's mean wall power.
+        0.0 when nothing was shed or no wall time has elapsed (the latter
+        means shed work cost no measurable energy yet, not an error)."""
+        return self.shed_wasted_s * self.mean_power_w * 1e3
 
     @property
     def energy_reduction_vs_host(self) -> float:
@@ -418,6 +448,12 @@ class ClusterStats:
             lines.append(f"KV bytes touched: {self.ledger.kv_bytes / 1e6:.2f}"
                          f" MB vs dense {self.baseline.kv_bytes / 1e6:.2f} MB"
                          f" ({self.kv_reduction:.0%} fewer KV reads)")
+        if self.latency.records:
+            lines.append(self.latency.summary())
+        if self.shed_requests:
+            lines.append(f"shed: {self.shed_requests} requests "
+                         f"({self.shed_wasted_s:.3f}s wasted, "
+                         f"{self.shed_energy_mj:.1f} mJ)")
         for i, d in enumerate(self.drives):
             lines.append(
                 f"drive[{i}]: {d.requests} reqs, {d.tokens} tok, "

@@ -1,3 +1,7 @@
 from repro.data.pipeline import (  # noqa: F401
     DataConfig, SyntheticTokenSource, MemmapTokenSource, ShardedLoader,
     write_token_file)
+from repro.data.workload import (  # noqa: F401
+    ARRIVAL_MODES, DEFAULT_CLASSES, PriorityClass, ReplayReport,
+    TraceRequest, WorkloadConfig, generate_trace, load_trace,
+    replay_open_loop, save_trace, scale_trace)

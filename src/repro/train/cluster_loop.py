@@ -60,6 +60,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.core.cluster import (ClusterStats, DriveLoad, Placement, Router,
                                 shard_spill_bytes)
+from repro.core.latency import LatencyRecord
 from repro.core.scheduler import ClusterAdmission
 from repro.train.serve_loop import GenResult, ServeEngine, collect_results
 
@@ -71,6 +72,8 @@ class ClusterRequest:
     max_new: int
     shard_id: Optional[int] = None
     spilled_bytes: float = 0.0    # spill charge of the current dispatch
+    priority: int = 0
+    deadline_s: Optional[float] = None  # absolute TTFT deadline (cluster clock)
 
 
 @dataclass
@@ -116,7 +119,9 @@ class ClusterEngine:
                  rate_alpha: float = 0.15,
                  quota_gate: bool = False,
                  shard_replacement: bool = True,
-                 shard_bytes: Optional[float] = None, **engine_kw):
+                 shard_bytes: Optional[float] = None,
+                 admission_order: str = "fifo",
+                 shed_expired: bool = True, **engine_kw):
         if n_drives < 1:
             raise ValueError("need at least one drive")
         self.cfg = cfg
@@ -186,23 +191,52 @@ class ClusterEngine:
         # rate (instead of a straggler-bound per-tick max) pays off
         self._clocks = [0.0] * n_drives
         self._lead = 0.0              # leading clock at the last tick
+        # SLO layer: the cluster wall clock (tick advances + idle
+        # fast-forwards via advance_clock) is the ONE clock all per-request
+        # timestamps live on — per-drive virtual clocks never leak into
+        # LatencyRecords, so TTFT/e2e cannot go negative across drives.
+        # "edf" sorts the SHARED queue by deadline before routing (drives
+        # themselves stay FIFO: a deadline on the cluster clock means
+        # nothing on a drive's busy-time clock, so deadlines are not
+        # propagated down); shed_expired drops queued requests whose
+        # deadline already passed instead of dispatching hopeless work.
+        if admission_order not in ("fifo", "edf"):
+            raise ValueError(f"admission_order must be 'fifo' or 'edf', "
+                             f"got {admission_order!r}")
+        self.admission_order = admission_order
+        self.shed_expired = bool(shed_expired)
+        self.clock = 0.0
+        self.records: Dict[int, LatencyRecord] = {}
 
     # -- intake --------------------------------------------------------------
 
     def submit(self, prompt: Sequence[int], max_new: int = 32,
-               shard_id: Optional[int] = None) -> int:
+               shard_id: Optional[int] = None, priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
+        """Enqueue a request; ``deadline_s`` is an ABSOLUTE first-token
+        deadline on the CLUSTER wall clock (None = best-effort)."""
         prompt = list(prompt)
         # reject at enqueue time what no drive can ever serve — a deferred
         # ValueError inside _dispatch would tear down the whole run
         self.drives[0].engine.validate_request(prompt, max_new)
         rid = self._next_rid
         self._next_rid += 1
-        req = ClusterRequest(rid, prompt, max_new, shard_id)
+        req = ClusterRequest(rid, prompt, max_new, shard_id,
+                             priority=priority, deadline_s=deadline_s)
         if shard_id is not None:
             self._seen_shards.add(shard_id)
         self._inflight[rid] = req
         self.queue.append(req)
+        self.records[rid] = LatencyRecord(rid=rid, priority=priority,
+                                          deadline_s=deadline_s,
+                                          submit_t=self.clock)
         return rid
+
+    def advance_clock(self, to_t: float) -> None:
+        """Fast-forward the cluster wall clock across an idle gap (open-loop
+        replay).  Only the wall clock moves — the per-drive virtual clocks
+        track busy time and idle is not busy."""
+        self.clock = max(self.clock, to_t)
 
     @property
     def pending(self) -> int:
@@ -250,6 +284,13 @@ class ClusterEngine:
             if slot.active and slot.rid in d.rid_map:
                 grid = d.rid_map.pop(slot.rid)
                 retry.append(self._inflight[grid])
+                rec = self.records.get(grid)
+                if rec is not None:
+                    # the retry replays from the prompt: admit/first-token
+                    # re-stamp on the surviving drive, but queue wait keeps
+                    # the ORIGINAL submit — the user has been waiting since
+                    # then, whatever the cluster did in between
+                    rec.restart()
         # slots are scanned in pool order, which is refill order, not
         # submission order — restore FIFO by global rid before requeueing
         # (in-flight requests go ahead of the drive-queued ones
@@ -321,11 +362,50 @@ class ClusterEngine:
         total = sum(self.drives[i].engine.num_slots for i in live)
         return self.pull.quotas(total, live)
 
+    def _shed_queue(self) -> List[GenResult]:
+        """Drop shared-queue requests whose deadline already passed — even
+        an instant dispatch could not produce their first token in time, so
+        routing them only steals capacity from requests that can still make
+        their SLO.  Queued sheds cost nothing beyond their queue wait (no
+        serving time was spent); each produces a ``status='shed'``
+        GenResult so the submitter hears back."""
+        if not self.shed_expired or not any(
+                r.deadline_s is not None and r.deadline_s < self.clock
+                for r in self.queue):
+            return []
+        out: List[GenResult] = []
+        keep: Deque[ClusterRequest] = deque()
+        for req in self.queue:
+            if req.deadline_s is None or req.deadline_s >= self.clock:
+                keep.append(req)
+                continue
+            self._inflight.pop(req.rid, None)
+            self.stats.shed_requests += 1
+            res = GenResult(tokens=[], prefill_s=0.0, decode_s=0.0,
+                            rid=req.rid, status="shed",
+                            priority=req.priority)
+            rec = self.records.pop(req.rid, None)
+            if rec is not None:
+                rec.finish_t = self.clock
+                rec.status = "shed"
+                self.stats.latency.add(rec)
+                res.e2e_s = rec.e2e_s
+            out.append(res)
+        self.queue = keep
+        return out
+
     def _dispatch(self) -> None:
         """Route queued requests to drives, at most one per free slot, FIFO
-        (a blocked head waits; nothing is reordered around it).  Under
+        (a blocked head waits; nothing is reordered around it).  Under EDF
+        the shared queue is deadline-sorted FIRST (stable: FIFO preserved
+        within a class), then the same no-reorder dispatch runs.  Under
         quota gating each drive's in-flight share is additionally capped by
         the pull scheduler's rate-proportional quota."""
+        if self.admission_order == "edf" and len(self.queue) > 1:
+            self.queue = deque(sorted(
+                self.queue,
+                key=lambda r: (r.deadline_s if r.deadline_s is not None
+                               else math.inf, r.priority, r.rid)))
         quotas = self._pull_quotas() if self.quota_gate else {}
         # expected seconds to serve one request on drive d: mean observed
         # tokens per completed request / the drive's learned token rate
@@ -371,23 +451,42 @@ class ClusterEngine:
         ``server_power·dt`` energy integral on a cold cluster), and the
         remainder is divided by the drive's ``speed_factor`` (modeled
         heterogeneous hardware).  The corrected time also feeds the pull
-        scheduler's per-drive rate estimate."""
+        scheduler's per-drive rate estimate.
+
+        Per-request latency is stamped at TICK granularity on the cluster
+        wall clock: admissions and first tokens observed during the tick
+        are stamped at the post-tick clock (the event completed somewhere
+        inside the tick; the cluster cannot see sub-tick drive time
+        without mixing clock domains, and a post-tick stamp is the
+        conservative, monotone choice)."""
+        shed = self._shed_queue()
         self._dispatch()
         out: List[GenResult] = []
         dts: List[float] = []
+        admit_events: List[int] = []
+        first_tok_events: List[int] = []
         n_active = 0
         for d in self.drives:
             if not d.has_work:
                 continue
-            t0 = time.time()
+            t0 = time.perf_counter()
             finished = d.engine.step()
-            raw = time.time() - t0
+            raw = time.perf_counter() - t0
             obs = d.engine.last_tick
             dt = max(raw - obs.compile_s, 0.0) / d.speed
             dts.append(dt)
             self._clocks[d.drive_id] += dt
             n_active += 1
             self.pull.observe(d.drive_id, dt, obs.per_step_items)
+            # map engine-local events to global rids BEFORE the finished
+            # loop pops rid_map (a request can admit, emit its first token
+            # and finish in the same tick)
+            for local in obs.admitted_rids:
+                if local in d.rid_map:
+                    admit_events.append(d.rid_map[local])
+            for local in obs.first_token_rids:
+                if local in d.rid_map:
+                    first_tok_events.append(d.rid_map[local])
             for r in finished:
                 if r.rid not in d.rid_map:
                     continue               # abandoned by an earlier fail()
@@ -409,6 +508,29 @@ class ClusterEngine:
             tick_s = max(lead - self._lead, 0.0)
             self._lead = lead
             self.stats.record_tick(n_active, tick_s, sum(dts))
+            self.clock += tick_s
+        for grid in admit_events:
+            rec = self.records.get(grid)
+            if rec is not None and not math.isfinite(rec.admit_t):
+                rec.admit_t = self.clock
+        for grid in first_tok_events:
+            rec = self.records.get(grid)
+            if rec is not None and not math.isfinite(rec.first_token_t):
+                rec.first_token_t = self.clock
+        for r in out:
+            rec = self.records.pop(r.rid, None)
+            if rec is None:
+                continue
+            rec.finish_t = self.clock
+            rec.n_tokens = len(r.tokens)
+            rec.status = "ok"
+            self.stats.latency.add(rec)
+            r.priority = rec.priority
+            r.queue_wait_s = rec.queue_wait_s
+            r.ttft_s = rec.ttft_s
+            r.tpot_s = rec.tpot_s
+            r.e2e_s = rec.e2e_s
+        out = shed + out
         self._finished.extend(out)
         return out
 

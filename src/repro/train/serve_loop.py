@@ -53,6 +53,7 @@ Mechanics:
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -65,6 +66,7 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.isp import choose_decode_plan, choose_embedding_plan
 from repro.core.kv_pages import PageAllocator, pages_for
+from repro.core.latency import NAN, LatencyRecord, LatencyStats
 from repro.core.scheduler import (PullScheduler, SchedulerState, make_cluster,
                                   optimal_batch_ratio, rebalance_shares,
                                   split_block_service)
@@ -80,6 +82,15 @@ class GenResult:
     rid: int = 0
     tier: str = "host"
     drive: int = 0               # cluster serving: which replica served it
+    status: str = "ok"           # "ok" | "shed" (deadline-expired, dropped)
+    priority: int = 0
+    # per-request latency on the serving clock (NaN until measurable):
+    # queue wait (submit -> slot), TTFT (submit -> first token), TPOT
+    # (inter-token cadence after the first), end-to-end (submit -> done)
+    queue_wait_s: float = NAN
+    ttft_s: float = NAN
+    tpot_s: float = NAN
+    e2e_s: float = NAN
 
 
 @dataclass
@@ -94,6 +105,12 @@ class ServeStats:
     tier_requests: Dict[str, int] = field(default_factory=dict)
     ledger: TransferLedger = field(default_factory=TransferLedger)     # chosen
     baseline: TransferLedger = field(default_factory=TransferLedger)  # host-only
+    # SLO accounting: per-request latency records (serving clock) plus the
+    # load-shedding tally — shed_wasted_s is serving time already spent on
+    # requests that were then dropped (the energy the shed cost anyway)
+    latency: LatencyStats = field(default_factory=LatencyStats)
+    shed_requests: int = 0
+    shed_wasted_s: float = 0.0
 
     @property
     def link_bytes(self) -> float:
@@ -154,6 +171,11 @@ class ServeStats:
                 f"KV bytes touched: {self.ledger.kv_bytes / 1e6:.2f} MB vs "
                 f"dense {self.baseline.kv_bytes / 1e6:.2f} MB "
                 f"({self.kv_reduction:.0%} fewer KV reads)")
+        if self.latency.records:
+            lines.append(self.latency.summary())
+        if self.shed_requests:
+            lines.append(f"shed: {self.shed_requests} requests "
+                         f"({self.shed_wasted_s:.3f}s serving time wasted)")
         return "\n".join(lines)
 
 
@@ -175,6 +197,7 @@ class TickObservation:
     steps: int = 0               # inner decode steps executed
     per_step_items: List[int] = field(default_factory=list)
     admitted_rids: List[int] = field(default_factory=list)
+    first_token_rids: List[int] = field(default_factory=list)
 
 
 @dataclass
@@ -182,6 +205,8 @@ class _Request:
     rid: int
     prompt: List[int]
     max_new: int
+    priority: int = 0
+    deadline_s: Optional[float] = None   # absolute TTFT deadline (engine clock)
 
 
 @dataclass
@@ -254,7 +279,15 @@ class AdmissionController:
         return out
 
     def observe(self, tier: str, busy_s: float, tokens: int) -> None:
-        """Feed measured service back; refit the batch ratio periodically."""
+        """Feed measured service back; refit the batch ratio periodically.
+
+        Negative / non-finite intervals are dropped whole: even with
+        monotonic timers a caller bug (or a restored checkpoint replaying
+        stale observations) must not poison the EWMA-style busy windows —
+        one negative sample can flip a refit's host:CSD ratio.
+        """
+        if busy_s < 0.0 or not math.isfinite(busy_s):
+            return
         self._busy[tier] += busy_s
         self._tok[tier] += tokens
         self._since_rebalance += 1
@@ -289,10 +322,15 @@ class ServeEngine:
                  kv_layout: str = "paged", page_size: int = 16,
                  num_pages: Optional[int] = None, k_block: int = 8,
                  chunk_prefill: Optional[int] = None, prewarm: bool = False,
-                 jit_donor: Optional["ServeEngine"] = None):
+                 jit_donor: Optional["ServeEngine"] = None,
+                 admission_order: str = "fifo", chunk_budget: int = 1,
+                 shed_expired: bool = True):
         if kv_layout not in ("paged", "strip"):
             raise ValueError(f"kv_layout must be 'paged' or 'strip', "
                              f"got {kv_layout!r}")
+        if admission_order not in ("fifo", "edf"):
+            raise ValueError(f"admission_order must be 'fifo' or 'edf', "
+                             f"got {admission_order!r}")
         self.cfg = cfg
         self.params = params
         self.recipe = recipe if recipe is not None else M.LOCAL
@@ -398,6 +436,21 @@ class ServeEngine:
         self.baseline = self.stats.baseline      # everything-to-host baseline
         self._next_rid = 0
         self._finished: List[GenResult] = []
+        # SLO-aware admission: "edf" stable-sorts the queue by absolute
+        # deadline (earliest first; no-deadline requests last, FIFO within
+        # each (deadline, priority) class); chunk_budget is the number of
+        # prefill chunks one tick may run — >1 accelerates admission at the
+        # cost of decode TTFT/TPOT in the same tick; shed_expired drops
+        # requests whose deadline already passed (queued ones for free,
+        # mid-prefill ones counting their spent serving time as waste)
+        self.admission_order = admission_order
+        self.chunk_budget = max(int(chunk_budget), 1)
+        self.shed_expired = shed_expired
+        # virtual serving clock: advances by measured serving time (compile
+        # excluded) and fast-forwards across idle via advance_clock() — all
+        # LatencyRecord timestamps live on it
+        self.clock = 0.0
+        self.records: Dict[int, LatencyRecord] = {}
         # lazy-compile attribution: the first call at a new (site, shape)
         # key is XLA compile, not serving — its wall time goes to
         # stats.compile_s (and the tick observation) instead of
@@ -433,20 +486,20 @@ class ServeEngine:
 
     def _set_pages_rows(self, slot_ids: List[int]) -> None:
         """Copy the host table's rows for ``slot_ids`` to the device table."""
-        t0 = time.time()
+        t0 = time.perf_counter()
         idx = jnp.asarray(slot_ids, jnp.int32)
         rows = jnp.asarray(self.page_table[np.asarray(slot_ids)])
         self._pages_dev = self._pages_dev.at[idx].set(rows)
         self._sync_pages_leaves()
         # first call per row count: the eager scatter/broadcast executables
         # compile — attribute that to compile_s, not the serving tick
-        self._serving_time(("set_rows", len(slot_ids)), time.time() - t0)
+        self._serving_time(("set_rows", len(slot_ids)), time.perf_counter() - t0)
 
     def _sync_slot_dev(self, slots: List[_Slot]) -> None:
         """Refresh the device-side decode state of ``slots`` (post-prefill /
         post-finish) with .at[] scatters — the only host→device traffic the
         fused loop needs between blocks."""
-        t0 = time.time()
+        t0 = time.perf_counter()
         idx = jnp.asarray([s.index for s in slots], jnp.int32)
         self._tok_dev = self._tok_dev.at[idx].set(
             jnp.asarray([s.cur_token for s in slots], jnp.int32))
@@ -457,7 +510,7 @@ class ServeEngine:
         self._rem_dev = self._rem_dev.at[idx].set(
             jnp.asarray([max(s.max_new - len(s.out), 0) for s in slots],
                         jnp.int32))
-        self._serving_time(("sync_slot", len(slots)), time.time() - t0)
+        self._serving_time(("sync_slot", len(slots)), time.perf_counter() - t0)
 
     def _reservation(self, prompt_len: int, max_new: int) -> int:
         """Pages a request can ever need: prompt + generated tokens, capped
@@ -527,7 +580,7 @@ class ServeEngine:
         measure serving, not compilation; the compile time is reported
         separately as ``ServeStats.compile_s``.  Returns total compile_s.
         """
-        t0 = time.time()
+        t0 = time.perf_counter()
         if self.k_block > 1:
             # all slots start dead, so the while_loop compiles fully but
             # executes zero steps — caches stay untouched
@@ -575,7 +628,7 @@ class ServeEngine:
             for g, cache in new_view.items():
                 self.caches[g] = dict(self.caches[g], kp=cache["kp"],
                                       vp=cache["vp"])
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         self.stats.compile_s += dt
         return dt
 
@@ -597,13 +650,72 @@ class ServeEngine:
                 f"request needs {self._reservation(len(prompt), max_new)} KV "
                 f"pages but the pool only has {self.pager.num_pages}")
 
-    def submit(self, prompt: Sequence[int], max_new: int = 32) -> int:
+    def submit(self, prompt: Sequence[int], max_new: int = 32,
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> int:
+        """Enqueue a request; ``deadline_s`` is an ABSOLUTE first-token
+        deadline on the engine's serving clock (None = best-effort)."""
         prompt = list(prompt)
         self.validate_request(prompt, max_new)
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(_Request(rid, prompt, max_new))
+        self.queue.append(_Request(rid, prompt, max_new, priority,
+                                   deadline_s))
+        self.records[rid] = LatencyRecord(rid=rid, priority=priority,
+                                          deadline_s=deadline_s,
+                                          submit_t=self.clock)
         return rid
+
+    # -- serving clock + shedding --------------------------------------------
+
+    def advance_clock(self, to_t: float) -> None:
+        """Fast-forward the serving clock across an idle gap (open-loop
+        replay: wall time passes even when no work is in flight).  The
+        clock never moves backwards."""
+        self.clock = max(self.clock, to_t)
+
+    def _shed_expired(self) -> None:
+        """Drop requests whose deadline already passed — they cannot make
+        their SLO even if served right now, so serving them only burns
+        capacity others need.  Queued requests shed for free; a mid-prefill
+        slot sheds with its spent serving time booked as waste."""
+        if not self.shed_expired:
+            return
+        if any(r.deadline_s is not None and r.deadline_s < self.clock
+               for r in self.queue):
+            keep: Deque[_Request] = deque()
+            for req in self.queue:
+                if req.deadline_s is not None and req.deadline_s < self.clock:
+                    self._shed(req.rid, req.priority, wasted_s=0.0)
+                else:
+                    keep.append(req)
+            self.queue = keep
+        for s in self.slots:
+            if not (s.active and s.prefilling):
+                continue
+            rec = self.records.get(s.rid)
+            if rec is not None and rec.deadline_s is not None \
+                    and rec.deadline_s < self.clock:
+                self._shed(s.rid, rec.priority, wasted_s=s.prefill_s,
+                           prefill_s=s.prefill_s)
+                self._release_slot(s)
+
+    def _shed(self, rid: int, priority: int, wasted_s: float,
+              prefill_s: float = 0.0) -> None:
+        """Record one shed request: a 'shed' GenResult for the caller, its
+        latency record closed out, and the waste tallied."""
+        self.stats.shed_requests += 1
+        self.stats.shed_wasted_s += wasted_s
+        rec = self.records.pop(rid, None)
+        res = GenResult(tokens=[], prefill_s=prefill_s, decode_s=0.0,
+                        rid=rid, status="shed", priority=priority)
+        if rec is not None:
+            rec.finish_t = self.clock
+            rec.status = "shed"
+            self.stats.latency.add(rec)
+            res.e2e_s = rec.e2e_s
+            res.queue_wait_s = rec.queue_wait_s
+        self._finished.append(res)
 
     # -- bucketing -----------------------------------------------------------
 
@@ -649,6 +761,7 @@ class ServeEngine:
         self._tick_compile_s = 0.0
         tok0, steps0 = self.stats.tokens, self.stats.decode_steps
         busy0 = self.stats.prefill_s + self.stats.decode_s
+        self._shed_expired()
         self._admit()
         if self.chunk_prefill is not None:
             self._chunk_prefill_tick()
@@ -689,6 +802,14 @@ class ServeEngine:
         n = min(len(free), len(self.queue))
         if n == 0:
             return
+        if self.admission_order == "edf" and len(self.queue) > 1:
+            # earliest deadline first; no-deadline requests last.  The sort
+            # is stable and ties break on rid, so FIFO order is preserved
+            # within a (deadline, priority) class.
+            self.queue = deque(sorted(
+                self.queue,
+                key=lambda r: (r.deadline_s if r.deadline_s is not None
+                               else math.inf, r.priority, r.rid)))
         if self.kv_layout == "paged":
             # Backpressure at the pool: admit (FIFO) only while the pool can
             # still reserve each request's worst case — a request that does
@@ -729,6 +850,9 @@ class ServeEngine:
                 self.page_table[slot.index, : len(pages)] = pages
             admitted.append(slot)
             self.last_tick.admitted_rids.append(req.rid)
+            rec = self.records.get(req.rid)
+            if rec is not None:
+                rec.admit_t = self.clock
             self.stats.requests += 1
             self.stats.tier_requests[tier] = \
                 self.stats.tier_requests.get(tier, 0) + 1
@@ -757,12 +881,12 @@ class ServeEngine:
         for i, s in enumerate(group):
             tokens[i, : lengths[i]] = s._prompt
             lens[i] = lengths[i]
-        t0 = time.time()
+        t0 = time.perf_counter()
         batch = {"tokens": jnp.asarray(tokens),
                  "lengths": jnp.asarray(lens)}
         nxt, pre_caches = self._prefill(self.params, batch)
         jax.block_until_ready(nxt)
-        t1 = time.time()
+        t1 = time.perf_counter()
         # prefill jit is keyed by the bucket length; the splice runs eager
         # gather/scatter executables keyed by the total token count — both
         # compile lazily on first sight, and that wall time is XLA, not
@@ -777,8 +901,9 @@ class ServeEngine:
         # compile, so the key needs both
         splice_key = ("splice", padded, sum(lengths)) \
             if self.kv_layout == "paged" else ("splice", b, padded)
-        dt += self._serving_time(splice_key, time.time() - t1)
+        dt += self._serving_time(splice_key, time.perf_counter() - t1)
         self._account_prefill(sum(lengths))
+        self.clock += dt               # first tokens are stamped post-prefill
         for i, s in enumerate(group):
             s.prefill_s = dt
             s.cur_token = int(nxt[i])
@@ -790,17 +915,25 @@ class ServeEngine:
             self._sync_slot_dev(group)
 
     def _chunk_prefill_tick(self) -> None:
-        """Advance one chunk of at most ONE mid-prefill slot.
+        """Advance up to ``chunk_budget`` prefill chunks this tick.
 
-        Long prompts no longer monopolize a tick: each tick splices one
-        fixed-size chunk into the paged pool and then still runs a decode
-        block for everyone else, so the scheduler's ``observe()`` samples
-        stay bounded by one chunk + one block instead of one whole prompt.
+        Long prompts no longer monopolize a tick: each tick splices a
+        bounded number of fixed-size chunks into the paged pool and then
+        still runs a decode block for everyone else, so the scheduler's
+        ``observe()`` samples stay bounded by the budget + one block
+        instead of one whole prompt.  ``chunk_budget=1`` (default) is the
+        decode-protecting setting: in-flight TPOT/TTFT see at most one
+        chunk of prefill interference per tick; larger budgets admit long
+        prompts faster at the decode tail's expense.
         """
-        slot = next((s for s in self.slots if s.active and s.prefilling),
-                    None)
-        if slot is None:
-            return
+        for _ in range(self.chunk_budget):
+            slot = next((s for s in self.slots if s.active and s.prefilling),
+                        None)
+            if slot is None:
+                return
+            self._advance_chunk(slot)
+
+    def _advance_chunk(self, slot: _Slot) -> None:
         chunk = self.chunk_prefill
         prompt = slot._prompt
         c0 = slot.prefill_done_tokens
@@ -810,12 +943,13 @@ class ServeEngine:
         qpos = np.full((1, chunk), -1, np.int32)
         qpos[0, :real] = np.arange(c0, c0 + real, dtype=np.int32)
         view = self._chunk_view(self.page_table[slot.index])
-        t0 = time.time()
+        t0 = time.perf_counter()
         nxt, new_view = self._prefill_chunk(
             self.params, view, jnp.asarray(tokens), jnp.asarray(qpos),
             jnp.asarray([real - 1], jnp.int32))
         jax.block_until_ready(nxt)
-        dt = self._serving_time(("chunk",), time.time() - t0)
+        dt = self._serving_time(("chunk",), time.perf_counter() - t0)
+        self.clock += dt
         for g, cache in new_view.items():
             if isinstance(cache, dict) and "kp" in cache:
                 self.caches[g] = dict(self.caches[g], kp=cache["kp"],
@@ -859,14 +993,15 @@ class ServeEngine:
                 positions[s.index] = s.pos
         if self.kv_layout == "paged":
             self._grow_pages(1)
-        t0 = time.time()
+        t0 = time.perf_counter()
         nxt, self.caches = self._decode(self.params, self.caches,
                                         jnp.asarray(tokens),
                                         jnp.asarray(positions))
         nxt = np.asarray(nxt)
-        dt = self._serving_time(("decode",), time.time() - t0)
+        dt = self._serving_time(("decode",), time.perf_counter() - t0)
         self.stats.decode_s += dt
         self.stats.decode_steps += 1
+        self.clock += dt
 
         active = [s for s in self.slots if s.decoding]
         self._observe_step(active, dt)
@@ -899,7 +1034,7 @@ class ServeEngine:
             # pre-reserve the whole block's pages so growth inside the scan
             # is a pure page-table lookup (reservation makes this infallible)
             self._grow_pages(self.k_block)
-        t0 = time.time()
+        t0 = time.perf_counter()
         out = self._decode_block(self.params, self.caches, self._tok_dev,
                                  self._pos_dev, self._alive_dev,
                                  self._rem_dev)
@@ -909,7 +1044,7 @@ class ServeEngine:
         self._alive_dev, self._rem_dev = alive, rem
         block = np.asarray(block)                 # ONE readback per block
         n_steps = int(n_steps)
-        dt = self._serving_time(("decode_block",), time.time() - t0)
+        dt = self._serving_time(("decode_block",), time.perf_counter() - t0)
         self.stats.decode_s += dt
         self.stats.decode_steps += n_steps
 
@@ -919,10 +1054,15 @@ class ServeEngine:
         emitted = block[:n_steps, [s.index for s in active]] >= 0
         self.last_tick.per_step_items = emitted.sum(axis=1).tolist()
         per_step = split_block_service(dt, self.last_tick.per_step_items)
+        clock_end = self.clock + dt
         for i in range(n_steps):
             live = [s for s in active if s.decoding]
             if not live:
                 break
+            # the clock advances per replayed step so first-token /
+            # completion stamps land at the step's share of the block, not
+            # all at the block boundary
+            self.clock += per_step[i]
             self._observe_step(live, per_step[i])
             for s in live:
                 t = int(block[i, s.index])
@@ -931,6 +1071,9 @@ class ServeEngine:
                 s.pos += 1
                 s.cur_token = t
                 self._push_token(s, t)
+        # per_step sums to dt; pin the block end exactly (fp drift, early
+        # break when every slot finished mid-block)
+        self.clock = max(self.clock, clock_end)
 
     def _push_token(self, slot: _Slot, tok: int) -> None:
         """Record a generated token and finish/evict the slot if done."""
@@ -938,6 +1081,11 @@ class ServeEngine:
             self._finish(slot)
             return
         slot.out.append(tok)
+        if len(slot.out) == 1:
+            rec = self.records.get(slot.rid)
+            if rec is not None and not math.isfinite(rec.first_token_t):
+                rec.first_token_t = self.clock
+            self.last_tick.first_token_rids.append(slot.rid)
         self.stats.tokens += 1
         self.stats.tier_tokens[slot.tier] = \
             self.stats.tier_tokens.get(slot.tier, 0) + 1
@@ -952,7 +1100,7 @@ class ServeEngine:
         never reserves past a slot's own max-new budget.  Admission reserved
         the worst case, so this never exhausts the pool
         (``_reservable_pages`` accounts for the unallocated tail)."""
-        t0 = time.time()
+        t0 = time.perf_counter()
         grew = False
         ps = self.page_size
         for s in self.slots:
@@ -969,17 +1117,34 @@ class ServeEngine:
                     grew = True
         if grew:
             self._sync_pages_leaves()
-            self._serving_time(("grow_pages",), time.time() - t0)
+            self._serving_time(("grow_pages",), time.perf_counter() - t0)
 
     def _finish(self, slot: _Slot) -> None:
-        self._finished.append(GenResult(tokens=slot.out, rid=slot.rid,
-                                        tier=slot.tier,
-                                        prefill_s=slot.prefill_s,
-                                        decode_s=slot.decode_s))
+        res = GenResult(tokens=slot.out, rid=slot.rid, tier=slot.tier,
+                        prefill_s=slot.prefill_s, decode_s=slot.decode_s)
+        rec = self.records.pop(slot.rid, None)
+        if rec is not None:
+            rec.finish_t = self.clock
+            rec.n_tokens = len(slot.out)
+            rec.status = "ok"
+            self.stats.latency.add(rec)
+            res.priority = rec.priority
+            res.queue_wait_s = rec.queue_wait_s
+            res.ttft_s = rec.ttft_s
+            res.tpot_s = rec.tpot_s
+            res.e2e_s = rec.e2e_s
+        self._finished.append(res)
+        self._release_slot(slot)
+
+    def _release_slot(self, slot: _Slot) -> None:
+        """Return a slot (and its pages) to the pool — shared by normal
+        completion and mid-prefill shedding."""
         slot.active = False
         slot.prefilling = False
         slot.out = []
         slot.rid = -1
+        if hasattr(slot, "_prompt"):          # shed mid-prefill
+            del slot._prompt
         if self.kv_layout == "paged":
             # eager release: the pages (and the reservation tail) return to
             # the pool in the same step EOS/max-len fired, so a queued

@@ -1,0 +1,357 @@
+"""SLO-aware serving: per-request latency records on the serving clock,
+EDF admission, deadline shedding, chunk budgets, and the degenerate-stats
+conventions (NaN / 0.0, never raise) the benches gate on."""
+import dataclasses
+import math
+
+import jax
+import pytest
+
+from repro.config import reduced_config
+from repro.core.cluster import ClusterStats
+from repro.core.latency import LatencyRecord, LatencyStats, percentile
+from repro.core.scheduler import ClusterAdmission
+from repro.models import model as M
+from repro.train.cluster_loop import ClusterEngine
+from repro.train.serve_loop import AdmissionController, ServeEngine
+
+MAX_LEN = 64
+NAN = float("nan")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def ref(cfg, params):
+    """Compile donor: every engine in this module shares its jitted
+    callables (and warm-key set), so the file costs one XLA compile."""
+    return ServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2,
+                       chunk_prefill=8)
+
+
+def make_engine(ref, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("chunk_prefill", 8)
+    return ServeEngine(ref.cfg, ref.params, max_len=MAX_LEN, jit_donor=ref,
+                       **kw)
+
+
+def prompts_for(cfg, rng, lengths):
+    return [rng.integers(0, cfg.vocab_size, n).tolist() for n in lengths]
+
+
+def assert_record_ordered(rec):
+    assert rec.submit_t <= rec.admit_t <= rec.first_token_t <= rec.finish_t, \
+        rec
+    assert rec.queue_wait_s >= 0.0 and rec.ttft_s >= 0.0 and rec.e2e_s >= 0.0
+
+
+# -- pure latency math (no model) -------------------------------------------
+
+@pytest.mark.fast
+def test_percentile_conventions():
+    assert math.isnan(percentile([], 99))
+    assert math.isnan(percentile([NAN, NAN], 50))
+    assert percentile([3.0], 99) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == pytest.approx(2.5)
+    assert percentile([1.0, NAN, 3.0], 100) == 3.0
+
+
+@pytest.mark.fast
+def test_latency_record_derived_metrics():
+    r = LatencyRecord(rid=0, deadline_s=1.0, submit_t=0.5, admit_t=0.7,
+                      first_token_t=0.9, finish_t=1.5, n_tokens=4,
+                      status="ok")
+    assert r.queue_wait_s == pytest.approx(0.2)
+    assert r.ttft_s == pytest.approx(0.4)           # measured from SUBMIT
+    assert r.e2e_s == pytest.approx(1.0)
+    assert r.tpot_s == pytest.approx(0.6 / 3)
+    assert r.met_deadline
+    assert not dataclasses.replace(r, first_token_t=1.2).met_deadline
+    # 0/1-token requests have no inter-token interval
+    assert math.isnan(dataclasses.replace(r, n_tokens=1).tpot_s)
+    # restart: service re-stamps, but the user has waited since submit
+    r.restart()
+    assert r.submit_t == 0.5 and math.isnan(r.admit_t)
+    assert math.isnan(r.first_token_t) and r.n_tokens == 0
+
+
+@pytest.mark.fast
+def test_latency_stats_empty_is_nan_not_raise():
+    s = LatencyStats()
+    assert s.count == 0 and s.shed == 0
+    for v in (s.p50_ttft_s, s.p99_ttft_s, s.p99_e2e_s, s.mean_tpot_s,
+              s.mean_queue_wait_s, s.slo_attainment):
+        assert math.isnan(v)
+    assert s.goodput_qps(10.0) == 0.0       # valid wall, nothing met: 0 qps
+    # zero / negative / NaN wall clock: rate is NaN, never a ZeroDivision
+    s.add(LatencyRecord(rid=0, submit_t=0.0, admit_t=0.0, first_token_t=0.1,
+                        finish_t=0.2, n_tokens=2, status="ok"))
+    for wall in (0.0, -1.0, NAN):
+        assert math.isnan(s.goodput_qps(wall))
+    assert s.goodput_qps(2.0) == pytest.approx(0.5)
+    assert isinstance(s.summary(), str)
+
+
+@pytest.mark.fast
+def test_latency_stats_per_class_percentiles():
+    s = LatencyStats()
+    for i in range(4):            # interactive: TTFT 0.1, batch: TTFT 10.0
+        prio = i % 2
+        s.add(LatencyRecord(rid=i, priority=prio, submit_t=0.0, admit_t=0.0,
+                            first_token_t=0.1 if prio == 0 else 10.0,
+                            finish_t=11.0, n_tokens=2, status="ok"))
+    assert s.ttft_p(99, priority=0) == pytest.approx(0.1)
+    assert s.ttft_p(99, priority=1) == pytest.approx(10.0)
+    assert s.ttft_p(50) == pytest.approx(5.05)      # aggregate mixes classes
+    assert math.isnan(s.ttft_p(99, priority=7))     # empty class: NaN
+
+
+@pytest.mark.fast
+def test_latency_stats_shed_counts_against_attainment():
+    s = LatencyStats()
+    s.add(LatencyRecord(rid=0, deadline_s=1.0, submit_t=0.0, admit_t=0.1,
+                        first_token_t=0.5, finish_t=1.0, n_tokens=2,
+                        status="ok"))
+    s.add(LatencyRecord(rid=1, deadline_s=0.2, submit_t=0.0, finish_t=0.5,
+                        status="shed"))
+    assert s.count == 1 and s.shed == 1 and s.slo_met == 1
+    assert s.slo_attainment == pytest.approx(0.5)
+
+
+@pytest.mark.fast
+def test_admission_controller_drops_bad_busy_samples():
+    """Negative / non-finite busy windows must not poison the refit
+    (the negative-dt regression the perf_counter sweep closes)."""
+    ac = AdmissionController(4, host_rate=3.0, csd_rate=1.0)
+    before = (dict(ac._busy), dict(ac._tok), dict(ac.shares))
+    for bad in (-1.0, NAN, math.inf, -math.inf):
+        ac.observe("host", bad, 5)
+    assert (ac._busy, ac._tok, ac.shares) == before
+    ac.observe("host", 0.5, 5)
+    assert ac._busy["host"] == pytest.approx(0.5) and ac._tok["host"] == 5
+
+
+@pytest.mark.fast
+def test_cluster_admission_drops_bad_ticks():
+    ca = ClusterAdmission(2)
+    for bad in (-1.0, 0.0, NAN, math.inf):
+        ca.observe(0, bad, [4])
+    assert math.isnan(ca.rate(0))
+    ca.observe(0, 0.4, [4])
+    assert ca.rate(0) == pytest.approx(10.0)
+
+
+@pytest.mark.fast
+def test_cluster_stats_degenerate_zero_conventions():
+    s = ClusterStats()
+    # no completions / no wall clock: 0.0 by convention, never a raise
+    assert s.energy_per_query_mj == 0.0
+    assert s.mean_power_w == 0.0
+    s.shed_wasted_s = 1.0
+    assert s.shed_energy_mj == 0.0          # zero wall => zero mean power
+    s.record_tick(n_active=2, tick_s=0.5)
+    assert s.mean_power_w > 0.0 and s.shed_energy_mj > 0.0
+    with pytest.raises(ValueError):
+        s.record_tick(n_active=1, tick_s=-0.1)
+
+
+# -- single-engine serving clock + SLO path ----------------------------------
+
+def test_single_engine_timestamp_ordering(cfg, params, ref, rng):
+    eng = make_engine(ref, admission_order="edf")
+    prompts = prompts_for(cfg, rng, (5, 12, 24, 9, 17))
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new=4, priority=i % 2, deadline_s=1e9)
+    results = eng.run_until_complete()
+    assert len(results) == len(prompts)
+    assert eng.clock > 0.0
+    for r in results:
+        assert r.status == "ok"
+        assert r.queue_wait_s >= 0.0 and r.ttft_s >= r.queue_wait_s
+        assert r.e2e_s >= r.ttft_s and math.isfinite(r.e2e_s)
+    for rec in eng.stats.latency.completed:
+        assert_record_ordered(rec)
+        assert rec.n_tokens == 4
+    assert not eng.records                  # every record closed out
+
+
+def test_edf_matches_fifo_tokens(cfg, params, ref, rng):
+    """Admission order changes WHEN a request runs, never WHAT it decodes."""
+    prompts = prompts_for(cfg, rng, (7, 14, 10, 21))
+    deadlines = [8.0, 0.5, 4.0, 0.1]        # EDF admits in reverse-ish order
+    outs = {}
+    for order in ("fifo", "edf"):
+        eng = make_engine(ref, admission_order=order, shed_expired=False)
+        for p, d in zip(prompts, deadlines):
+            eng.submit(p, max_new=5, deadline_s=d)
+        outs[order] = {r.rid: r.tokens for r in eng.run_until_complete()}
+    assert outs["edf"] == outs["fifo"]
+
+
+def test_edf_prefers_earliest_deadline(cfg, params, ref, rng):
+    """With one free slot, the tightest-deadline request is admitted first
+    even though it was submitted last; FIFO breaks ties within a class."""
+    eng = make_engine(ref, num_slots=1, admission_order="edf",
+                      shed_expired=False)
+    prompts = prompts_for(cfg, rng, (6, 6, 6))
+    rids = [eng.submit(p, max_new=2, deadline_s=d)
+            for p, d in zip(prompts, (50.0, 50.0, 1.0))]
+    eng.step()
+    assert eng.last_tick.admitted_rids == [rids[2]]
+    eng.step()
+    assert eng.last_tick.admitted_rids == [rids[0]]      # FIFO within ties
+
+
+def test_chunked_prefill_first_token_after_last_chunk(cfg, params, ref, rng):
+    """A chunked prompt's first token may only appear once ALL its chunks
+    are spliced — and the TTFT stamp must cover that whole span."""
+    eng = make_engine(ref, chunk_prefill=8, chunk_budget=1)
+    plen = 24                                # 3 chunks of 8
+    rid = eng.submit(prompts_for(cfg, rng, (plen,))[0], max_new=3)
+    ticks = 0
+    while rid not in eng.last_tick.first_token_rids:
+        assert ticks < 50, "first token never arrived"
+        eng.step()
+        ticks += 1
+    assert ticks >= math.ceil(plen / 8)
+    results = eng.run_until_complete()
+    # max_new <= k_block: the request finished in the first-token tick
+    rec = next(r for r in eng.stats.latency.completed if r.rid == rid)
+    assert rec.first_token_t >= rec.admit_t
+    assert results[0].ttft_s >= results[0].queue_wait_s
+
+
+def test_chunk_budget_admits_long_prompts_faster(cfg, params, ref, rng):
+    """chunk_budget=N runs up to N prefill chunks per tick: the same long
+    prompt reaches its first token in fewer ticks than budget 1."""
+    prompt = prompts_for(cfg, rng, (24,))[0]
+    ticks = {}
+    for budget in (1, 4):
+        eng = make_engine(ref, chunk_prefill=8, chunk_budget=budget)
+        rid = eng.submit(prompt, max_new=2)
+        n = 0
+        while rid not in eng.last_tick.first_token_rids and n < 50:
+            eng.step()
+            n += 1
+        ticks[budget] = n
+        eng.run_until_complete()
+    assert ticks[4] < ticks[1], ticks
+
+
+def test_expired_queued_requests_are_shed(cfg, params, ref, rng):
+    eng = make_engine(ref, admission_order="edf", shed_expired=True)
+    doomed = [eng.submit(p, max_new=2, deadline_s=-1.0)
+              for p in prompts_for(cfg, rng, (5, 6))]
+    alive = eng.submit(prompts_for(cfg, rng, (7,))[0], max_new=2,
+                       deadline_s=1e9)
+    results = eng.run_until_complete()
+    by_rid = {r.rid: r for r in results}
+    # conservation: completed + shed == submitted, nothing lost
+    assert set(by_rid) == set(doomed) | {alive}
+    assert eng.stats.shed_requests == 2
+    for rid in doomed:
+        r = by_rid[rid]
+        assert r.status == "shed" and r.tokens == []
+        assert math.isfinite(r.e2e_s) and r.e2e_s >= 0.0
+    assert by_rid[alive].status == "ok" and len(by_rid[alive].tokens) == 2
+    assert eng.stats.latency.shed == 2 and eng.stats.latency.count == 1
+
+
+def test_mid_prefill_shed_books_wasted_serving_time(cfg, params, ref, rng):
+    eng = make_engine(ref, chunk_prefill=8, shed_expired=True)
+    # warm the chunk path so the doomed request's chunk time counts as
+    # serving (a cold first call is attributed to compile_s, not waste)
+    eng.generate(prompts_for(cfg, rng, (20,)), max_new=2)
+    # deadline just past the current clock: it survives admission, runs
+    # its first chunk (clock advances), and expires mid-prefill
+    rid = eng.submit(prompts_for(cfg, rng, (24,))[0], max_new=2,
+                     deadline_s=eng.clock + 1e-12)
+    results = eng.run_until_complete()
+    shed = [r for r in results if r.rid == rid]
+    assert len(shed) == 1 and shed[0].status == "shed"
+    assert eng.stats.shed_requests == 1
+    assert eng.stats.shed_wasted_s > 0.0
+    assert shed[0].prefill_s > 0.0
+    assert eng.num_active == 0              # the slot was released
+
+
+def test_oversized_reservation_rejected_at_submit(cfg, params, ref, rng):
+    """A request whose worst case can NEVER fit the page pool must be
+    rejected at submit — queued forever / mid-flight failure are bugs."""
+    eng = make_engine(ref, num_pages=2, page_size=16)
+    prompt = prompts_for(cfg, rng, (20,))[0]
+    with pytest.raises(ValueError, match="KV"):
+        eng.submit(prompt, max_new=44)      # needs 4 pages, pool has 2
+    with pytest.raises(ValueError):
+        eng.submit([], max_new=4)           # empty prompt
+    with pytest.raises(ValueError):
+        eng.submit(list(range(MAX_LEN)), max_new=4)     # >= max_len
+    assert eng.pending == 0 and not eng.records
+    # small-enough requests still pass
+    eng.submit(prompt, max_new=4)
+    assert eng.pending == 1
+
+
+# -- cluster serving clock + SLO path ----------------------------------------
+
+def test_cluster_timestamp_ordering_and_conservation(cfg, params, ref, rng):
+    clu = ClusterEngine(cfg, params, n_drives=2, jit_donor=ref,
+                        admission_order="edf", max_len=MAX_LEN, num_slots=2,
+                        chunk_prefill=8)
+    prompts = prompts_for(cfg, rng, (5, 12, 24, 9, 17, 7))
+    doomed = clu.submit(prompts[0], max_new=2, deadline_s=-1.0)
+    alive = [clu.submit(p, max_new=3, priority=i % 2, deadline_s=1e9)
+             for i, p in enumerate(prompts[1:])]
+    results = clu.run_until_complete()
+    assert {r.rid for r in results} == set(alive) | {doomed}
+    assert clu.stats.shed_requests == 1
+    assert clu.stats.latency.count == len(alive)
+    assert clu.clock > 0.0
+    for rec in clu.stats.latency.completed:
+        assert_record_ordered(rec)
+    for r in results:
+        if r.status == "ok":
+            assert r.ttft_s >= r.queue_wait_s >= 0.0
+            assert math.isfinite(r.e2e_s)
+    assert not clu.records and not clu._inflight
+
+
+def test_cluster_oversized_request_rejected_at_enqueue(cfg, params, ref):
+    clu = ClusterEngine(cfg, params, n_drives=1, jit_donor=ref,
+                        max_len=MAX_LEN, num_slots=2, num_pages=2,
+                        page_size=16)
+    with pytest.raises(ValueError, match="KV"):
+        clu.submit(list(range(20)), max_new=44)
+    assert clu.pending == 0 and not clu.records and not clu._inflight
+
+
+def test_cluster_fail_restart_keeps_original_submit(cfg, params, ref, rng):
+    """A fail()-restarted request re-stamps admit/first-token on the
+    surviving drive, but queue wait keeps the ORIGINAL submit time."""
+    clu = ClusterEngine(cfg, params, n_drives=2, jit_donor=ref,
+                        max_len=MAX_LEN, num_slots=2)
+    prompts = prompts_for(cfg, rng, (6, 8, 10, 7, 9, 11))
+    # max_new > k_block so requests span multiple ticks and are still
+    # mid-flight when the drive dies
+    rids = [clu.submit(p, max_new=20, deadline_s=1e9) for p in prompts]
+    submit_t = {rid: clu.records[rid].submit_t for rid in rids}
+    results = []
+    for _ in range(2):
+        results.extend(clu.step())
+    assert clu.drives[0].engine.num_active > 0      # someone is mid-flight
+    clu.fail(0)
+    results.extend(clu.run_until_complete())
+    assert sorted(r.rid for r in results) == rids
+    assert all(r.status == "ok" for r in results)
+    for rec in clu.stats.latency.records:
+        assert rec.submit_t == submit_t[rec.rid]     # original submit kept
+        assert_record_ordered(rec)

@@ -1,0 +1,115 @@
+"""Open-loop workload generator: determinism, arrival-process shape,
+trace persistence and time-axis scaling."""
+import math
+
+import pytest
+
+from repro.data.workload import (ARRIVAL_MODES, DEFAULT_CLASSES,
+                                 PriorityClass, WorkloadConfig,
+                                 generate_trace, load_trace, save_trace,
+                                 scale_trace)
+
+
+def _cfg(**kw):
+    base = dict(n_requests=64, vocab_size=1000, seed=0)
+    base.update(kw)
+    return WorkloadConfig(**base)
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("mode", ARRIVAL_MODES)
+def test_trace_deterministic_per_seed(mode):
+    a = generate_trace(_cfg(arrival=mode, seed=3))
+    b = generate_trace(_cfg(arrival=mode, seed=3))
+    assert a == b
+    c = generate_trace(_cfg(arrival=mode, seed=4))
+    assert [r.arrival_s for r in a] != [r.arrival_s for r in c]
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("mode", ARRIVAL_MODES)
+def test_arrivals_monotone_positive(mode):
+    trace = generate_trace(_cfg(arrival=mode))
+    times = [r.arrival_s for r in trace]
+    assert len(times) == 64
+    assert all(t > 0.0 and math.isfinite(t) for t in times)
+    assert times == sorted(times)
+
+
+@pytest.mark.fast
+def test_requests_respect_class_ranges():
+    trace = generate_trace(_cfg(n_requests=128))
+    by_name = {c.name: c for c in DEFAULT_CLASSES}
+    seen = set()
+    for r in trace:
+        c = by_name[r.cls]
+        seen.add(r.cls)
+        assert r.priority == c.priority
+        assert c.prompt_range[0] <= len(r.prompt) <= c.prompt_range[1]
+        assert c.max_new_range[0] <= r.max_new <= c.max_new_range[1]
+        assert all(0 <= t < 1000 for t in r.prompt)
+        # deadline is ABSOLUTE: arrival + the class's TTFT budget
+        assert r.deadline_s == pytest.approx(r.arrival_s + c.slo_s)
+    assert seen == set(by_name)       # 128 draws hit both classes
+
+
+@pytest.mark.fast
+def test_bursty_is_actually_bursty():
+    """The on-phase of each cycle must hold a disproportionate share of
+    arrivals (duty 0.25 at burst_factor 4 => ~80% of the mean rate mass)."""
+    cfg = _cfg(n_requests=256, arrival="bursty", rate=8.0)
+    trace = generate_trace(cfg)
+    on = sum(1 for r in trace
+             if (r.arrival_s % cfg.period_s) < cfg.duty * cfg.period_s)
+    assert on / len(trace) > 2 * cfg.duty
+
+
+@pytest.mark.fast
+def test_save_load_roundtrip(tmp_path):
+    trace = generate_trace(_cfg(n_requests=16, arrival="bursty"))
+    path = tmp_path / "trace.jsonl"
+    save_trace(str(path), trace)
+    assert load_trace(str(path)) == trace
+
+
+@pytest.mark.fast
+def test_scale_trace_scales_arrivals_and_deadlines():
+    trace = generate_trace(_cfg(n_requests=16))
+    scaled = scale_trace(trace, 0.5)
+    for r, s in zip(trace, scaled):
+        assert s.arrival_s == pytest.approx(r.arrival_s * 0.5)
+        assert s.deadline_s == pytest.approx(r.deadline_s * 0.5)
+        assert s.prompt == r.prompt and s.max_new == r.max_new
+        assert s.priority == r.priority and s.cls == r.cls
+    # best-effort requests stay best-effort
+    trace[0].deadline_s = None
+    assert scale_trace(trace, 2.0)[0].deadline_s is None
+    for bad in (0.0, -1.0, math.inf, math.nan):
+        with pytest.raises(ValueError):
+            scale_trace(trace, bad)
+
+
+@pytest.mark.fast
+def test_workload_config_validation():
+    with pytest.raises(ValueError):
+        _cfg(arrival="lumpy")
+    with pytest.raises(ValueError):
+        _cfg(n_requests=0)
+    for bad_rate in (0.0, -2.0, math.inf, math.nan):
+        with pytest.raises(ValueError):
+            _cfg(rate=bad_rate)
+    for bad_duty in (0.0, 1.5):
+        with pytest.raises(ValueError):
+            _cfg(arrival="bursty", duty=bad_duty)
+    with pytest.raises(ValueError):
+        _cfg(classes=())
+
+
+@pytest.mark.fast
+def test_custom_single_class():
+    cls = (PriorityClass("only", priority=2, weight=1.0, slo_s=None,
+                         prompt_range=(3, 3), max_new_range=(2, 2)),)
+    trace = generate_trace(_cfg(n_requests=8, classes=cls))
+    for r in trace:
+        assert len(r.prompt) == 3 and r.max_new == 2
+        assert r.priority == 2 and r.deadline_s is None
