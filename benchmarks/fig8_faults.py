@@ -1,0 +1,357 @@
+"""Chaos bench: cluster serving through injected drive failures.
+
+The paper's Table I deployment is a 36-drive storage server; at that
+scale drive failure is routine, so the serving claim only matters if it
+survives one.  This bench serves the same closed-loop request set three
+times on an N-drive replica cluster sharing one jit donor:
+
+  baseline        fault-free;
+  chaos           a seeded FaultSchedule crashes 1 of the N drives
+                  mid-trace (tick-based, exactly reproducible); the
+                  FailureDetector must notice the silence, declare the
+                  drive DEAD, auto-fail() it, and the retry budget must
+                  replay its in-flight work on the survivors;
+  chaos_no_retry  the same crash with max_retries=0 — the in-flight
+                  requests MUST finish status="failed" (the budget
+                  provably terminates instead of retrying forever).
+
+``--json`` writes ``BENCH_fig8_faults.json`` and FAILS loudly unless
+  * conservation holds in every run:
+    ``submitted == ok + shed + failed``;
+  * every request either run finished "ok" decoded token-identically to
+    the fault-free serial replay on a single engine (greedy decode makes
+    recovery exactly replayable);
+  * the chaos run's goodput stays inside the proportional band: losing 1
+    of N drives mid-trace may cost roughly its share of capacity plus
+    retry waste, not a collapse — ``qps_chaos / qps_base`` must be
+    within ``GOODPUT_BAND`` around ``(N-1)/N`` (re-measured up to
+    ATTEMPTS times, wall-clock gates only);
+  * the chaos run auto-failed EXACTLY the crashed drive (health shows
+    one DEAD) and chaos_no_retry failed at least one request with zero
+    retries granted;
+  * no drive's KV page free-list leaked (``check_balanced``);
+  * no metric in the payload is NaN.
+
+``--smoke`` is the CI chaos-smoke tier: 2 drives, a handful of requests,
+one mid-trace crash — fails on crash, lost requests, broken conservation
+or token divergence, no wall-clock gates.  ``--check`` re-scans the
+committed JSON for NaN without serving anything (the bench-guard hook).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+
+ATTEMPTS = 3
+# chaos/baseline qps ratio band around the (N-1)/N proportional loss:
+# the lower edge allows detector latency + retry replay waste, the upper
+# edge catches a bench that quietly stopped injecting the fault
+GOODPUT_BAND = (0.55, 1.35)
+
+
+def make_setup(seed: int = 0, num_slots: int = 2, max_len: int = 64):
+    """Model + params + a prewarmed k_block=1 donor engine (one XLA
+    compile for every cluster in the bench).  k_block=1 decodes one token
+    per tick, so the crash lands mid-request deterministically."""
+    import jax
+
+    from repro.config import reduced_config
+    from repro.models import model as M
+    from repro.train.serve_loop import ServeEngine
+
+    cfg = dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    ref = ServeEngine(cfg, params, max_len=max_len, num_slots=num_slots,
+                      k_block=1, prewarm=True)
+    return cfg, params, ref
+
+
+def build_requests(cfg, n_requests: int, seed: int):
+    import numpy as np
+
+    rng = np.random.default_rng(seed + 7)
+    return [rng.integers(0, cfg.vocab_size,
+                         int(rng.integers(4, 13))).tolist()
+            for _ in range(n_requests)]
+
+
+def oracle_tokens(ref, prompts, max_new: int):
+    """Fault-free serial replay on the donor: rid -> greedy tokens."""
+    return {i: r.tokens
+            for i, r in enumerate(ref.generate(prompts, max_new=max_new))}
+
+
+def _detector(n_drives: int):
+    """Tick-threshold detector tuned for the bench's short trace: a
+    handful of silent ticks is enough evidence (clock thresholds off so
+    detection is exactly reproducible tick-for-tick)."""
+    from repro.core.faults import FailureDetector
+
+    return FailureDetector(n_drives, suspect_ticks=3, dead_ticks=6,
+                           suspect_after_s=math.inf)
+
+
+def measure(cfg, params, ref, prompts, n_drives: int, max_new: int,
+            crash_drive=None, crash_tick: int = 0,
+            max_retries: int = 3, oracle=None) -> dict:
+    """One closed-loop run; returns the recovery metrics and enforces the
+    per-run invariants (conservation, free-list balance, token identity
+    of ok results against the oracle)."""
+    from repro.core.faults import DEAD, FaultSchedule
+    from repro.train.cluster_loop import ClusterEngine
+
+    faults = None
+    if crash_drive is not None:
+        faults = FaultSchedule.from_spec([
+            {"drive_id": crash_drive, "kind": "crash",
+             "at_tick": crash_tick}])
+    clu = ClusterEngine(cfg, params, n_drives=n_drives, jit_donor=ref,
+                        routing="least_loaded", max_len=ref.max_len,
+                        num_slots=ref.num_slots, k_block=1,
+                        faults=faults, detector=_detector(n_drives),
+                        max_retries=max_retries)
+    rids = [clu.submit(p, max_new=max_new) for p in prompts]
+    results = {r.rid: r for r in clu.run_until_complete()}
+    st = clu.stats
+    ok = sum(1 for r in results.values() if r.status == "ok")
+    shed = sum(1 for r in results.values() if r.status == "shed")
+    failed = sum(1 for r in results.values() if r.status == "failed")
+    if sorted(results) != rids:
+        raise RuntimeError(f"run lost requests: got {len(results)} of "
+                           f"{len(rids)}")
+    if ok + shed + failed != len(rids):
+        raise RuntimeError(f"conservation broken: {ok} ok + {shed} shed + "
+                           f"{failed} failed != {len(rids)} submitted")
+    for d in clu.drives:
+        if d.engine.pager is not None:
+            if d.engine.pager.num_in_use != 0:
+                raise RuntimeError(
+                    f"drive {d.drive_id} leaked "
+                    f"{d.engine.pager.num_in_use} KV pages")
+            d.engine.pager.check_balanced()
+    if oracle is not None:
+        for rid, r in results.items():
+            if r.status == "ok" and r.tokens != oracle[rid]:
+                raise RuntimeError(
+                    f"request {rid} diverged from the fault-free replay: "
+                    f"{r.tokens} vs {oracle[rid]}")
+    wall = st.cluster_s
+    return {
+        "submitted": len(rids),
+        "ok": ok,
+        "shed": shed,
+        "failed": failed,
+        "wall_s": wall,
+        "qps": ok / wall if wall > 0 else 0.0,
+        "tokens": st.tokens,
+        "faults_injected": st.faults_injected,
+        "auto_failed_drives": st.auto_failed_drives,
+        "health": list(st.health),
+        "dead_drives": sum(1 for h in st.health if h == DEAD),
+        "retries": st.retries,
+        "failed_requests": st.failed_requests,
+        "mean_active": st.mean_active,
+        "energy_per_query_mj": st.energy_per_query_mj,
+        "wasted_s": st.wasted_s,
+    }
+
+
+def scan_nan(obj, path: str = "") -> list:
+    """Every non-finite float in a (nested) payload, by dotted path."""
+    bad = []
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            bad += scan_nan(v, f"{path}.{k}" if path else str(k))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            bad += scan_nan(v, f"{path}[{i}]")
+    elif isinstance(obj, float) and not math.isfinite(obj):
+        bad.append(path)
+    return bad
+
+
+def run_chaos(emit=print, n_drives: int = 4, n_requests: int = 24,
+              max_new: int = 8, crash_tick: int = 8, seed: int = 0,
+              json_path=None, strict: bool = True, setup=None):
+    """Serve the trace fault-free, under a mid-trace crash, and under the
+    same crash with a zero retry budget; gate and return the payload."""
+    cfg, params, ref = setup if setup is not None else make_setup(seed)
+    prompts = build_requests(cfg, n_requests, seed)
+    oracle = oracle_tokens(ref, prompts, max_new)
+    crash_drive = n_drives - 1          # deterministic pick: the last drive
+
+    def measure_all():
+        return {
+            "baseline": measure(cfg, params, ref, prompts, n_drives,
+                                max_new, oracle=oracle),
+            "chaos": measure(cfg, params, ref, prompts, n_drives, max_new,
+                             crash_drive=crash_drive,
+                             crash_tick=crash_tick, oracle=oracle),
+            "chaos_no_retry": measure(cfg, params, ref, prompts, n_drives,
+                                      max_new, crash_drive=crash_drive,
+                                      crash_tick=crash_tick, max_retries=0,
+                                      oracle=oracle),
+        }
+
+    runs = measure_all()
+    # warm pass then steady state, like the other benches: the first pass
+    # may still trip fresh splice shapes at this trace's prompt lengths
+    runs = measure_all()
+
+    emit("table,run,ok,shed,failed,retries,dead,qps,wall_s,wasted_s")
+    for name, m in runs.items():
+        emit(f"fig8_faults,{name},{m['ok']},{m['shed']},{m['failed']},"
+             f"{m['retries']},{m['dead_drives']},{m['qps']:.2f},"
+             f"{m['wall_s']:.3f},{m['wasted_s']:.3f}")
+
+    if strict:
+        _gate_recovery(runs, n_drives)
+        for attempt in range(ATTEMPTS):
+            if _band_pass(runs, n_drives):
+                break
+            emit(f"goodput band missed, re-measuring "
+                 f"({attempt + 1}/{ATTEMPTS})")
+            runs = measure_all()
+            _gate_recovery(runs, n_drives)
+        _gate_band(runs, n_drives, emit)
+
+    payload = {
+        "bench": "fig8_faults",
+        "n_drives": n_drives,
+        "requests": n_requests,
+        "max_new": max_new,
+        "crash_drive": crash_drive,
+        "crash_tick": crash_tick,
+        "seed": seed,
+        "goodput_band": list(GOODPUT_BAND),
+        "runs": runs,
+    }
+    bad = scan_nan(payload)
+    if bad:
+        raise RuntimeError(f"NaN metrics in the payload: {bad}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        emit(f"wrote {json_path}")
+    b, c = runs["baseline"], runs["chaos"]
+    emit(f"chaos: killed drive {crash_drive} of {n_drives} at tick "
+         f"{crash_tick}; goodput {b['qps']:.2f} -> {c['qps']:.2f} qps "
+         f"({c['retries']} retries, {c['failed']} failed, "
+         f"{runs['chaos_no_retry']['failed']} failed with no budget)")
+    return payload
+
+
+def _gate_recovery(runs: dict, n_drives: int) -> None:
+    """The determinism-independent gates (no wall-clock in them)."""
+    b, c, z = runs["baseline"], runs["chaos"], runs["chaos_no_retry"]
+    if b["failed"] or b["dead_drives"] or b["faults_injected"]:
+        raise RuntimeError(f"baseline was not fault-free: {b}")
+    if b["ok"] != b["submitted"]:
+        raise RuntimeError(f"baseline shed/lost work: {b}")
+    if c["faults_injected"] != 1 or c["auto_failed_drives"] != 1 \
+            or c["dead_drives"] != 1:
+        raise RuntimeError(
+            f"chaos run did not kill exactly one drive: {c}")
+    if c["retries"] < 1:
+        raise RuntimeError(
+            f"the crash landed on no in-flight work (retries=0) — move "
+            f"crash_tick into the trace: {c}")
+    if c["ok"] != c["submitted"]:
+        raise RuntimeError(
+            f"chaos run lost requests despite a sufficient retry budget: "
+            f"{c}")
+    # retry budget termination: with max_retries=0 the crashed drive's
+    # in-flight work MUST fail out (and the run must have terminated for
+    # us to even be here)
+    if z["failed"] < 1 or z["retries"] != 0:
+        raise RuntimeError(
+            f"zero retry budget did not fail-fast: {z}")
+    if z["ok"] + z["failed"] != z["submitted"]:
+        raise RuntimeError(f"no-retry conservation broken: {z}")
+
+
+def _ratio(runs: dict) -> float:
+    return runs["chaos"]["qps"] / max(runs["baseline"]["qps"], 1e-9)
+
+
+def _band(n_drives: int):
+    prop = (n_drives - 1) / n_drives
+    return GOODPUT_BAND[0] * prop, GOODPUT_BAND[1]
+
+
+def _band_pass(runs: dict, n_drives: int) -> bool:
+    lo, hi = _band(n_drives)
+    return lo <= _ratio(runs) <= hi
+
+
+def _gate_band(runs: dict, n_drives: int, emit) -> None:
+    lo, hi = _band(n_drives)
+    r = _ratio(runs)
+    if not lo <= r <= hi:
+        raise RuntimeError(
+            f"chaos/baseline goodput ratio {r:.2f} outside "
+            f"[{lo:.2f}, {hi:.2f}] — losing 1 of {n_drives} drives should "
+            f"cost about its proportional share, not this")
+    emit(f"chaos gates: goodput ratio {r:.2f} in [{lo:.2f}, {hi:.2f}], "
+         f"conservation + token identity + free-list balance held")
+
+
+def run_smoke(emit=print) -> None:
+    """CI chaos-smoke: 2 drives, one mid-trace crash, no wall-clock
+    gates — conservation, detection, and token identity must hold."""
+    cfg, params, ref = make_setup()
+    prompts = build_requests(cfg, n_requests=6, seed=0)
+    oracle = oracle_tokens(ref, prompts, max_new=4)
+    m = measure(cfg, params, ref, prompts, n_drives=2, max_new=4,
+                crash_drive=1, crash_tick=2, oracle=oracle)
+    if m["dead_drives"] != 1 or m["auto_failed_drives"] != 1:
+        raise RuntimeError(f"chaos-smoke did not kill the drive: {m}")
+    if m["ok"] != m["submitted"]:
+        raise RuntimeError(f"chaos-smoke lost requests: {m}")
+    emit(f"chaos-smoke: ok ({m['ok']} ok, {m['retries']} retries, "
+         f"drive 1 dead, free-lists balanced)")
+
+
+def run_check(path: str, emit=print) -> None:
+    """bench-guard hook: the committed payload must be NaN-free (a NaN
+    means a degenerate chaos run was committed as the reference)."""
+    with open(path) as f:
+        payload = json.load(f)
+    bad = scan_nan(payload)
+    if bad:
+        raise RuntimeError(f"{path} carries NaN metrics: {bad}")
+    emit(f"{path}: NaN-free ({len(payload.get('runs', {}))} runs)")
+
+
+def main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write the chaos payload + run the gates")
+    ap.add_argument("--json-path", default="BENCH_fig8_faults.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI chaos-smoke: 2 drives, one crash, no "
+                         "wall-clock gates")
+    ap.add_argument("--check", action="store_true",
+                    help="scan the committed JSON for NaN and exit")
+    ap.add_argument("--drives", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--crash-tick", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.check:
+        run_check(args.json_path)
+        return
+    if args.smoke:
+        run_smoke()
+        return
+    run_chaos(n_drives=args.drives, n_requests=args.requests,
+              max_new=args.max_new, crash_tick=args.crash_tick,
+              seed=args.seed,
+              json_path=args.json_path if args.json else None)
+
+
+if __name__ == "__main__":
+    main()

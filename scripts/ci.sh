@@ -13,8 +13,9 @@
 #                               committed numbers (ratcheted from the old 0.5x
 #                               now that prewarm keeps compile out of decode_s);
 #                               also scans the committed BENCH_fig7_slo.json
-#                               for NaN metrics (a degenerate SLO run must
-#                               never be the committed reference)
+#                               and BENCH_fig8_faults.json for NaN metrics (a
+#                               degenerate run must never be the committed
+#                               reference)
 #   scripts/ci.sh slo-smoke     tiny bursty open-loop trace through the EDF
 #                               serve engine; fails on crash, lost requests,
 #                               or non-finite tail-latency stats
@@ -26,6 +27,10 @@
 #                               modeled 2x slower): the pull scheduler must
 #                               rate both drives (fast > slow) and serving
 #                               must stay token-identical to serial replay
+#   scripts/ci.sh chaos-smoke   2-replica cluster with a seeded mid-trace
+#                               crash of drive 1: the failure detector must
+#                               kill it, retries must recover every request
+#                               token-identically, and no KV page may leak
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
@@ -36,10 +41,12 @@ case "${1:-tier1}" in
   perf-smoke)    exec python -m benchmarks.fig5_throughput --engine --json \
                       --requests 4 --max-new 4 --num-slots 2 --k-block 8 ;;
   bench-guard)   python -m benchmarks.fig7_slo --check
+                 python -m benchmarks.fig8_faults --check
                  exec python -m benchmarks.fig5_throughput --engine \
                       --guard BENCH_fig5.json --guard-floor 0.8 ;;
   cluster-smoke) exec python -m benchmarks.fig6_cluster --smoke ;;
   slo-smoke)     exec python -m benchmarks.fig7_slo --smoke ;;
   hetero-smoke)  exec python -m benchmarks.fig6_cluster --hetero --smoke ;;
+  chaos-smoke)   exec python -m benchmarks.fig8_faults --smoke ;;
   tier1|*)       exec python -m pytest -x -q ;;
 esac

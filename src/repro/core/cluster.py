@@ -49,6 +49,17 @@ ROUTING_POLICIES = ("round_robin", "least_loaded", "data_local",
 Placement = Union[Dict[int, int], Callable[[int], int], None]
 
 
+class ClusterExhaustedError(RuntimeError):
+    """Every drive is draining/failed and queued work can never be served.
+
+    Subclasses ``RuntimeError`` (and keeps "draining/failed" in its
+    message) so callers matching on the old exception keep working.  When
+    the LAST healthy drive *fails*, the engine instead finishes queued
+    requests with ``status="failed"`` — this error marks the drain-only
+    corner, where the operator parked every drive with work still queued.
+    """
+
+
 def merge_ledgers(ledgers: Sequence[TransferLedger]) -> TransferLedger:
     """Fold per-drive ledgers into one cluster ledger (tiers and notes sum)."""
     out = TransferLedger()
@@ -291,6 +302,22 @@ class ClusterStats:
     latency: LatencyStats = field(default_factory=LatencyStats)
     shed_requests: int = 0
     shed_wasted_s: float = 0.0
+    # fault tolerance (PR 7): injected-fault and recovery accounting.
+    # health mirrors the FailureDetector's per-drive state each tick
+    # (healthy/suspect/dead); retries counts fail()-restarts granted;
+    # failed_requests are terminal status="failed" finishes (retry budget
+    # exhausted or the last drive died); hedge_wasted_s is serving time
+    # burned on the losing copy of a hedged dispatch (booked like
+    # shed_wasted_s).
+    health: List[str] = field(default_factory=list)
+    faults_injected: int = 0   # fault events that became active
+    auto_failed_drives: int = 0  # drives the detector (not the operator) killed
+    retries: int = 0
+    failed_requests: int = 0
+    hedges: int = 0            # hedged dispatches launched
+    hedges_won: int = 0        # hedge copy finished first (or primary died)
+    hedges_lost: int = 0       # primary finished first / hedge abandoned
+    hedge_wasted_s: float = 0.0
 
     def record_tick(self, n_active: int, tick_s: float,
                     tick_serial_s: Optional[float] = None) -> None:
@@ -415,6 +442,18 @@ class ClusterStats:
         return self.shed_wasted_s * self.mean_power_w * 1e3
 
     @property
+    def hedge_energy_mj(self) -> float:
+        """Energy burned on losing hedge copies, priced like shed work at
+        the run's mean wall power (0.0 when nothing was hedged)."""
+        return self.hedge_wasted_s * self.mean_power_w * 1e3
+
+    @property
+    def wasted_s(self) -> float:
+        """All serving time spent on work that was then thrown away —
+        shed requests plus losing hedge copies."""
+        return self.shed_wasted_s + self.hedge_wasted_s
+
+    @property
     def energy_reduction_vs_host(self) -> float:
         """Energy-per-query saving vs one host-side engine serving the same
         workload serially at ISP-disabled wall power (``server_power(0)``)."""
@@ -454,6 +493,21 @@ class ClusterStats:
             lines.append(f"shed: {self.shed_requests} requests "
                          f"({self.shed_wasted_s:.3f}s wasted, "
                          f"{self.shed_energy_mj:.1f} mJ)")
+        if self.faults_injected or self.auto_failed_drives or self.health:
+            state = ", ".join(self.health) if self.health else "untracked"
+            lines.append(f"faults: {self.faults_injected} injected; "
+                         f"health [{state}]; "
+                         f"{self.auto_failed_drives} drives auto-failed "
+                         f"by the detector")
+        if self.retries or self.failed_requests:
+            lines.append(f"recovery: {self.retries} retries granted, "
+                         f"{self.failed_requests} requests failed "
+                         f"permanently")
+        if self.hedges:
+            lines.append(f"hedges: {self.hedges} launched, "
+                         f"{self.hedges_won} won / {self.hedges_lost} lost "
+                         f"({self.hedge_wasted_s:.3f}s wasted, "
+                         f"{self.hedge_energy_mj:.1f} mJ)")
         for i, d in enumerate(self.drives):
             lines.append(
                 f"drive[{i}]: {d.requests} reqs, {d.tokens} tok, "

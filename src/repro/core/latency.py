@@ -54,9 +54,10 @@ class LatencyRecord:
     submit_t: float = NAN                # entered the shared queue
     admit_t: float = NAN                 # got a slot (re-stamped on restart)
     first_token_t: float = NAN           # first generated token emitted
-    finish_t: float = NAN                # completed (or shed)
+    finish_t: float = NAN                # completed (or shed / failed)
     n_tokens: int = 0
-    status: str = "pending"              # pending | ok | shed
+    status: str = "pending"              # pending | ok | shed | failed
+    retries: int = 0                     # fail()-restarts granted so far
 
     # -- derived metrics -----------------------------------------------------
 
@@ -95,10 +96,12 @@ class LatencyRecord:
         """A fail()-restarted request replays from its prompt: the service
         clock restarts (admit / first token re-stamped by the retry) but
         queue wait keeps the ORIGINAL submit — the user has been waiting
-        since then, whatever the cluster did in between."""
+        since then, whatever the cluster did in between.  ``retries``
+        counts the restarts so the retry budget is visible per record."""
         self.admit_t = NAN
         self.first_token_t = NAN
         self.n_tokens = 0
+        self.retries += 1
 
 
 @dataclass
@@ -122,6 +125,12 @@ class LatencyStats:
     @property
     def shed(self) -> int:
         return sum(1 for r in self.records if r.status == "shed")
+
+    @property
+    def failed(self) -> int:
+        """Requests that exhausted their retry budget (or died with the
+        last drive) — terminal, never served."""
+        return sum(1 for r in self.records if r.status == "failed")
 
     # -- percentiles (NaN over empty populations) ----------------------------
 
@@ -180,9 +189,10 @@ class LatencyStats:
 
     @property
     def slo_attainment(self) -> float:
-        """Fraction of ALL tracked requests (shed included — they missed by
-        construction) that met their deadline; NaN when nothing tracked."""
-        denom = self.count + self.shed
+        """Fraction of ALL tracked requests (shed and failed included —
+        both missed by construction) that met their deadline; NaN when
+        nothing tracked."""
+        denom = self.count + self.shed + self.failed
         return self.slo_met / denom if denom > 0 else NAN
 
     def goodput_qps(self, wall_s: float) -> float:
@@ -195,13 +205,14 @@ class LatencyStats:
     # -- reporting -----------------------------------------------------------
 
     def summary(self) -> str:
-        if self.count + self.shed == 0:
+        if self.count + self.shed + self.failed == 0:
             return "latency: no completed requests"
-        return (f"latency: {self.count} ok / {self.shed} shed; TTFT "
+        failed = f" / {self.failed} failed" if self.failed else ""
+        return (f"latency: {self.count} ok / {self.shed} shed{failed}; TTFT "
                 f"p50 {self.p50_ttft_s * 1e3:.1f} / p95 "
                 f"{self.p95_ttft_s * 1e3:.1f} / p99 "
                 f"{self.p99_ttft_s * 1e3:.1f} ms; e2e p99 "
                 f"{self.p99_e2e_s * 1e3:.1f} ms; TPOT "
                 f"{self.mean_tpot_s * 1e3:.2f} ms; queue wait "
                 f"{self.mean_queue_wait_s * 1e3:.1f} ms; SLO met "
-                f"{self.slo_met}/{self.count + self.shed}")
+                f"{self.slo_met}/{self.count + self.shed + self.failed}")

@@ -229,6 +229,11 @@ class ClusterAdmission:
         self._ewma: Dict[int, float] = {d: math.nan for d in range(n_drives)}
         self.samples: Dict[int, int] = {d: 0 for d in range(n_drives)}
         self._shares: Dict[int, int] = {}
+        # drives the failure detector currently suspects: their ticks are
+        # untrustworthy (a half-stalled drive reports garbage service
+        # times), so they neither update the EWMA nor take part in the
+        # share refit until released
+        self._quarantined: set = set()
 
     def observe(self, drive: int, block_s: float,
                 per_step_items: List[int]) -> None:
@@ -237,6 +242,8 @@ class ClusterAdmission:
         inner step."""
         if drive not in self._ewma:
             raise KeyError(f"unknown drive {drive}")
+        if drive in self._quarantined:
+            return
         if block_s <= 0.0 or not math.isfinite(block_s):
             return
         for dur, items in zip(split_block_service(block_s, per_step_items),
@@ -248,6 +255,24 @@ class ClusterAdmission:
             self._ewma[drive] = per_item if not math.isfinite(prev) else \
                 self.alpha * per_item + (1.0 - self.alpha) * prev
             self.samples[drive] += 1
+
+    def quarantine(self, drive: int) -> None:
+        """Stop trusting a SUSPECT drive's ticks: its observations are
+        dropped and ``quotas()`` refits shares over the others only — a
+        stalled drive must not poison the learned rates or keep a share
+        it cannot serve."""
+        if drive not in self._ewma:
+            raise KeyError(f"unknown drive {drive}")
+        self._quarantined.add(drive)
+
+    def unquarantine(self, drive: int) -> None:
+        """A recovered drive's ticks count again (its pre-quarantine EWMA
+        is kept — the hardware is the same, the stall was transient)."""
+        self._quarantined.discard(drive)
+
+    @property
+    def quarantined(self) -> List[int]:
+        return sorted(self._quarantined)
 
     def rate(self, drive: int) -> float:
         """Learned service rate in items/s; NaN until the drive has been
@@ -272,6 +297,12 @@ class ClusterAdmission:
         if not live:
             return {}
         live = sorted(set(live))
+        # quarantined drives are refit around, not into — unless EVERY
+        # live drive is quarantined, where excluding them all would leave
+        # nothing to serve at all (better a suspect share than none)
+        trusted = [d for d in live if d not in self._quarantined]
+        if trusted:
+            live = trusted
         if total < len(live):
             raise ValueError(f"quota total {total} cannot cover "
                              f"{len(live)} drives")

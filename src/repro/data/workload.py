@@ -221,6 +221,13 @@ class ReplayReport:
     def shed(self) -> int:
         return sum(1 for r in self.results if r.status == "shed")
 
+    @property
+    def failed(self) -> int:
+        """Terminal ``status="failed"`` finishes (retry budget exhausted or
+        the last drive died) — the third leg of the conservation invariant
+        ``submitted == completed + shed + failed``."""
+        return sum(1 for r in self.results if r.status == "failed")
+
 
 def replay_open_loop(engine, trace: List[TraceRequest],
                      use_deadlines: bool = True,

@@ -29,6 +29,18 @@ it), and shard re-placement on drain/fail is on unless
 ``--no-shard-replacement``.  The cluster prints per-drive AND aggregate
 stats — learned rates included — plus the live energy-per-query integral
 (paper Table I).
+
+Fault injection (implies the cluster path, even at --replicas 1):
+``--mttf S`` draws a seeded fault schedule (stalls / slowdowns / pool
+clamps / crashes) from exponential MTTF/MTTR distributions
+(``--mttr S``, ``--fault-seed N``), or ``--fault-trace FILE`` replays an
+explicit JSON event list (the ``FaultSchedule.from_spec`` form).  The
+failure detector auto-fails drives it declares DEAD; restarted requests
+spend their ``--max-retries`` budget and ``--hedge`` duplicates
+SUSPECT-stranded requests onto healthy drives.  The summary then carries
+the recovery story: faults injected, drive health, retries granted,
+requests failed terminally, hedge wins/losses and the serving time the
+lost copies burned.
 """
 from __future__ import annotations
 
@@ -131,6 +143,26 @@ def main() -> int:
                     help="keep static shard placement on drain/fail "
                          "(every re-routed request re-pays the shard's "
                          "link bytes instead of one migration charge)")
+    ap.add_argument("--mttf", type=float, default=0.0,
+                    help="mean seconds between injected faults per drive "
+                         "(0 = no fault injection); faults are drawn "
+                         "seeded from exponential MTTF/MTTR distributions")
+    ap.add_argument("--mttr", type=float, default=0.5,
+                    help="mean repair window (s) of injected transient "
+                         "faults (stall / slowdown / pool clamp)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="seed for the drawn fault schedule "
+                         "(default: --seed)")
+    ap.add_argument("--fault-trace", type=str, default=None,
+                    help="JSON file with an explicit fault event list "
+                         "(FaultSchedule.from_spec form); overrides --mttf")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="restarts a request may spend on drive failures "
+                         "before finishing status='failed'")
+    ap.add_argument("--hedge", action="store_true",
+                    help="duplicate SUSPECT-stranded requests onto healthy "
+                         "drives (first finisher wins; the loser's serving "
+                         "time is booked as hedge waste)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
@@ -149,7 +181,22 @@ def main() -> int:
         return AdmissionController(args.num_slots, host_rate=args.host_rate,
                                    csd_rate=args.csd_rate, n_csds=args.csds)
 
-    if args.replicas > 1:
+    faults = None
+    if args.fault_trace:
+        import json as _json
+
+        from repro.core.faults import FaultSchedule
+        with open(args.fault_trace) as f:
+            faults = FaultSchedule.from_spec(_json.load(f))
+    elif args.mttf > 0:
+        from repro.core.faults import FaultSchedule
+        fault_seed = args.seed if args.fault_seed is None else args.fault_seed
+        faults = FaultSchedule.from_rates(args.replicas, mttf_s=args.mttf,
+                                          mttr_s=args.mttr, seed=fault_seed)
+
+    if args.replicas > 1 or faults is not None:
+        # fault injection needs the cluster's detector/retry machinery,
+        # so it routes through ClusterEngine even at --replicas 1
         speed = None
         if args.speed_factor:
             speed = [float(s) for s in args.speed_factor.split(",")]
@@ -158,9 +205,12 @@ def main() -> int:
                                admission_factory=admission,
                                speed_factor=speed,
                                shard_replacement=not args.no_shard_replacement,
+                               faults=faults, max_retries=args.max_retries,
+                               hedge=args.hedge,
                                **engine_kw)
     else:
         engine = ServeEngine(cfg, params, admission=admission(), **engine_kw)
+    is_cluster = isinstance(engine, ClusterEngine)
 
     if args.arrival:
         classes = DEFAULT_CLASSES
@@ -185,7 +235,7 @@ def main() -> int:
               f"{lat.goodput_qps(report.wall_s):.2f} qps "
               f"(attainment {lat.slo_attainment:.0%}, "
               f"{report.shed} shed)")
-        summary = engine.summary() if args.replicas > 1 \
+        summary = engine.summary() if is_cluster \
             else engine.stats.summary()
         for line in summary.splitlines():
             print(f"[serve] {line}")
@@ -212,7 +262,7 @@ def main() -> int:
 
     t0 = time.perf_counter()
     for i, (prompt, max_new) in enumerate(requests):
-        if args.replicas > 1:
+        if is_cluster:
             shard = i % args.shards if args.shards else None
             engine.submit(prompt, max_new=max_new, shard_id=shard)
         else:
@@ -224,7 +274,7 @@ def main() -> int:
     print(f"[serve] {args.arch}: {len(results)} requests, {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s); "
           f"first: {results[0].tokens[:8]}")
-    summary = engine.summary() if args.replicas > 1 \
+    summary = engine.summary() if is_cluster \
         else engine.stats.summary()
     for line in summary.splitlines():
         print(f"[serve] {line}")

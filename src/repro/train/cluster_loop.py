@@ -58,8 +58,11 @@ from typing import Deque, Dict, List, Optional, Sequence
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
-from repro.core.cluster import (ClusterStats, DriveLoad, Placement, Router,
+from repro.core.cluster import (ClusterExhaustedError, ClusterStats,
+                                DriveLoad, Placement, Router,
                                 shard_spill_bytes)
+from repro.core.faults import (DEAD, HEALTHY, SUSPECT, FailureDetector,
+                               FaultSchedule)
 from repro.core.latency import LatencyRecord
 from repro.core.scheduler import ClusterAdmission
 from repro.train.serve_loop import GenResult, ServeEngine, collect_results
@@ -74,6 +77,11 @@ class ClusterRequest:
     spilled_bytes: float = 0.0    # spill charge of the current dispatch
     priority: int = 0
     deadline_s: Optional[float] = None  # absolute TTFT deadline (cluster clock)
+    # retry budget: fail()-restarts granted so far, and the earliest
+    # cluster-clock time the next dispatch may happen (exponential backoff
+    # — a request bouncing between sick drives must not hammer the queue)
+    retries: int = 0
+    not_before_s: float = 0.0
 
 
 @dataclass
@@ -83,6 +91,10 @@ class _Drive:
     speed: float = 1.0            # modeled hardware speed (0.5 = half rate)
     draining: bool = False
     failed: bool = False
+    # hidden ground truth of an injected crash: the drive stops responding
+    # (never steps again) but the CLUSTER is not told — only the
+    # FailureDetector can notice the silence and trigger fail()
+    crashed: bool = False
     # engine-local rid -> cluster-global rid (a request re-queued by
     # drain/fail gets a fresh local rid on whichever drive takes it next)
     rid_map: Dict[int, int] = field(default_factory=dict)
@@ -97,14 +109,20 @@ class _Drive:
             (self.engine.pending > 0 or self.engine.num_active > 0)
 
     def load(self, clock: float = 0.0, service_s: float = math.nan,
-             quota: Optional[int] = None) -> DriveLoad:
+             quota: Optional[int] = None,
+             accepting: Optional[bool] = None) -> DriveLoad:
+        """``accepting`` overrides the drain/fail view — the engine passes
+        False for SUSPECT drives so the router quarantines them from new
+        dispatch without the drive being administratively down."""
         eng = self.engine
         fill = 0.0
         if eng.pager is not None and eng.pager.num_pages > 0:
             fill = eng.pager.num_in_use / eng.pager.num_pages
         return DriveLoad(drive_id=self.drive_id, num_slots=eng.num_slots,
                          active=eng.num_active, pending=eng.pending,
-                         page_fill=fill, accepting=self.accepting,
+                         page_fill=fill,
+                         accepting=self.accepting if accepting is None
+                         else accepting,
                          clock=clock, service_s=service_s, quota=quota)
 
 
@@ -121,7 +139,12 @@ class ClusterEngine:
                  shard_replacement: bool = True,
                  shard_bytes: Optional[float] = None,
                  admission_order: str = "fifo",
-                 shed_expired: bool = True, **engine_kw):
+                 shed_expired: bool = True,
+                 faults: Optional[FaultSchedule] = None,
+                 detector: Optional[FailureDetector] = None,
+                 max_retries: int = 3,
+                 retry_backoff_s: float = 0.05,
+                 hedge: bool = False, **engine_kw):
         if n_drives < 1:
             raise ValueError("need at least one drive")
         self.cfg = cfg
@@ -207,6 +230,40 @@ class ClusterEngine:
         self.shed_expired = bool(shed_expired)
         self.clock = 0.0
         self.records: Dict[int, LatencyRecord] = {}
+        # fault tolerance (PR 7): an optional seeded FaultSchedule injects
+        # stalls/slowdowns/crashes/pool clamps per tick (hidden ground
+        # truth); the FailureDetector watches the cluster-VISIBLE signals
+        # (virtual clocks + per-tick progress) and auto-fail()s drives it
+        # declares DEAD.  Requests restarted by fail() carry a retry
+        # budget with exponential backoff; past max_retries they finish
+        # status="failed" instead of requeueing forever.  hedge=True
+        # additionally duplicates the oldest SUSPECT-stranded request onto
+        # a healthy drive — first finisher wins, the loser is canceled and
+        # its serving time booked as hedge_wasted_s.
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if retry_backoff_s < 0 or not math.isfinite(retry_backoff_s):
+            raise ValueError(f"retry_backoff_s must be finite and >= 0, "
+                             f"got {retry_backoff_s}")
+        self.faults = faults
+        self.detector = detector if detector is not None \
+            else FailureDetector(n_drives)
+        if self.detector.n_drives != n_drives:
+            raise ValueError(f"detector tracks {self.detector.n_drives} "
+                             f"drives, cluster has {n_drives}")
+        self.max_retries = int(max_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.hedge = bool(hedge)
+        self._tick = 0                 # fault-schedule tick index
+        # grid -> (primary_drive_id, hedge_drive_id) for in-flight hedges
+        self._hedges: Dict[int, tuple] = {}
+        # status="failed" results produced outside a step (operator fail())
+        # wait here until the next step()/run_until_complete() delivers them
+        self._failout: List[GenResult] = []
+        self._stuck = False
+        self._idle_grace = 0           # consecutive idle ticks granted to
+        # dispatch after a same-tick fail() requeue (see _idle_advance)
+        self.stats.health = list(self.detector.health)
 
     # -- intake --------------------------------------------------------------
 
@@ -276,14 +333,52 @@ class ClusterEngine:
         lost; greedy decode is deterministic so the retry reproduces the
         same tokens).  The dead drive's stats stay merged in the cluster
         view — the work it did (and the energy it burned) happened.
+
+        Recovery semantics (PR 7): each restart consumes one unit of the
+        request's retry budget and arms an exponential backoff; a request
+        already at ``max_retries`` finishes ``status="failed"`` instead of
+        requeueing.  A hedged request whose primary died is NOT restarted
+        — its hedge copy on the healthy drive simply becomes the primary.
+        The dead engine's slots and pages are released (a failed drive
+        mid-chunked-prefill would otherwise leak its partially spliced KV
+        pages forever), and if this was the LAST healthy drive every
+        queued request finishes ``status="failed"`` — conservation
+        (``submitted == ok + shed + failed``) holds even at total loss.
         Returns the number of requests re-queued."""
         d = self.drives[drive_id]
+        if d.failed:
+            return 0
         n = self._requeue_unprefilled(d)
+        self.detector.mark_dead(drive_id)
+        self.pull.unquarantine(drive_id)   # dead ≠ suspect: quotas refit
         retry: List[ClusterRequest] = []
+        failed_out: List[ClusterRequest] = []
         for slot in d.engine.slots:
             if slot.active and slot.rid in d.rid_map:
                 grid = d.rid_map.pop(slot.rid)
-                retry.append(self._inflight[grid])
+                req = self._inflight[grid]
+                pair = self._hedges.get(grid)
+                if pair is not None and pair[0] == drive_id:
+                    # the hedge copy outlived the primary: promote it (it
+                    # keeps running on its drive; no restart, no retry)
+                    self._hedges.pop(grid)
+                    self.stats.hedges_won += 1
+                    continue
+                if pair is not None and pair[1] == drive_id:
+                    # the hedge copy died with this drive; the primary is
+                    # still serving — abandon the hedge
+                    self._hedges.pop(grid)
+                    self.stats.hedges_lost += 1
+                    continue
+                if req.retries >= self.max_retries:
+                    failed_out.append(req)
+                    continue
+                req.retries += 1
+                self.stats.retries += 1
+                if self.retry_backoff_s > 0.0:
+                    req.not_before_s = self.clock + \
+                        self.retry_backoff_s * (2.0 ** (req.retries - 1))
+                retry.append(req)
                 rec = self.records.get(grid)
                 if rec is not None:
                     # the retry replays from the prompt: admit/first-token
@@ -297,10 +392,43 @@ class ClusterEngine:
         # _requeue_unprefilled just put back: they were dispatched earlier)
         for req in sorted(retry, key=lambda r: r.rid, reverse=True):
             self.queue.appendleft(req)
+        # free the dead engine's slots and their KV pages: in-flight
+        # requests (including mid-chunked-prefill ones with partially
+        # spliced pages) were restarted or failed out above — without this
+        # release the dead drive's page pool leaks its live pages forever
+        # (pager.check_balanced() is the regression gate)
+        for slot in d.engine.slots:
+            if slot.active:
+                d.engine._release_slot(slot)
+        d.engine.records.clear()
         d.failed = True
         d.draining = True
         self._replace_shards_of(drive_id)
+        for req in failed_out:
+            self._fail_request(req)
+        if not any(x.accepting for x in self.drives):
+            # the LAST drive died with requests still queued: nothing can
+            # ever serve them — fail them out now rather than deadlock
+            while self.queue:
+                self._fail_request(self.queue.popleft())
         return n + len(retry)
+
+    def _fail_request(self, req: ClusterRequest) -> None:
+        """Terminal failure: the request is out of retries (or out of
+        drives).  Emits a ``status="failed"`` GenResult and closes the
+        latency record — the original submit timestamp is kept, so the
+        record's e2e covers every retry the budget paid for."""
+        self._inflight.pop(req.rid, None)
+        self.stats.failed_requests += 1
+        res = GenResult(tokens=[], prefill_s=0.0, decode_s=0.0, rid=req.rid,
+                        status="failed", priority=req.priority)
+        rec = self.records.pop(req.rid, None)
+        if rec is not None:
+            rec.finish_t = self.clock
+            rec.status = "failed"
+            self.stats.latency.add(rec)
+            res.e2e_s = rec.e2e_s
+        self._failout.append(res)
 
     def _requeue_unprefilled(self, d: _Drive) -> int:
         """Pull everything still sitting in the drive's own queue back into
@@ -312,6 +440,15 @@ class ClusterEngine:
         while d.engine.queue:
             local = d.engine.queue.popleft()
             grid = d.rid_map.pop(local.rid)
+            pair = self._hedges.get(grid)
+            if pair is not None and pair[1] == d.drive_id:
+                # a still-queued hedge copy on a draining/failing drive:
+                # drop it (the primary is serving) instead of re-queueing
+                # a duplicate into the shared queue
+                self._hedges.pop(grid)
+                self.stats.hedges_lost += 1
+                d.engine.records.pop(local.rid, None)
+                continue
             backed.append(self._inflight[grid])
         for req in reversed(backed):
             if req.spilled_bytes:
@@ -355,8 +492,13 @@ class ClusterEngine:
 
     def _pull_quotas(self) -> Dict[int, int]:
         """Per-drive in-flight quotas from the cluster pull scheduler,
-        refit over the accepting drives (share ∝ learned rate)."""
-        live = [d.drive_id for d in self.drives if d.accepting]
+        refit over the accepting drives (share ∝ learned rate).  SUSPECT
+        drives are quarantined out — a stalled drive must not keep a
+        share it cannot serve (the scheduler also drops their ticks)."""
+        live = [d.drive_id for d in self.drives if d.accepting
+                and self.detector.health[d.drive_id] != SUSPECT]
+        if not live:
+            live = [d.drive_id for d in self.drives if d.accepting]
         if not live:
             return {}
         total = sum(self.drives[i].engine.num_slots for i in live)
@@ -411,8 +553,17 @@ class ClusterEngine:
         # tokens per completed request / the drive's learned token rate
         mean_items = (self.stats.tokens / self.stats.completed) \
             if self.stats.completed > 0 else math.nan
+        # retry backoff: a request whose not_before hasn't arrived is
+        # INELIGIBLE (not blocked) — dispatch steps around it, which is
+        # the one sanctioned reorder: token identity is per-request under
+        # greedy decode, so skipping a cooling-down retry cannot change
+        # anyone's output, only who waits
+        deferred: List[ClusterRequest] = []
         while self.queue:
             head = self.queue[0]
+            if head.not_before_s > self.clock:
+                deferred.append(self.queue.popleft())
+                continue
             if self.shard_replacement and head.shard_id is not None and \
                     not self.drives[self.router.home(head.shard_id)].accepting:
                 # lazy re-placement: the head's shard still points at a
@@ -420,11 +571,13 @@ class ClusterEngine:
                 self._migrate_shard(head.shard_id)
             loads = [d.load(clock=self._clocks[d.drive_id],
                             service_s=mean_items / self.pull.rate(d.drive_id),
-                            quota=quotas.get(d.drive_id))
+                            quota=quotas.get(d.drive_id),
+                            accepting=d.accepting and
+                            self.detector.health[d.drive_id] != SUSPECT)
                      for d in self.drives]
             route = self.router.pick(head.shard_id, loads)
             if route is None:
-                return
+                break
             req = self.queue.popleft()
             drive = self.drives[route.drive_id]
             local = drive.engine.submit(req.prompt, max_new=req.max_new)
@@ -437,6 +590,11 @@ class ClusterEngine:
                     self._spill_bytes_per_el)
                 self.stats.spill_ledger.add("link", req.spilled_bytes,
                                             "remote shard spill")
+        if deferred:
+            # cooling-down retries go back to the FRONT in original order
+            # (they are the oldest requests; their backoff, not their
+            # place in line, is what delays them)
+            self.queue.extendleft(reversed(deferred))
 
     def step(self) -> List[GenResult]:
         """One cluster tick: dispatch, then step every drive that has work.
@@ -458,7 +616,26 @@ class ClusterEngine:
         are stamped at the post-tick clock (the event completed somewhere
         inside the tick; the cluster cannot see sub-tick drive time
         without mixing clock domains, and a post-tick stamp is the
-        conservative, monotone choice)."""
+        conservative, monotone choice).
+
+        Fault injection (PR 7) wraps the tick: the schedule's ground truth
+        is applied FIRST (crashes silence drives, clamps shrink admissible
+        pools, stalls skip a drive's step, slowdowns inflate its measured
+        time), then the FailureDetector reads the tick's cluster-visible
+        evidence and may auto-``fail()`` a DEAD drive; SUSPECT drives are
+        quarantined from dispatch/quotas and optionally hedged around."""
+        tick = self._tick
+        self._tick += 1
+        if self.faults is not None:
+            self.stats.faults_injected += \
+                len(self.faults.begins(tick, self.clock))
+            for did in self.faults.crashes(tick, self.clock):
+                if not self.drives[did].failed:
+                    self.drives[did].crashed = True
+            for d in self.drives:
+                if not d.failed:
+                    d.engine.pool_clamp_frac = \
+                        self.faults.clamp(d.drive_id, tick, self.clock)
         shed = self._shed_queue()
         self._dispatch()
         out: List[GenResult] = []
@@ -466,15 +643,25 @@ class ClusterEngine:
         admit_events: List[int] = []
         first_tok_events: List[int] = []
         n_active = 0
+        progressed: set = set()
         for d in self.drives:
             if not d.has_work:
+                continue
+            if d.crashed or (self.faults is not None and self.faults.stalled(
+                    d.drive_id, tick, self.clock)):
+                # the drive does not respond this tick: its work sits, its
+                # virtual clock stands still — exactly the silence the
+                # detector is watching for
                 continue
             t0 = time.perf_counter()
             finished = d.engine.step()
             raw = time.perf_counter() - t0
             obs = d.engine.last_tick
             dt = max(raw - obs.compile_s, 0.0) / d.speed
+            if self.faults is not None:
+                dt *= self.faults.slowdown(d.drive_id, tick, self.clock)
             dts.append(dt)
+            progressed.add(d.drive_id)
             self._clocks[d.drive_id] += dt
             n_active += 1
             self.pull.observe(d.drive_id, dt, obs.per_step_items)
@@ -491,6 +678,9 @@ class ClusterEngine:
                 if r.rid not in d.rid_map:
                     continue               # abandoned by an earlier fail()
                 grid = d.rid_map.pop(r.rid)
+                pair = self._hedges.pop(grid, None)
+                if pair is not None:
+                    self._settle_hedge(grid, winner=d.drive_id, pair=pair)
                 self._inflight.pop(grid, None)
                 r.rid = grid
                 r.drive = d.drive_id
@@ -509,6 +699,33 @@ class ClusterEngine:
             self._lead = lead
             self.stats.record_tick(n_active, tick_s, sum(dts))
             self.clock += tick_s
+            self._idle_grace = 0
+        # failure detection on cluster-VISIBLE evidence only: which drives
+        # progressed, and how far the leading clock ran since each drive's
+        # last productive tick (ground-truth crash flags never leak here)
+        lead_clock = max(self._clocks)
+        dead_now: List[int] = []
+        for d in self.drives:
+            if d.failed:
+                continue
+            old, new = self.detector.observe(
+                d.drive_id, lead_clock,
+                progressed=d.drive_id in progressed,
+                has_work=d.has_work)
+            if new == DEAD and old != DEAD:
+                dead_now.append(d.drive_id)
+            elif new == SUSPECT and old != SUSPECT:
+                self.pull.quarantine(d.drive_id)
+            elif new == HEALTHY and old == SUSPECT:
+                self.pull.unquarantine(d.drive_id)
+        for did in dead_now:
+            self.stats.auto_failed_drives += 1
+            self.fail(did)
+        if self.hedge:
+            self._launch_hedges()
+        self.stats.health = list(self.detector.health)
+        if not dts:
+            self._idle_advance(tick)
         for grid in admit_events:
             rec = self.records.get(grid)
             if rec is not None and not math.isfinite(rec.admit_t):
@@ -530,18 +747,127 @@ class ClusterEngine:
             r.ttft_s = rec.ttft_s
             r.tpot_s = rec.tpot_s
             r.e2e_s = rec.e2e_s
+        if self._failout:
+            # terminal failures produced this tick (retry budget / last
+            # drive death) ride the tick's result list like sheds do
+            out = out + self._failout
+            self._failout = []
         out = shed + out
         self._finished.extend(out)
         return out
+
+    def _settle_hedge(self, grid: int, winner: int, pair: tuple) -> None:
+        """First finisher wins: cancel the losing copy, free its slot, and
+        book the serving time it burned as hedge waste (the availability
+        premium, priced like shed work)."""
+        primary, hedger = pair
+        loser = hedger if winner == primary else primary
+        if winner == hedger:
+            self.stats.hedges_won += 1
+        else:
+            self.stats.hedges_lost += 1
+        ld = self.drives[loser]
+        if ld.failed:
+            return                    # its copy died with the drive
+        local = next((l for l, g in ld.rid_map.items() if g == grid), None)
+        if local is None:
+            return
+        ld.rid_map.pop(local)
+        wasted = ld.engine.cancel(local)
+        if wasted:
+            self.stats.hedge_wasted_s += wasted
+
+    def _launch_hedges(self) -> None:
+        """Duplicate the oldest slot-stranded request of each SUSPECT
+        drive onto the healthiest drive with capacity.  At most one hedge
+        per stranded request; the copy pays no spill accounting (it is an
+        availability bet, not a placement decision)."""
+        for d in self.drives:
+            if d.failed or self.detector.health[d.drive_id] != SUSPECT:
+                continue
+            stranded = sorted(
+                d.rid_map[s.rid] for s in d.engine.slots
+                if s.active and s.rid in d.rid_map)
+            stranded = [g for g in stranded if g not in self._hedges]
+            if not stranded:
+                continue
+            grid = stranded[0]
+            req = self._inflight.get(grid)
+            if req is None:
+                continue
+            targets = [x for x in self.drives
+                       if x.drive_id != d.drive_id and x.accepting
+                       and self.detector.health[x.drive_id] == HEALTHY
+                       and x.load().capacity > 0]
+            if not targets:
+                continue
+            t = min(targets, key=lambda x: (x.load().load, x.drive_id))
+            local = t.engine.submit(req.prompt, max_new=req.max_new)
+            t.rid_map[local] = grid
+            self._hedges[grid] = (d.drive_id, t.drive_id)
+            self.stats.hedges += 1
+
+    def _idle_advance(self, tick: int) -> None:
+        """A tick where nothing stepped: time must still move, or stall
+        windows, retry backoffs, and deadlines would never elapse
+        (graceful degradation instead of deadlock).  Tick-based events
+        expire as ``step()`` calls pass, so they need no clock help;
+        clock-based boundaries and backoffs fast-forward the wall clock
+        (idle time, integrated at zero-active power).  When no progress
+        is possible at all, the engine marks itself stuck and
+        ``run_until_complete`` raises ``ClusterExhaustedError``."""
+        if not (self.queue or any(d.has_work for d in self.drives)):
+            return
+        if self.faults is not None and \
+                self.faults.next_tick_boundary(tick) is not None:
+            return
+        waits: List[float] = []
+        if self.faults is not None:
+            b = self.faults.next_clock_boundary(self.clock)
+            if b is not None:
+                waits.append(b)
+        waits += [r.not_before_s for r in self.queue
+                  if r.not_before_s > self.clock]
+        if waits:
+            to = min(waits)
+            dt = max(to - self.clock, 0.0)
+            self.clock = to
+            self.stats.record_tick(0, dt, 0.0)
+            self._idle_grace = 0
+            return
+        if any(not d.failed and d.has_work for d in self.drives):
+            self._idle_grace = 0
+            return       # the detector will declare them DEAD in bounded ticks
+        if self._idle_grace < 1 and \
+                any(r.not_before_s <= self.clock for r in self.queue) and \
+                any(not d.failed and d.accepting
+                    and self.detector.health[d.drive_id] != SUSPECT
+                    and d.load().capacity > 0 for d in self.drives):
+            # a fail() THIS tick requeued work after dispatch already ran
+            # (detection happens post-dispatch by design: dispatch uses
+            # last tick's health) — give the next tick's dispatch one
+            # chance before declaring the cluster exhausted
+            self._idle_grace += 1
+            return
+        self._stuck = True
 
     def run_until_complete(self) -> List[GenResult]:
         while self.queue or any(d.has_work for d in self.drives):
             if self.queue and not any(d.accepting for d in self.drives) \
                     and not any(d.has_work for d in self.drives):
-                raise RuntimeError(
+                raise ClusterExhaustedError(
                     f"{len(self.queue)} queued requests but every drive is "
                     f"draining/failed — nothing can serve them")
+            if self._stuck:
+                raise ClusterExhaustedError(
+                    f"{len(self.queue)} queued requests cannot make "
+                    f"progress: no drive can admit them (page pools "
+                    f"clamped?) and no fault/backoff boundary is pending "
+                    f"— the cluster is effectively draining/failed")
             self.step()
+        if self._failout:
+            self._finished.extend(self._failout)
+            self._failout = []
         out, self._finished = self._finished, []
         return sorted(out, key=lambda r: r.rid)
 

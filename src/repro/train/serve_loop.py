@@ -83,6 +83,8 @@ class GenResult:
     tier: str = "host"
     drive: int = 0               # cluster serving: which replica served it
     status: str = "ok"           # "ok" | "shed" (deadline-expired, dropped)
+                                 # | "failed" (retry budget exhausted /
+                                 #   the last drive died under it)
     priority: int = 0
     # per-request latency on the serving clock (NaN until measurable):
     # queue wait (submit -> slot), TTFT (submit -> first token), TPOT
@@ -446,6 +448,13 @@ class ServeEngine:
         self.admission_order = admission_order
         self.chunk_budget = max(int(chunk_budget), 1)
         self.shed_expired = shed_expired
+        # fault injection (page_pool_clamp): only this fraction of the KV
+        # page pool is admissible — NEW admissions backpressure against the
+        # clamped capacity, while in-flight requests keep their full
+        # worst-case reservation (a clamp degrades, it never fails a
+        # flying batch).  1.0 = unclamped; the cluster tier sets it per
+        # tick from the active fault schedule.
+        self.pool_clamp_frac = 1.0
         # virtual serving clock: advances by measured serving time (compile
         # excluded) and fast-forwards across idle via advance_clock() — all
         # LatencyRecord timestamps live on it
@@ -521,11 +530,21 @@ class ServeEngine:
                          self.page_size)
 
     def _reservable_pages(self) -> int:
-        """Free pages not spoken for by active slots' unallocated tail."""
+        """Free pages not spoken for by active slots' unallocated tail.
+
+        Under a ``pool_clamp_frac`` fault only that fraction of the pool
+        is admissible: the clamp shrinks what NEW admissions may reserve
+        (possibly below what is already live — then nothing is admissible
+        until the clamp lifts or slots free), but never touches in-flight
+        reservations, so mid-decode allocation stays infallible."""
         outstanding = sum(
             s.reserved_pages - int((self.page_table[s.index] >= 0).sum())
             for s in self.slots if s.active)
-        return self.pager.num_free - outstanding
+        free = self.pager.num_free
+        if self.pool_clamp_frac < 1.0:
+            cap = int(self.pager.num_pages * self.pool_clamp_frac)
+            free = min(free, cap - self.pager.num_in_use)
+        return free - outstanding
 
     def _kv_bytes_per_token(self) -> int:
         """K+V bytes one token row costs across all paged-eligible (full
@@ -665,6 +684,33 @@ class ServeEngine:
                                           deadline_s=deadline_s,
                                           submit_t=self.clock)
         return rid
+
+    def cancel(self, rid: int) -> Optional[float]:
+        """Abort a request WITHOUT producing a result — the cluster's
+        hedged dispatch uses this to retire the losing copy once the other
+        drive finished first.  Returns the serving seconds already burned
+        on the copy (0.0 if it was still queued), or None if the rid is
+        unknown (already finished — the caller lost the race).  The
+        latency record is dropped too: the surviving copy owns it."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                self.records.pop(rid, None)
+                return 0.0
+        for s in self.slots:
+            if s.active and s.rid == rid:
+                wasted = s.prefill_s + s.decode_s
+                was_decoding = s.decoding
+                self.records.pop(rid, None)
+                self._release_slot(s)
+                if was_decoding and self.k_block > 1:
+                    # the fused block keeps liveness on device; a released
+                    # slot must be marked dead there or the next block
+                    # would keep decoding into freed (re-allocatable) pages
+                    self._sync_slot_dev([s])
+                return wasted
+        self.records.pop(rid, None)
+        return None
 
     # -- serving clock + shedding --------------------------------------------
 

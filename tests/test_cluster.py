@@ -483,12 +483,32 @@ def test_fail_restarts_inflight_requests(cfg, params):
 
 
 def test_all_drives_down_raises(cfg, params, ref):
+    # drain() refuses new work but fails no one: requests stranded behind
+    # drained-only drives have no terminal status, so the cluster raises
     clu = make_cluster(cfg, params, ref, n_drives=2)
     clu.submit([1, 2, 3], max_new=2)
-    clu.fail(0)
-    clu.fail(1)
+    clu.drain(0)
+    clu.drain(1)
     with pytest.raises(RuntimeError, match="draining/failed"):
         clu.run_until_complete()
+
+
+def test_last_drive_fail_finishes_queue_as_failed(cfg, params, ref):
+    """fail() of the LAST healthy drive is a terminal event, not a hang:
+    queued requests finish with status="failed" and conservation holds."""
+    clu = make_cluster(cfg, params, ref, n_drives=2)
+    rids = [clu.submit([1, 2, 3], max_new=2), clu.submit([4, 5], max_new=2)]
+    clu.fail(0)
+    clu.fail(1)
+    res = clu.run_until_complete()
+    assert sorted(r.rid for r in res) == rids
+    assert all(r.status == "failed" and r.tokens == [] for r in res)
+    assert clu.stats.failed_requests == len(rids)
+    assert clu.stats.completed == 0
+    # latency records carry the terminal status too
+    assert clu.stats.latency.failed == len(rids)
+    assert clu.stats.latency.count == 0
+    assert clu.fail(0) == 0                        # idempotent
 
 
 def test_jit_donor_rejects_mismatched_wiring(cfg, params, ref):

@@ -1,0 +1,590 @@
+"""Fault tier: injection schedules, the SUSPECT/DEAD detector, retry
+budgets, hedged dispatch, pool clamps, and the conservation invariant
+``submitted == ok + shed + failed`` under arbitrary fault schedules.
+
+Pure-math tests (FaultEvent / FaultSchedule / FailureDetector /
+quarantine) are fast-marked; the engine-backed tests inject faults into a
+real replica cluster and assert the ok outputs stay token-identical to a
+fault-free serial replay — greedy decode makes recovery exactly
+replayable, which is the whole reason the schedule is seeded."""
+import dataclasses
+import math
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import reduced_config
+from repro.core.cluster import ClusterExhaustedError, ClusterStats
+from repro.core.faults import (DEAD, HEALTHY, SUSPECT, FailureDetector,
+                               FaultEvent, FaultSchedule)
+from repro.core.latency import LatencyRecord, LatencyStats
+from repro.core.scheduler import ClusterAdmission
+from repro.models import model as M
+from repro.train.cluster_loop import ClusterEngine
+from repro.train.serve_loop import ServeEngine
+
+MAX_LEN = 64
+
+
+# ---------------------------------------------------------------------------
+# pure: fault events + schedules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent(0, "meltdown", at_tick=1)
+    with pytest.raises(ValueError, match="exactly one"):
+        FaultEvent(0, "stall", at_tick=1, at_s=1.0)
+    with pytest.raises(ValueError, match="exactly one"):
+        FaultEvent(0, "stall")
+    with pytest.raises(ValueError, match="drive_id"):
+        FaultEvent(-1, "stall", at_tick=1)
+    with pytest.raises(ValueError, match="duration"):
+        FaultEvent(0, "stall", at_tick=1, duration=-2.0)
+    with pytest.raises(ValueError, match="slowdown factor"):
+        FaultEvent(0, "slowdown", at_tick=1, duration=1, factor=0.5)
+    with pytest.raises(ValueError, match="page_pool_clamp factor"):
+        FaultEvent(0, "page_pool_clamp", at_tick=1, duration=1, factor=1.5)
+    # crashes ignore duration entirely (death is permanent)
+    e = FaultEvent(0, "crash", at_s=2.0)
+    assert e.end == math.inf
+    assert not e.active(0, 1.9) and e.active(0, 2.0) and e.active(0, 99.0)
+
+
+@pytest.mark.fast
+def test_fault_event_windows_tick_and_clock_basis():
+    t = FaultEvent(1, "stall", at_tick=3, duration=2)
+    assert [t.active(k, 0.0) for k in range(7)] == \
+        [False, False, False, True, True, False, False]
+    assert t.tick_based and t.start == 3 and t.end == 5
+    c = FaultEvent(1, "slowdown", at_s=1.0, duration=0.5, factor=2.0)
+    assert not c.active(99, 0.99)      # clock basis ignores the tick index
+    assert c.active(0, 1.0) and c.active(0, 1.49) and not c.active(0, 1.5)
+
+
+@pytest.mark.fast
+def test_schedule_queries_compose_and_report_once():
+    sch = FaultSchedule.from_spec([
+        {"drive_id": 0, "kind": "stall", "at_tick": 2, "duration": 3},
+        {"drive_id": 0, "kind": "slowdown", "at_tick": 2, "duration": 4,
+         "factor": 2.0},
+        {"drive_id": 0, "kind": "slowdown", "at_tick": 3, "duration": 2,
+         "factor": 3.0},
+        {"drive_id": 1, "kind": "crash", "at_tick": 4},
+        {"drive_id": 1, "kind": "page_pool_clamp", "at_tick": 0,
+         "duration": 10, "factor": 0.5},
+    ])
+    # begins() reports each event exactly once, at its start
+    assert len(sch.begins(0, 0.0)) == 1            # the clamp
+    assert len(sch.begins(1, 0.0)) == 0
+    assert len(sch.begins(2, 0.0)) == 2            # stall + first slowdown
+    assert sch.crashes(3, 0.0) == []
+    assert sch.crashes(4, 0.0) == [1]
+    assert sch.crashes(5, 0.0) == []               # delivered once
+    # a delivered crash still reads as a permanent stall (silence) —
+    # ground truth for the engine, invisible to the detector
+    assert sch.stalled(1, 99, 0.0)
+    assert sch.stalled(0, 2, 0.0) and not sch.stalled(0, 5, 0.0)
+    # overlapping slowdowns compound; clamps take the min
+    assert sch.slowdown(0, 3, 0.0) == pytest.approx(6.0)
+    assert sch.slowdown(0, 6, 0.0) == pytest.approx(1.0)
+    assert sch.clamp(1, 1, 0.0) == pytest.approx(0.5)
+    assert sch.clamp(0, 1, 0.0) == 1.0
+    # boundaries: next start/end strictly after now (crash end = inf never)
+    assert sch.next_tick_boundary(0) == 2
+    assert sch.next_tick_boundary(4) == 5
+    assert sch.next_tick_boundary(10) is None
+    assert sch.next_clock_boundary(0.0) is None    # all tick-based
+
+
+@pytest.mark.fast
+def test_schedule_from_rates_is_seeded_and_valid():
+    a = FaultSchedule.from_rates(4, mttf_s=2.0, mttr_s=0.5, seed=3)
+    b = FaultSchedule.from_rates(4, mttf_s=2.0, mttr_s=0.5, seed=3)
+    c = FaultSchedule.from_rates(4, mttf_s=2.0, mttr_s=0.5, seed=4)
+    assert [dataclasses.astuple(e) for e in a.events] == \
+        [dataclasses.astuple(e) for e in b.events]
+    assert [dataclasses.astuple(e) for e in a.events] != \
+        [dataclasses.astuple(e) for e in c.events]
+    assert a.events                                 # 60s horizon, 2s MTTF
+    for e in a.events:
+        assert 0 <= e.drive_id < 4
+        assert e.at_s is not None and 0.0 < e.at_s < 60.0
+        assert e.kind != "crash" or e.end == math.inf
+    # a crashed drive draws no further events
+    for d in range(4):
+        mine = [e for e in a.events if e.drive_id == d]
+        crash = [i for i, e in enumerate(mine) if e.kind == "crash"]
+        assert not crash or crash == [len(mine) - 1]
+    with pytest.raises(ValueError, match="mttf"):
+        FaultSchedule.from_rates(2, mttf_s=0.0, mttr_s=1.0)
+    with pytest.raises(ValueError, match="crash_prob"):
+        FaultSchedule.from_rates(2, mttf_s=1.0, mttr_s=1.0, crash_prob=2.0)
+
+
+# ---------------------------------------------------------------------------
+# pure: failure detector state machine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_detector_suspects_then_kills_on_zero_progress_ticks():
+    det = FailureDetector(2, suspect_after_s=math.inf, suspect_ticks=2,
+                          dead_ticks=4)
+    assert det.observe(0, 0.0, progressed=True, has_work=True) == \
+        (HEALTHY, HEALTHY)
+    # silent with work: 2 ticks -> SUSPECT, 4 -> DEAD (terminal)
+    assert det.observe(0, 1.0, False, True) == (HEALTHY, HEALTHY)
+    assert det.observe(0, 2.0, False, True) == (HEALTHY, SUSPECT)
+    assert det.suspects == [0]
+    assert det.observe(0, 3.0, False, True) == (SUSPECT, SUSPECT)
+    assert det.observe(0, 4.0, False, True) == (SUSPECT, DEAD)
+    assert det.dead == [0]
+    assert det.observe(0, 5.0, True, True) == (DEAD, DEAD)   # no resurrection
+    # drive 1 never observed: still healthy
+    assert det.health[1] == HEALTHY
+
+
+@pytest.mark.fast
+def test_detector_lag_threshold_and_recovery():
+    det = FailureDetector(1, suspect_after_s=1.0, suspect_ticks=100,
+                          dead_after_s=3.0, dead_ticks=400)
+    det.observe(0, 5.0, True, True)            # productive at lead=5
+    # lag is measured since the LAST PRODUCTIVE tick, not absolute skew
+    assert det.observe(0, 5.9, False, True)[1] == HEALTHY
+    assert det.observe(0, 6.1, False, True)[1] == SUSPECT
+    # a productive tick clears suspicion AND re-bases the lag
+    assert det.observe(0, 6.2, True, True)[1] == HEALTHY
+    assert det.observe(0, 7.1, False, True)[1] == HEALTHY    # lag only 0.9
+    assert det.observe(0, 9.3, False, True)[1] == DEAD       # lag 3.1 > 3.0
+
+
+@pytest.mark.fast
+def test_detector_never_suspects_idle_drives():
+    det = FailureDetector(1, suspect_after_s=10.0, suspect_ticks=1)
+    for lead in (1.0, 50.0, 1000.0):
+        assert det.observe(0, lead, progressed=False, has_work=False) == \
+            (HEALTHY, HEALTHY)
+    # idle ticks re-base the lag: work arriving later starts from scratch
+    assert det.observe(0, 1000.5, False, True)[1] == SUSPECT  # ticks=1
+
+
+@pytest.mark.fast
+def test_detector_validation_and_mark_dead():
+    with pytest.raises(ValueError, match="suspect"):
+        FailureDetector(1, suspect_after_s=0.0)
+    with pytest.raises(ValueError, match="dead thresholds"):
+        FailureDetector(1, suspect_after_s=1.0, dead_after_s=0.5)
+    det = FailureDetector(3)
+    assert det.dead_after_s == pytest.approx(4 * det.suspect_after_s)
+    assert det.dead_ticks == 4 * det.suspect_ticks
+    det.mark_dead(1)
+    assert det.health == [HEALTHY, DEAD, HEALTHY]
+    assert det.observe(1, 0.0, True, True) == (DEAD, DEAD)
+
+
+@pytest.mark.fast
+def test_quarantine_drops_observations_and_refits_quotas():
+    pull = ClusterAdmission(3)
+    for d in range(3):
+        for _ in range(4):
+            pull.observe(d, 0.1 * (d + 1), [2])   # drive 0 fastest
+    q = pull.quotas(6, [0, 1, 2])
+    assert sum(q.values()) == 6 and q[0] > q[2]
+    pull.quarantine(1)
+    assert pull.quarantined == [1]
+    r1 = pull.rate(1)
+    pull.observe(1, 99.0, [1])                    # garbage tick: dropped
+    assert pull.rate(1) == pytest.approx(r1)
+    q = pull.quotas(6, [0, 1, 2])
+    assert q.get(1, 0) == 0 and sum(q.values()) == 6
+    # EVERY live drive quarantined: fall back to all of them (serve
+    # degraded rather than not at all)
+    pull.quarantine(0)
+    pull.quarantine(2)
+    q = pull.quotas(6, [0, 1, 2])
+    assert sum(q.values()) == 6 and set(q) == {0, 1, 2}
+    # release keeps the pre-quarantine EWMA (transient stall, same drive)
+    pull.unquarantine(1)
+    assert pull.quarantined == [0, 2]
+    assert pull.rate(1) == pytest.approx(r1)
+    with pytest.raises(KeyError):
+        pull.quarantine(7)
+
+
+@pytest.mark.fast
+def test_latency_failed_accounting_and_restart_budget():
+    stats = LatencyStats()
+    ok = LatencyRecord(rid=0, submit_t=0.0)
+    ok.admit_t = ok.first_token_t = 0.1
+    ok.finish_t, ok.status = 0.2, "ok"
+    failed = LatencyRecord(rid=1, submit_t=0.0, deadline_s=1.0)
+    failed.restart()
+    failed.restart()
+    failed.finish_t, failed.status = 5.0, "failed"
+    stats.add(ok)
+    stats.add(failed)
+    assert stats.count == 1 and stats.failed == 1 and stats.shed == 0
+    # a failed request missed its SLO by definition: the denominator counts it
+    assert stats.slo_attainment == pytest.approx(0.5)
+    assert "1 failed" in stats.summary()
+    # restart() keeps the ORIGINAL submit (the user waited through every
+    # retry) and counts the budget spent
+    assert failed.retries == 2 and failed.submit_t == 0.0
+    assert failed.e2e_s == pytest.approx(5.0)
+    assert not math.isfinite(failed.admit_t)       # re-stamped on retry
+
+
+@pytest.mark.fast
+def test_cluster_stats_surface_fault_counters():
+    stats = ClusterStats()
+    stats.record_tick(2, 0.5)
+    stats.completed = 4
+    stats.faults_injected = 3
+    stats.auto_failed_drives = 1
+    stats.health = [HEALTHY, DEAD]
+    stats.retries = 2
+    stats.failed_requests = 1
+    stats.hedges, stats.hedges_won, stats.hedges_lost = 2, 1, 1
+    stats.hedge_wasted_s = 0.25
+    assert stats.wasted_s == pytest.approx(0.25 + stats.shed_wasted_s)
+    assert stats.hedge_energy_mj > 0.0
+    s = stats.summary()
+    assert "faults" in s and "dead" in s and "retries" in s and "hedge" in s
+
+
+# ---------------------------------------------------------------------------
+# engine-backed: chaos against a real replica cluster
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def ref_k1(cfg, params):
+    """k_block=1 oracle/donor: one decode step per tick, so injected
+    faults land mid-flight deterministically."""
+    return ServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2, k_block=1)
+
+
+@pytest.fixture(scope="module")
+def trace(cfg, ref_k1):
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (5, 9, 7, 11)]
+    want = [r.tokens for r in ref_k1.generate(prompts, max_new=6)]
+    return prompts, want
+
+
+def make_cluster(cfg, params, ref_k1, **kw):
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("k_block", 1)
+    kw.setdefault("routing", "round_robin")
+    return ClusterEngine(cfg, params, jit_donor=ref_k1, **kw)
+
+
+def assert_conserved_and_balanced(clu, res, n_submitted):
+    ok = sum(1 for r in res if r.status == "ok")
+    shed = sum(1 for r in res if r.status == "shed")
+    failed = sum(1 for r in res if r.status == "failed")
+    assert n_submitted == ok + shed + failed
+    for d in clu.drives:
+        if d.failed or not d.has_work:
+            assert d.engine.pager.num_in_use == 0
+            d.engine.pager.check_balanced()
+
+
+def test_crash_is_detected_and_recovered_token_identically(
+        cfg, params, ref_k1, trace):
+    """The tentpole path: a hidden crash mid-decode -> zero-progress ticks
+    -> SUSPECT -> DEAD -> auto-fail() -> retries replay on the survivor
+    and reproduce the oracle's tokens exactly."""
+    prompts, want = trace
+    faults = FaultSchedule.from_spec(
+        [{"drive_id": 1, "kind": "crash", "at_tick": 3}])
+    det = FailureDetector(2, suspect_ticks=2, dead_ticks=4,
+                          suspect_after_s=math.inf)
+    clu = make_cluster(cfg, params, ref_k1, n_drives=2, faults=faults,
+                       detector=det)
+    rids = [clu.submit(p, max_new=6) for p in prompts]
+    res = {r.rid: r for r in clu.run_until_complete()}
+    assert sorted(res) == rids
+    assert [res[r].tokens for r in rids] == want
+    assert clu.stats.health == [HEALTHY, DEAD]
+    assert clu.stats.faults_injected == 1
+    assert clu.stats.auto_failed_drives == 1
+    assert clu.stats.retries > 0                   # in-flight work restarted
+    assert clu.stats.failed_requests == 0          # budget sufficed
+    assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+    # the detector's verdict is in the latency records too
+    assert clu.stats.latency.count == len(rids)
+
+
+def test_fail_requeue_after_dispatch_reaches_idle_survivor(cfg, params,
+                                                           ref_k1):
+    """Regression: detection runs AFTER dispatch inside a tick, so a
+    fail()'s requeued request can land in the queue when every surviving
+    drive is already idle.  The idle-advance path must grant dispatch one
+    more tick instead of raising ClusterExhaustedError.  Fused decode
+    blocks (k_block>1) make the window easy to hit: whole requests finish
+    per tick, so the survivor drains while the crashed drive sits."""
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            rng.integers(4, 17)).tolist() for _ in range(6)]
+    want = [r.tokens for r in ref_k1.generate(prompts, max_new=6)]
+    faults = FaultSchedule.from_spec(
+        [{"drive_id": 1, "kind": "crash", "at_tick": 1}])
+    det = FailureDetector(2, suspect_ticks=2, dead_ticks=4,
+                          suspect_after_s=math.inf)
+    # no jit_donor: ref_k1 is k_block=1 wiring, this cluster needs the
+    # fused block (the donor check rightly refuses the mismatch)
+    clu = ClusterEngine(cfg, params, n_drives=2, routing="round_robin",
+                        max_len=MAX_LEN, num_slots=2, k_block=8,
+                        faults=faults, detector=det)
+    rids = [clu.submit(p, max_new=6) for p in prompts]
+    res = {r.rid: r for r in clu.run_until_complete()}
+    assert sorted(res) == rids
+    assert [res[r].tokens for r in rids] == want
+    assert not clu._stuck
+    assert clu.stats.health == [HEALTHY, DEAD]
+    assert clu.stats.auto_failed_drives == 1
+    assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+
+
+def test_stall_suspects_quarantines_then_recovers(cfg, params, ref_k1,
+                                                  trace):
+    """A transient stall must NOT kill the drive: SUSPECT while silent
+    (quarantined from quotas), HEALTHY again on the first productive tick,
+    and every token identical to the fault-free oracle."""
+    prompts, want = trace
+    faults = FaultSchedule.from_spec(
+        [{"drive_id": 1, "kind": "stall", "at_tick": 2, "duration": 4}])
+    det = FailureDetector(2, suspect_ticks=2, dead_ticks=1000,
+                          suspect_after_s=math.inf)
+    clu = make_cluster(cfg, params, ref_k1, n_drives=2, faults=faults,
+                       detector=det)
+    rids = [clu.submit(p, max_new=6) for p in prompts]
+    saw_suspect = saw_quarantine = False
+    while clu.queue or any(d.has_work for d in clu.drives):
+        clu.step()
+        saw_suspect |= clu.stats.health[1] == SUSPECT
+        saw_quarantine |= clu.pull.quarantined == [1]
+    got = {r.rid: r for r in clu._finished}
+    assert sorted(got) == rids
+    assert [got[r].tokens for r in rids] == want
+    assert saw_suspect and saw_quarantine
+    assert clu.stats.health == [HEALTHY, HEALTHY]  # recovered
+    assert clu.pull.quarantined == []              # released on recovery
+    assert clu.stats.auto_failed_drives == 0
+    assert clu.stats.retries == 0                  # nothing restarted
+    assert_conserved_and_balanced(clu, list(got.values()), len(rids))
+
+
+def test_retry_budget_exhaustion_fails_requests_terminally(cfg, params,
+                                                           ref_k1):
+    """max_retries=0: a fail() mid-flight may not requeue — the in-flight
+    requests finish status="failed" with their ORIGINAL submit time, and
+    conservation still holds."""
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (5, 9, 7, 11)]
+    clu = make_cluster(cfg, params, ref_k1, n_drives=2, max_retries=0)
+    rids = [clu.submit(p, max_new=6) for p in prompts]
+    clu.step()
+    clu.step()                                     # drive 1 mid-decode
+    assert clu.stats.drives[1].requests > 0
+    clu.fail(1)
+    res = {r.rid: r for r in clu.run_until_complete()}
+    res.update({r.rid: r for r in clu._finished})
+    assert sorted(res) == rids
+    failed = [r for r in res.values() if r.status == "failed"]
+    assert failed and clu.stats.failed_requests == len(failed)
+    assert clu.stats.retries == 0                  # budget was zero
+    assert all(r.tokens == [] for r in failed)
+    recs = [r for r in clu.stats.latency.records if r.status == "failed"]
+    assert len(recs) == len(failed)
+    assert all(r.submit_t == 0.0 and r.retries == 0 for r in recs)
+    assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+
+
+def test_hedged_dispatch_rescues_suspect_stranded_request(cfg, params,
+                                                          ref_k1, trace):
+    """hedge=True: the oldest slot-stranded request of a SUSPECT drive is
+    duplicated onto a healthy drive; the first finisher wins, the loser's
+    burned serving time is booked as hedge waste."""
+    prompts, want = trace
+    # two requests only: round_robin puts one on each drive, leaving the
+    # healthy drive a free slot to hedge into; the stall outlives the run
+    faults = FaultSchedule.from_spec(
+        [{"drive_id": 1, "kind": "stall", "at_tick": 2, "duration": 10000}])
+    det = FailureDetector(2, suspect_ticks=2, dead_ticks=10 ** 6,
+                          suspect_after_s=math.inf)
+    clu = make_cluster(cfg, params, ref_k1, n_drives=2, faults=faults,
+                       detector=det, hedge=True)
+    rids = [clu.submit(p, max_new=6) for p in prompts[:2]]
+    for _ in range(400):
+        clu.step()
+        if not (clu.queue or any(not d.failed and d.engine.num_active
+                                 for d in clu.drives if d.drive_id == 0)):
+            if all(r in {x.rid for x in clu._finished} for r in rids):
+                break
+    got = {r.rid: r for r in clu._finished}
+    assert sorted(got) == rids
+    assert [got[r].tokens for r in rids] == want[:2]   # hedge replays exactly
+    assert clu.stats.hedges >= 1
+    assert clu.stats.hedges_won >= 1               # the stalled copy lost
+    assert got[rids[1]].drive == 0                 # served by the hedger
+    assert clu._hedges == {}                       # settled
+    # the canceled copy's slot went back to the pool
+    d1 = clu.drives[1].engine
+    assert d1.num_active == 0 and d1.pager.num_in_use == 0
+    d1.pager.check_balanced()
+
+
+def test_pool_clamp_backpressures_then_lifts(cfg, params, ref_k1):
+    """page_pool_clamp frac=0: NO new admissions while active (in-flight
+    reservations untouched); when the window ends the queue drains and
+    tokens match the oracle — degradation, not deadlock."""
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist() for n in (5, 8)]
+    want = [r.tokens for r in ref_k1.generate(prompts, max_new=4)]
+    faults = FaultSchedule.from_spec(
+        [{"drive_id": 0, "kind": "page_pool_clamp", "at_tick": 0,
+          "duration": 6, "factor": 0.0}])
+    clu = make_cluster(cfg, params, ref_k1, n_drives=1, faults=faults)
+    rids = [clu.submit(p, max_new=4) for p in prompts]
+    for _ in range(4):
+        clu.step()
+    eng = clu.drives[0].engine
+    assert eng.num_active == 0                     # clamp blocked admission
+    assert eng.pending + len(clu.queue) == 2
+    res = {r.rid: r for r in clu.run_until_complete()}
+    res.update({r.rid: r for r in clu._finished})
+    assert sorted(res) == rids
+    assert [res[r].tokens for r in rids] == want
+    assert all(r.status == "ok" for r in res.values())
+    assert eng.pool_clamp_frac == 1.0              # lifted
+    assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+
+
+def test_serve_engine_cancel_frees_slot_and_pages(cfg, params, ref_k1):
+    eng = ServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2, k_block=1,
+                      jit_donor=ref_k1)
+    rid_q = eng.submit([1, 2, 3], max_new=4)
+    # queued cancel: nothing ran, nothing wasted
+    assert eng.cancel(rid_q) == 0.0
+    assert eng.pending == 0
+    rid_a = eng.submit([4, 5, 6, 7], max_new=4)
+    eng.step()
+    eng.step()
+    assert eng.num_active == 1
+    wasted = eng.cancel(rid_a)
+    assert wasted is not None and wasted > 0.0     # burned prefill+decode
+    assert eng.num_active == 0 and eng.pager.num_in_use == 0
+    eng.pager.check_balanced()
+    assert eng.cancel(rid_a) is None               # unknown rid
+    # the engine must not deliver a result for a canceled request
+    assert eng.run_until_complete() == []
+
+
+def test_fail_mid_chunked_prefill_leaks_no_pages(cfg, params, ref_k1):
+    """Regression: fail() while a chunked prefill is half-spliced must
+    free the partially filled pages (the free-list is the gate)."""
+    rng = np.random.default_rng(17)
+    long_p = rng.integers(0, cfg.vocab_size, 24).tolist()
+    short_p = rng.integers(0, cfg.vocab_size, 5).tolist()
+    want = [r.tokens
+            for r in ref_k1.generate([short_p, long_p], max_new=4)]
+    clu = make_cluster(cfg, params, ref_k1, n_drives=2, chunk_prefill=4)
+    rids = [clu.submit(short_p, max_new=4), clu.submit(long_p, max_new=4)]
+    clu.step()                                     # first chunk spliced
+    d1 = clu.drives[1]
+    assert any(s.active and s.prefilling for s in d1.engine.slots)
+    assert d1.engine.pager.num_in_use > 0
+    clu.fail(1)
+    assert d1.engine.pager.num_in_use == 0         # partial splice freed
+    d1.engine.pager.check_balanced()
+    res = {r.rid: r for r in clu.run_until_complete()}
+    res.update({r.rid: r for r in clu._finished})
+    assert sorted(res) == rids
+    assert [res[r].tokens for r in rids] == want   # retried on drive 0
+    assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+
+
+def test_last_drive_crash_fails_queue_and_raises_when_drained(cfg, params,
+                                                              ref_k1):
+    """Total loss: the detector kills the only drive -> queued requests
+    finish status="failed" (conservation), and a later submit against the
+    dead cluster raises ClusterExhaustedError."""
+    faults = FaultSchedule.from_spec(
+        [{"drive_id": 0, "kind": "crash", "at_tick": 1}])
+    det = FailureDetector(1, suspect_ticks=2, dead_ticks=4,
+                          suspect_after_s=math.inf)
+    clu = make_cluster(cfg, params, ref_k1, n_drives=1, faults=faults,
+                       detector=det, max_retries=1)
+    rids = [clu.submit([1, 2, 3], max_new=4), clu.submit([4, 5], max_new=4)]
+    res = clu.run_until_complete()
+    assert sorted(r.rid for r in res) == rids
+    assert all(r.status == "failed" for r in res)
+    assert clu.stats.health == [DEAD]
+    assert_conserved_and_balanced(clu, res, len(rids))
+    clu.submit([7, 8], max_new=2)
+    with pytest.raises(ClusterExhaustedError, match="draining/failed"):
+        clu.run_until_complete()
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 60))
+def test_any_fault_schedule_conserves_and_replays_tokens(cfg, params,
+                                                         ref_k1, seed):
+    """Property: under a randomized seeded fault schedule on drives 1..2
+    (drive 0 stays clean so the cluster survives), every request that
+    finishes "ok" is token-identical to the fault-free serial replay and
+    ``submitted == ok + shed + failed`` — recovery never invents, loses,
+    or corrupts work."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).tolist()
+               for n in rng.integers(4, 10, 5)]
+    want = {i: r.tokens
+            for i, r in enumerate(ref_k1.generate(prompts, max_new=4))}
+    kinds = ("stall", "slowdown", "crash", "page_pool_clamp")
+    events = []
+    for _ in range(int(rng.integers(1, 4))):
+        kind = kinds[int(rng.integers(len(kinds)))]
+        e = {"drive_id": int(rng.integers(1, 3)), "kind": kind,
+             "at_tick": int(rng.integers(0, 8))}
+        if kind != "crash":
+            e["duration"] = int(rng.integers(1, 5))
+        if kind == "slowdown":
+            e["factor"] = 2.0
+        if kind == "page_pool_clamp":
+            e["factor"] = float(rng.uniform(0.0, 1.0))
+        events.append(e)
+    det = FailureDetector(3, suspect_ticks=2, dead_ticks=4,
+                          suspect_after_s=math.inf)
+    clu = make_cluster(cfg, params, ref_k1, n_drives=3,
+                       faults=FaultSchedule.from_spec(events), detector=det,
+                       max_retries=5, hedge=bool(seed % 2))
+    rids = [clu.submit(p, max_new=4) for p in prompts]
+    res = {r.rid: r for r in clu.run_until_complete()}
+    res.update({r.rid: r for r in clu._finished})
+    assert sorted(res) == rids
+    for i, rid in enumerate(rids):
+        if res[rid].status == "ok":
+            assert res[rid].tokens == want[i]
+    assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+    # the spill ledger's invariant survives chaos too: never negative
+    assert clu.stats.spill_bytes >= 0.0
