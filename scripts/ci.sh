@@ -31,9 +31,20 @@
 #                               crash of drive 1: the failure detector must
 #                               kill it, retries must recover every request
 #                               token-identically, and no KV page may leak
+#   scripts/ci.sh concurrency-smoke
+#                               worker-runtime tier: a seeded subset of the
+#                               concurrent stress iterations (crashes and
+#                               real thread hangs against the heartbeat
+#                               watchdog) plus the fig9 smoke; fails on
+#                               token divergence, broken conservation,
+#                               leaked KV pages, or worker threads that
+#                               fail to join
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+# dump thread stacks on a hard hang/crash — the concurrent runtime means
+# every tier now runs multi-threaded
+export PYTHONFAULTHANDLER=1
 
 case "${1:-tier1}" in
   fast)          exec python -m pytest -x -q -m fast ;;
@@ -42,11 +53,16 @@ case "${1:-tier1}" in
                       --requests 4 --max-new 4 --num-slots 2 --k-block 8 ;;
   bench-guard)   python -m benchmarks.fig7_slo --check
                  python -m benchmarks.fig8_faults --check
+                 python -m benchmarks.fig9_concurrency --check
                  exec python -m benchmarks.fig5_throughput --engine \
                       --guard BENCH_fig5.json --guard-floor 0.8 ;;
   cluster-smoke) exec python -m benchmarks.fig6_cluster --smoke ;;
   slo-smoke)     exec python -m benchmarks.fig7_slo --smoke ;;
   hetero-smoke)  exec python -m benchmarks.fig6_cluster --hetero --smoke ;;
   chaos-smoke)   exec python -m benchmarks.fig8_faults --smoke ;;
+  concurrency-smoke)
+                 STRESS_ITERS=6 python -m pytest -x -q \
+                      tests/test_concurrent_stress.py
+                 exec python -m benchmarks.fig9_concurrency --smoke ;;
   tier1|*)       exec python -m pytest -x -q ;;
 esac

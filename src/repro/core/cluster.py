@@ -36,6 +36,7 @@ the pieces defined here:
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
@@ -141,6 +142,10 @@ class Router:
         self.n_drives = n_drives
         self.placement = placement
         self.spill = spill
+        # routing state (_rr rotation, _overrides) is shared between the
+        # coordinator and anything inspecting routes concurrently; RLock
+        # because pick() -> _is_remote() -> home() re-enters
+        self._lock = threading.RLock()
         self._rr = 0
         # shard re-placement: overrides win over the static placement, so a
         # drained/failed drive's shards can move to a survivor once instead
@@ -150,8 +155,9 @@ class Router:
     def home(self, shard_id: int) -> int:
         """The drive holding ``shard_id``'s data (re-placement overrides
         first, then the static placement)."""
-        if shard_id in self._overrides:
-            return self._overrides[shard_id]
+        with self._lock:
+            if shard_id in self._overrides:
+                return self._overrides[shard_id]
         if callable(self.placement):
             d = self.placement(shard_id)
         elif isinstance(self.placement, dict):
@@ -169,20 +175,22 @@ class Router:
         if not 0 <= drive_id < self.n_drives:
             raise ValueError(f"cannot place shard {shard_id} on drive "
                              f"{drive_id} outside [0, {self.n_drives})")
-        self._overrides[shard_id] = drive_id
+        with self._lock:
+            self._overrides[shard_id] = drive_id
 
     def pick(self, shard_id: Optional[int],
              loads: Sequence[DriveLoad]) -> Optional[Route]:
         eligible = [l for l in loads if l.accepting and l.capacity > 0]
         if not eligible:
             return None
-        if self.policy == "round_robin":
-            return self._round_robin(shard_id, loads, eligible)
-        if self.policy == "least_loaded":
-            return self._least_loaded(shard_id, eligible)
-        if self.policy == "rate_aware":
-            return self._rate_aware(shard_id, loads, eligible)
-        return self._data_local(shard_id, loads, eligible)
+        with self._lock:
+            if self.policy == "round_robin":
+                return self._round_robin(shard_id, loads, eligible)
+            if self.policy == "least_loaded":
+                return self._least_loaded(shard_id, eligible)
+            if self.policy == "rate_aware":
+                return self._rate_aware(shard_id, loads, eligible)
+            return self._data_local(shard_id, loads, eligible)
 
     # -- policies ------------------------------------------------------------
 
@@ -318,6 +326,11 @@ class ClusterStats:
     hedges_won: int = 0        # hedge copy finished first (or primary died)
     hedges_lost: int = 0       # primary finished first / hedge abandoned
     hedge_wasted_s: float = 0.0
+    # tick accounting is += on floats — keep it atomic under the
+    # concurrent worker runtime (excluded from repr/compare: a lock is
+    # runtime plumbing, not a stat)
+    _tick_lock: threading.Lock = field(default_factory=threading.Lock,
+                                       repr=False, compare=False)
 
     def record_tick(self, n_active: int, tick_s: float,
                     tick_serial_s: Optional[float] = None) -> None:
@@ -328,11 +341,13 @@ class ClusterStats:
         work would have paid (defaults to ``tick_s``: one drive stepped)."""
         if tick_s < 0:
             raise ValueError("negative tick duration")
-        self.ticks += 1
-        self.cluster_s += tick_s
-        self.serial_s += tick_serial_s if tick_serial_s is not None else tick_s
-        self.energy_j += E.server_power(n_active) * tick_s
-        self._active_dt += n_active * tick_s
+        with self._tick_lock:
+            self.ticks += 1
+            self.cluster_s += tick_s
+            self.serial_s += (tick_serial_s if tick_serial_s is not None
+                              else tick_s)
+            self.energy_j += E.server_power(n_active) * tick_s
+            self._active_dt += n_active * tick_s
 
     # -- merged transfer accounting ------------------------------------------
 

@@ -9,15 +9,21 @@ pure half of that layer; ``train.cluster_loop.ClusterEngine`` consults it
 each tick:
 
   * ``FaultSchedule`` — a seeded, replayable list of per-drive
-    ``FaultEvent``s.  Four kinds:
+    ``FaultEvent``s.  Five kinds:
       stall            the drive makes no progress while the event is
                        active (work sits, its virtual clock stops);
       slowdown         the drive's measured tick time is multiplied by
                        ``factor`` (>1 = slower) while active;
       crash            the drive stops responding permanently — the
                        cluster is NOT told (ground truth stays hidden);
-                       only the ``FailureDetector`` can discover it and
+                       only the failure layer can discover it and
                        trigger ``fail()``;
+      worker_hang      the drive's worker thread really blocks for
+                       ``duration`` REAL seconds at the dispatch boundary
+                       (the in-flight command is lost; only a heartbeat
+                       watchdog can catch it).  In the serial step loop —
+                       where there is no thread to block — a hang is
+                       approximated as a stall over the event window;
       page_pool_clamp  only ``factor`` (0..1) of the drive's KV page pool
                        is admissible while active — admission
                        backpressures, in-flight requests are untouched.
@@ -26,7 +32,10 @@ each tick:
     the MTTF/MTTR view; tick times are measured, so clock-based landing
     points jitter, which is fine: greedy decode makes token outputs
     identical under ANY fault landing).  ``from_rates`` draws a schedule
-    from exponential MTTF/MTTR distributions with a fixed seed.
+    from exponential MTTF/MTTR distributions with a fixed seed, and
+    ``save``/``load`` round-trip a schedule through jsonl (one event per
+    line, mirroring ``data.workload.save_trace``) so a chaos run can be
+    replayed exactly.
 
   * ``FailureDetector`` — the cluster-visible health state machine
     (HEALTHY → SUSPECT → DEAD).  It sees only what a host could see: the
@@ -36,22 +45,25 @@ each tick:
     consecutive ticks) goes SUSPECT; past ``dead_after_s`` /
     ``dead_ticks`` it goes DEAD, which the engine turns into the existing
     ``fail()`` path automatically.  A SUSPECT drive that progresses again
-    recovers to HEALTHY.  Until real concurrent drive workers provide
-    heartbeats (ROADMAP open item 1), this clock-threshold detector is the
-    cluster's only failure oracle.
+    recovers to HEALTHY.  This clock-threshold detector is the serial step
+    loop's failure oracle; the concurrent worker runtime uses
+    ``core.runtime.HeartbeatWatchdog`` (same state machine, driven by
+    missed heartbeats and real wall time) instead.
 
 Everything is plain-Python and deterministic given the event list, so
 token identity under any fault schedule is property-testable.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import math
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-FAULT_KINDS = ("stall", "slowdown", "crash", "page_pool_clamp")
+FAULT_KINDS = ("stall", "slowdown", "crash", "worker_hang", "page_pool_clamp")
 
 HEALTHY = "healthy"
 SUSPECT = "suspect"
@@ -66,7 +78,10 @@ class FaultEvent:
     the same unit (ticks or seconds).  ``factor`` is the slowdown
     multiplier (>= 1) or the admissible pool fraction (0..1) for
     ``page_pool_clamp``; crashes ignore both duration and factor (death is
-    permanent — recovery is a *new drive*, not this event ending).
+    permanent — recovery is a *new drive*, not this event ending).  For
+    ``worker_hang`` the concurrent runtime blocks the worker thread for
+    ``duration`` REAL seconds when the first command lands in the event
+    window; the serial loop approximates the window as a stall.
     """
     drive_id: int
     kind: str
@@ -86,6 +101,10 @@ class FaultEvent:
         if self.kind != "crash" and \
                 (self.duration < 0 or not math.isfinite(self.duration)):
             raise ValueError(f"duration must be finite and >= 0, "
+                             f"got {self.duration}")
+        if self.kind == "worker_hang" and not self.duration > 0:
+            raise ValueError(f"worker_hang duration must be > 0 (real "
+                             f"seconds the thread blocks), "
                              f"got {self.duration}")
         if self.kind == "slowdown" and not (self.factor >= 1.0
                                             and math.isfinite(self.factor)):
@@ -174,6 +193,30 @@ class FaultSchedule:
                 t += dur                        # repair before the next fault
         return cls(events)
 
+    # -- persistence (mirrors data.workload.save_trace / load_trace) ----------
+
+    def save(self, path: str) -> None:
+        """Write the schedule as jsonl, one event per line, so a chaos
+        run's exact schedule can be committed and replayed."""
+        with open(path, "w") as f:
+            for e in self.events:
+                rec = {k: v for k, v in dataclasses.asdict(e).items()
+                       if v is not None}
+                f.write(json.dumps(rec, sort_keys=True) + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "FaultSchedule":
+        """Read a schedule back.  Accepts both the jsonl form written by
+        ``save`` and the legacy ``--fault-trace`` JSON-list form."""
+        with open(path) as f:
+            text = f.read().strip()
+        if not text:
+            return cls([])
+        if text.startswith("["):
+            return cls.from_spec(json.loads(text))
+        return cls.from_spec([json.loads(line)
+                              for line in text.splitlines() if line.strip()])
+
     # -- per-tick queries (consulted by ClusterEngine.step) -------------------
 
     def begins(self, tick: int, clock: float) -> List[FaultEvent]:
@@ -197,10 +240,29 @@ class FaultSchedule:
         return sorted(set(out))
 
     def stalled(self, drive_id: int, tick: int, clock: float) -> bool:
-        """True while a stall (or a delivered crash — a crashed drive is a
-        permanent stall until the detector notices) holds the drive."""
-        return any(e.drive_id == drive_id and e.kind in ("stall", "crash")
+        """True while a stall, a worker_hang window, or a delivered crash
+        (a crashed drive is a permanent stall until the failure layer
+        notices) holds the drive.  Pure — safe to consult from a worker
+        thread without touching the delivered-event bookkeeping."""
+        return any(e.drive_id == drive_id
+                   and e.kind in ("stall", "crash", "worker_hang")
                    and e.active(tick, clock) for e in self.events)
+
+    def crash_active(self, drive_id: int, tick: int, clock: float) -> bool:
+        """Pure crash check (no delivered-set mutation) — the concurrent
+        worker's exit condition: a crashed worker thread terminates and
+        the cluster only ever sees the silence."""
+        return any(e.drive_id == drive_id and e.kind == "crash"
+                   and e.active(tick, clock) for e in self.events)
+
+    def hangs(self, drive_id: int, tick: int, clock: float
+              ) -> List[Tuple[int, float]]:
+        """Active worker_hang events for a drive as ``(event_index,
+        real_seconds)`` pairs.  Pure; the worker tracks which indices it
+        has already served so each hang blocks the thread exactly once."""
+        return [(i, float(e.duration)) for i, e in enumerate(self.events)
+                if e.drive_id == drive_id and e.kind == "worker_hang"
+                and e.active(tick, clock)]
 
     def slowdown(self, drive_id: int, tick: int, clock: float) -> float:
         """Multiplier on the drive's tick time (active slowdowns compound)."""

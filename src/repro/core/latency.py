@@ -24,6 +24,7 @@ over a zero wall clock are NaN, counts are 0.  Callers gate on finiteness.
 from __future__ import annotations
 
 import math
+import threading
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
@@ -108,9 +109,14 @@ class LatencyRecord:
 class LatencyStats:
     """Aggregate view over completed (and shed) ``LatencyRecord``s."""
     records: List[LatencyRecord] = field(default_factory=list)
+    # appended to from the concurrent runtime's absorb path; list.append
+    # is GIL-atomic but the explicit lock keeps the contract honest
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     def add(self, rec: LatencyRecord) -> None:
-        self.records.append(rec)
+        with self._lock:
+            self.records.append(rec)
 
     # -- populations ---------------------------------------------------------
 

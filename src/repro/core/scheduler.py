@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import heapq
 import math
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -225,6 +226,11 @@ class ClusterAdmission:
         self.n_drives = n_drives
         self.alpha = alpha
         self.smoothing = smoothing
+        # the EWMA / share / quarantine state is read-modify-write from
+        # whoever absorbs drive ticks — serialize it so the concurrent
+        # worker runtime can't interleave half-applied updates (RLock:
+        # quotas() and rates() re-enter through rate())
+        self._lock = threading.RLock()
         # EWMA of per-item service seconds; NaN = never observed
         self._ewma: Dict[int, float] = {d: math.nan for d in range(n_drives)}
         self.samples: Dict[int, int] = {d: 0 for d in range(n_drives)}
@@ -242,19 +248,21 @@ class ClusterAdmission:
         inner step."""
         if drive not in self._ewma:
             raise KeyError(f"unknown drive {drive}")
-        if drive in self._quarantined:
-            return
-        if block_s <= 0.0 or not math.isfinite(block_s):
-            return
-        for dur, items in zip(split_block_service(block_s, per_step_items),
-                              per_step_items):
-            if items <= 0 or dur <= 0.0:
-                continue
-            per_item = dur / items
-            prev = self._ewma[drive]
-            self._ewma[drive] = per_item if not math.isfinite(prev) else \
-                self.alpha * per_item + (1.0 - self.alpha) * prev
-            self.samples[drive] += 1
+        with self._lock:
+            if drive in self._quarantined:
+                return
+            if block_s <= 0.0 or not math.isfinite(block_s):
+                return
+            for dur, items in zip(split_block_service(block_s,
+                                                      per_step_items),
+                                  per_step_items):
+                if items <= 0 or dur <= 0.0:
+                    continue
+                per_item = dur / items
+                prev = self._ewma[drive]
+                self._ewma[drive] = per_item if not math.isfinite(prev) \
+                    else self.alpha * per_item + (1.0 - self.alpha) * prev
+                self.samples[drive] += 1
 
     def quarantine(self, drive: int) -> None:
         """Stop trusting a SUSPECT drive's ticks: its observations are
@@ -263,12 +271,14 @@ class ClusterAdmission:
         it cannot serve."""
         if drive not in self._ewma:
             raise KeyError(f"unknown drive {drive}")
-        self._quarantined.add(drive)
+        with self._lock:
+            self._quarantined.add(drive)
 
     def unquarantine(self, drive: int) -> None:
         """A recovered drive's ticks count again (its pre-quarantine EWMA
         is kept — the hardware is the same, the stall was transient)."""
-        self._quarantined.discard(drive)
+        with self._lock:
+            self._quarantined.discard(drive)
 
     @property
     def quarantined(self) -> List[int]:
@@ -277,7 +287,8 @@ class ClusterAdmission:
     def rate(self, drive: int) -> float:
         """Learned service rate in items/s; NaN until the drive has been
         observed (callers must treat NaN as "no estimate yet")."""
-        t = self._ewma[drive]
+        with self._lock:
+            t = self._ewma[drive]
         return 1.0 / t if (math.isfinite(t) and t > 0.0) else math.nan
 
     def rates(self) -> List[float]:
@@ -297,27 +308,29 @@ class ClusterAdmission:
         if not live:
             return {}
         live = sorted(set(live))
-        # quarantined drives are refit around, not into — unless EVERY
-        # live drive is quarantined, where excluding them all would leave
-        # nothing to serve at all (better a suspect share than none)
-        trusted = [d for d in live if d not in self._quarantined]
-        if trusted:
-            live = trusted
-        if total < len(live):
-            raise ValueError(f"quota total {total} cannot cover "
-                             f"{len(live)} drives")
-        cur = {d: self._shares.get(d, 0) for d in live}
-        if sum(cur.values()) <= 0:
-            base, extra = divmod(total, len(live))
-            cur = {d: base + (1 if i < extra else 0)
-                   for i, d in enumerate(live)}
-        step_times = {d: (cur[d] * self._ewma[d]
-                          if math.isfinite(self._ewma[d]) else math.nan)
-                      for d in live}
-        new = rebalance_shares(step_times, cur, total,
-                               smoothing=self.smoothing)
-        self._shares = dict(new)
-        return new
+        with self._lock:
+            # quarantined drives are refit around, not into — unless EVERY
+            # live drive is quarantined, where excluding them all would
+            # leave nothing to serve at all (better a suspect share than
+            # none)
+            trusted = [d for d in live if d not in self._quarantined]
+            if trusted:
+                live = trusted
+            if total < len(live):
+                raise ValueError(f"quota total {total} cannot cover "
+                                 f"{len(live)} drives")
+            cur = {d: self._shares.get(d, 0) for d in live}
+            if sum(cur.values()) <= 0:
+                base, extra = divmod(total, len(live))
+                cur = {d: base + (1 if i < extra else 0)
+                       for i, d in enumerate(live)}
+            step_times = {d: (cur[d] * self._ewma[d]
+                              if math.isfinite(self._ewma[d]) else math.nan)
+                          for d in live}
+            new = rebalance_shares(step_times, cur, total,
+                                   smoothing=self.smoothing)
+            self._shares = dict(new)
+            return new
 
 
 def rebalance_shares(step_times: Dict[str, float], current_shares: Dict[str, int],

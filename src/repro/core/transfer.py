@@ -12,6 +12,7 @@ benchmarks then report next to the paper's numbers.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 from typing import Dict
 
@@ -26,18 +27,23 @@ class TransferLedger:
     # to the link reduction; see serve_loop._account_kv_step)
     kv_bytes: float = 0.0
     notes: Dict[str, float] = field(default_factory=dict)
+    # float += read-modify-writes: atomic under the concurrent cluster
+    # runtime (excluded from repr/compare — plumbing, not accounting)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     def add(self, tier: str, n: float, note: str = "") -> None:
-        if tier == "link":
-            self.link_bytes += n
-        elif tier == "local":
-            self.local_bytes += n
-        elif tier == "kv":
-            self.kv_bytes += n
-        else:
-            self.output_bytes += n
-        if note:
-            self.notes[note] = self.notes.get(note, 0.0) + n
+        with self._lock:
+            if tier == "link":
+                self.link_bytes += n
+            elif tier == "local":
+                self.local_bytes += n
+            elif tier == "kv":
+                self.kv_bytes += n
+            else:
+                self.output_bytes += n
+            if note:
+                self.notes[note] = self.notes.get(note, 0.0) + n
 
     @property
     def total_moved(self) -> float:

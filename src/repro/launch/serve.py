@@ -33,14 +33,22 @@ stats — learned rates included — plus the live energy-per-query integral
 Fault injection (implies the cluster path, even at --replicas 1):
 ``--mttf S`` draws a seeded fault schedule (stalls / slowdowns / pool
 clamps / crashes) from exponential MTTF/MTTR distributions
-(``--mttr S``, ``--fault-seed N``), or ``--fault-trace FILE`` replays an
-explicit JSON event list (the ``FaultSchedule.from_spec`` form).  The
+(``--mttr S``, ``--fault-seed N``), or ``--fault-trace FILE`` replays a
+saved schedule (``FaultSchedule.save`` jsonl, or the legacy JSON event
+list of the ``from_spec`` form).  The
 failure detector auto-fails drives it declares DEAD; restarted requests
 spend their ``--max-retries`` budget and ``--hedge`` duplicates
 SUSPECT-stranded requests onto healthy drives.  The summary then carries
 the recovery story: faults injected, drive health, retries granted,
 requests failed terminally, hedge wins/losses and the serving time the
 lost copies burned.
+
+``--concurrent`` swaps the cluster's serial drive loop for the worker
+runtime: one thread per drive fed over command queues, tick time is the
+measured wall-clock overlap, and DEAD verdicts come from the heartbeat
+watchdog (missed beats + real dispatch timeouts) rather than virtual
+clock thresholds — so a crashed or hung worker is detected by its
+silence on the monitor channel, exactly as it would be in production.
 """
 from __future__ import annotations
 
@@ -154,7 +162,8 @@ def main() -> int:
                     help="seed for the drawn fault schedule "
                          "(default: --seed)")
     ap.add_argument("--fault-trace", type=str, default=None,
-                    help="JSON file with an explicit fault event list "
+                    help="fault event file: jsonl from FaultSchedule.save "
+                         "or a legacy JSON event list "
                          "(FaultSchedule.from_spec form); overrides --mttf")
     ap.add_argument("--max-retries", type=int, default=3,
                     help="restarts a request may spend on drive failures "
@@ -163,6 +172,20 @@ def main() -> int:
                     help="duplicate SUSPECT-stranded requests onto healthy "
                          "drives (first finisher wins; the loser's serving "
                          "time is booked as hedge waste)")
+    ap.add_argument("--concurrent", action="store_true",
+                    help="run drives on real worker threads (one per "
+                         "drive); tick time is measured wall-clock overlap "
+                         "and failures are detected from missed heartbeats "
+                         "(implies the cluster path, even at --replicas 1)")
+    ap.add_argument("--dispatch-timeout", type=float, default=0.25,
+                    help="seconds the concurrent coordinator waits on the "
+                         "heartbeat channel per join before charging the "
+                         "silent drives a missed beat")
+    ap.add_argument("--min-tick-ms", type=float, default=0.0,
+                    help="per-drive service-time floor (ms) so tiny smoke "
+                         "models still show real tick overlap under "
+                         "--concurrent (applied in serial mode too, "
+                         "keeping the two comparable)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
@@ -183,20 +206,18 @@ def main() -> int:
 
     faults = None
     if args.fault_trace:
-        import json as _json
-
         from repro.core.faults import FaultSchedule
-        with open(args.fault_trace) as f:
-            faults = FaultSchedule.from_spec(_json.load(f))
+        faults = FaultSchedule.load(args.fault_trace)
     elif args.mttf > 0:
         from repro.core.faults import FaultSchedule
         fault_seed = args.seed if args.fault_seed is None else args.fault_seed
         faults = FaultSchedule.from_rates(args.replicas, mttf_s=args.mttf,
                                           mttr_s=args.mttr, seed=fault_seed)
 
-    if args.replicas > 1 or faults is not None:
-        # fault injection needs the cluster's detector/retry machinery,
-        # so it routes through ClusterEngine even at --replicas 1
+    if args.replicas > 1 or faults is not None or args.concurrent:
+        # fault injection and the worker runtime need the cluster's
+        # detector/retry machinery, so both route through ClusterEngine
+        # even at --replicas 1
         speed = None
         if args.speed_factor:
             speed = [float(s) for s in args.speed_factor.split(",")]
@@ -207,6 +228,9 @@ def main() -> int:
                                shard_replacement=not args.no_shard_replacement,
                                faults=faults, max_retries=args.max_retries,
                                hedge=args.hedge,
+                               concurrent=args.concurrent,
+                               dispatch_timeout_s=args.dispatch_timeout,
+                               min_tick_s=args.min_tick_ms / 1e3,
                                **engine_kw)
     else:
         engine = ServeEngine(cfg, params, admission=admission(), **engine_kw)
@@ -239,6 +263,8 @@ def main() -> int:
             else engine.stats.summary()
         for line in summary.splitlines():
             print(f"[serve] {line}")
+        if is_cluster:
+            engine.close()      # joins worker threads (no-op if serial)
         return 0
 
     rng = np.random.default_rng(args.seed)
@@ -284,6 +310,8 @@ def main() -> int:
               f"{kv['peak_kv_bytes'] / 1e6:.3f} MB vs dense "
               f"{kv['dense_kv_bytes'] / 1e6:.3f} MB "
               f"(page_size={kv['page_size']})")
+    if is_cluster:
+        engine.close()          # joins worker threads (no-op if serial)
     return 0
 
 

@@ -45,11 +45,28 @@ Mechanics:
     (XLA compiles happen once per process, not once per drive tick);
   * shards homed on a drained/failed drive are re-placed onto survivors,
     each migration charged ONCE to the spill ledger (``shard_bytes``),
-    instead of every future request re-fetching the shard over the link.
+    instead of every future request re-fetching the shard over the link;
+  * ``concurrent=True`` replaces the serial drive loop with the real
+    thing: one ``core.runtime.DriveWorker`` thread per drive, fed tick
+    commands over per-drive queues by the coordinator (the ``step()``
+    caller), replying with heartbeats on a shared monitor queue.  Drive
+    steps genuinely overlap (engine steps and service-time sleeps release
+    the GIL), the cluster wall clock is MEASURED join time instead of the
+    virtual-clock model (the virtual clocks are kept as the model's
+    prediction — fig9 gates measured against predicted), and failure
+    detection runs on the real channel: a ``HeartbeatWatchdog`` drives
+    the same HEALTHY→SUSPECT→DEAD machine from missed heartbeats and
+    wall-clock silence, so a crashed or hung worker is discovered from
+    its silence, never from ground truth.  ``drain``/``fail``/``close``
+    are race-safe and idempotent: ``fail()`` bumps the drive's epoch
+    under its lock, stale commands/heartbeats are discarded on both
+    sides, and workers join cleanly even when killed mid-tick.
 """
 from __future__ import annotations
 
 import math
+import queue as queue_mod
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -64,6 +81,8 @@ from repro.core.cluster import (ClusterExhaustedError, ClusterStats,
 from repro.core.faults import (DEAD, HEALTHY, SUSPECT, FailureDetector,
                                FaultSchedule)
 from repro.core.latency import LatencyRecord
+from repro.core.runtime import (DriveWorker, Heartbeat, HeartbeatWatchdog,
+                                WorkerCommand)
 from repro.core.scheduler import ClusterAdmission
 from repro.train.serve_loop import GenResult, ServeEngine, collect_results
 
@@ -98,6 +117,14 @@ class _Drive:
     # engine-local rid -> cluster-global rid (a request re-queued by
     # drain/fail gets a fresh local rid on whichever drive takes it next)
     rid_map: Dict[int, int] = field(default_factory=dict)
+    # concurrent runtime: the drive lock serializes this drive's engine
+    # between its worker thread and the coordinator (dispatch submits,
+    # hedge cancels, fail's slot release); epoch is bumped by fail()
+    # under the lock so in-flight commands/heartbeats from before the
+    # failure are recognizably stale and discarded on both sides
+    lock: threading.RLock = field(default_factory=threading.RLock,
+                                  repr=False, compare=False)
+    epoch: int = 0
 
     @property
     def accepting(self) -> bool:
@@ -144,7 +171,14 @@ class ClusterEngine:
                  detector: Optional[FailureDetector] = None,
                  max_retries: int = 3,
                  retry_backoff_s: float = 0.05,
-                 hedge: bool = False, **engine_kw):
+                 hedge: bool = False,
+                 concurrent: bool = False,
+                 dispatch_timeout_s: float = 0.25,
+                 min_tick_s: float = 0.0,
+                 tick_jitter_s: float = 0.0,
+                 jitter_seed: int = 0,
+                 watchdog: Optional[HeartbeatWatchdog] = None,
+                 **engine_kw):
         if n_drives < 1:
             raise ValueError("need at least one drive")
         self.cfg = cfg
@@ -169,6 +203,14 @@ class ClusterEngine:
         if "admission" in engine_kw:
             raise ValueError("pass admission_factory (one controller per "
                              "drive), not a shared admission instance")
+        if concurrent and not engine_kw.get("prewarm"):
+            # a cold drive's first tick is one long jit compile — real
+            # wall-clock silence the heartbeat watchdog cannot tell from
+            # death (and would punish with SUSPECT/DEAD).  The worker
+            # runtime therefore never starts cold: compile here, before
+            # any worker thread exists (drive 0 pays once; the rest
+            # share its cache via the donor chain below)
+            engine_kw["prewarm"] = True
         for d in range(n_drives):
             donor = jit_donor if jit_donor is not None else \
                 (self.drives[0].engine if self.drives else None)
@@ -263,7 +305,51 @@ class ClusterEngine:
         self._stuck = False
         self._idle_grace = 0           # consecutive idle ticks granted to
         # dispatch after a same-tick fail() requeue (see _idle_advance)
-        self.stats.health = list(self.detector.health)
+        # hedge copies whose cancel() found the copy already finished
+        # (both copies completed in one joined tick): the duplicate
+        # result is still pending absorption — drop it AND book its burn
+        self._hedge_drops: Dict[tuple, bool] = {}
+        # -- concurrent worker runtime (core.runtime) ------------------------
+        self.concurrent = bool(concurrent)
+        if not (dispatch_timeout_s > 0.0 and math.isfinite(dispatch_timeout_s)):
+            raise ValueError(f"dispatch_timeout_s must be finite and > 0, "
+                             f"got {dispatch_timeout_s}")
+        if min_tick_s < 0 or not math.isfinite(min_tick_s):
+            raise ValueError(f"min_tick_s must be finite and >= 0, "
+                             f"got {min_tick_s}")
+        if tick_jitter_s < 0 or not math.isfinite(tick_jitter_s):
+            raise ValueError(f"tick_jitter_s must be finite and >= 0, "
+                             f"got {tick_jitter_s}")
+        self.dispatch_timeout_s = float(dispatch_timeout_s)
+        self.min_tick_s = float(min_tick_s)
+        self.tick_jitter_s = float(tick_jitter_s)
+        self.jitter_seed = int(jitter_seed)
+        if watchdog is not None and watchdog.n_drives != n_drives:
+            raise ValueError(f"watchdog tracks {watchdog.n_drives} drives, "
+                             f"cluster has {n_drives}")
+        if self.concurrent and watchdog is None:
+            # default watchdog mirrors the detector's thresholds: ticks
+            # become missed heartbeats, clock lag becomes wall silence
+            watchdog = HeartbeatWatchdog(
+                n_drives,
+                suspect_after_s=self.detector.suspect_after_s,
+                suspect_misses=self.detector.suspect_ticks,
+                dead_after_s=self.detector.dead_after_s,
+                dead_misses=self.detector.dead_ticks)
+        self.watchdog = watchdog
+        # cluster lock: every mutation of shared state (queue, admission,
+        # router, ledgers, stats, rid maps, hedges) happens under it —
+        # workers never take it (they only hold their drive lock), so
+        # coordinator->drive lock acquisition cannot deadlock
+        self._lock = threading.RLock()
+        self._close_lock = threading.Lock()
+        self._closed = False
+        self._stop = threading.Event()
+        self._monitor: "queue_mod.Queue[Heartbeat]" = queue_mod.Queue()
+        self._commands: List["queue_mod.Queue[WorkerCommand]"] = []
+        self._workers: Optional[List[DriveWorker]] = None
+        self._outstanding = [0] * n_drives   # unanswered commands per drive
+        self.stats.health = list(self._health)
 
     # -- intake --------------------------------------------------------------
 
@@ -276,24 +362,26 @@ class ClusterEngine:
         # reject at enqueue time what no drive can ever serve — a deferred
         # ValueError inside _dispatch would tear down the whole run
         self.drives[0].engine.validate_request(prompt, max_new)
-        rid = self._next_rid
-        self._next_rid += 1
-        req = ClusterRequest(rid, prompt, max_new, shard_id,
-                             priority=priority, deadline_s=deadline_s)
-        if shard_id is not None:
-            self._seen_shards.add(shard_id)
-        self._inflight[rid] = req
-        self.queue.append(req)
-        self.records[rid] = LatencyRecord(rid=rid, priority=priority,
-                                          deadline_s=deadline_s,
-                                          submit_t=self.clock)
-        return rid
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            req = ClusterRequest(rid, prompt, max_new, shard_id,
+                                 priority=priority, deadline_s=deadline_s)
+            if shard_id is not None:
+                self._seen_shards.add(shard_id)
+            self._inflight[rid] = req
+            self.queue.append(req)
+            self.records[rid] = LatencyRecord(rid=rid, priority=priority,
+                                              deadline_s=deadline_s,
+                                              submit_t=self.clock)
+            return rid
 
     def advance_clock(self, to_t: float) -> None:
         """Fast-forward the cluster wall clock across an idle gap (open-loop
         replay).  Only the wall clock moves — the per-drive virtual clocks
         track busy time and idle is not busy."""
-        self.clock = max(self.clock, to_t)
+        with self._lock:
+            self.clock = max(self.clock, to_t)
 
     @property
     def pending(self) -> int:
@@ -320,12 +408,15 @@ class ClusterEngine:
         into the shared queue (front, original order — they were dispatched
         earliest).  In-flight slots finish normally.  Shards homed on the
         drive are re-placed onto survivors (one migration charge each).
-        Returns the number of requests re-queued."""
-        d = self.drives[drive_id]
-        d.draining = True
-        n = self._requeue_unprefilled(d)
-        self._replace_shards_of(drive_id)
-        return n
+        Idempotent and race-safe: a second drain finds an empty drive
+        queue and re-queues nothing.  Returns the number re-queued."""
+        with self._lock:
+            d = self.drives[drive_id]
+            with d.lock:
+                d.draining = True
+                n = self._requeue_unprefilled(d)
+            self._replace_shards_of(drive_id)
+            return n
 
     def fail(self, drive_id: int) -> int:
         """Hard drive failure: re-queue its un-prefilled requests AND
@@ -344,74 +435,105 @@ class ClusterEngine:
         pages forever), and if this was the LAST healthy drive every
         queued request finishes ``status="failed"`` — conservation
         (``submitted == ok + shed + failed``) holds even at total loss.
+
+        Race-safe under the concurrent runtime: the whole teardown runs
+        under the cluster lock AND the drive lock — a worker mid-step
+        holds the drive lock, so fail() waits for the step to finish
+        before touching slots, then bumps the drive's epoch so the step's
+        late heartbeat (and any command still in the worker's queue) is
+        recognizably stale and discarded.  Idempotent: a second fail()
+        (operator + watchdog racing) returns 0.
         Returns the number of requests re-queued."""
-        d = self.drives[drive_id]
-        if d.failed:
-            return 0
-        n = self._requeue_unprefilled(d)
-        self.detector.mark_dead(drive_id)
-        self.pull.unquarantine(drive_id)   # dead ≠ suspect: quotas refit
-        retry: List[ClusterRequest] = []
-        failed_out: List[ClusterRequest] = []
-        for slot in d.engine.slots:
-            if slot.active and slot.rid in d.rid_map:
-                grid = d.rid_map.pop(slot.rid)
-                req = self._inflight[grid]
-                pair = self._hedges.get(grid)
-                if pair is not None and pair[0] == drive_id:
-                    # the hedge copy outlived the primary: promote it (it
-                    # keeps running on its drive; no restart, no retry)
-                    self._hedges.pop(grid)
-                    self.stats.hedges_won += 1
-                    continue
-                if pair is not None and pair[1] == drive_id:
-                    # the hedge copy died with this drive; the primary is
-                    # still serving — abandon the hedge
-                    self._hedges.pop(grid)
-                    self.stats.hedges_lost += 1
-                    continue
-                if req.retries >= self.max_retries:
-                    failed_out.append(req)
-                    continue
-                req.retries += 1
-                self.stats.retries += 1
-                if self.retry_backoff_s > 0.0:
-                    req.not_before_s = self.clock + \
-                        self.retry_backoff_s * (2.0 ** (req.retries - 1))
-                retry.append(req)
-                rec = self.records.get(grid)
-                if rec is not None:
-                    # the retry replays from the prompt: admit/first-token
-                    # re-stamp on the surviving drive, but queue wait keeps
-                    # the ORIGINAL submit — the user has been waiting since
-                    # then, whatever the cluster did in between
-                    rec.restart()
-        # slots are scanned in pool order, which is refill order, not
-        # submission order — restore FIFO by global rid before requeueing
-        # (in-flight requests go ahead of the drive-queued ones
-        # _requeue_unprefilled just put back: they were dispatched earlier)
-        for req in sorted(retry, key=lambda r: r.rid, reverse=True):
-            self.queue.appendleft(req)
-        # free the dead engine's slots and their KV pages: in-flight
-        # requests (including mid-chunked-prefill ones with partially
-        # spliced pages) were restarted or failed out above — without this
-        # release the dead drive's page pool leaks its live pages forever
-        # (pager.check_balanced() is the regression gate)
-        for slot in d.engine.slots:
-            if slot.active:
-                d.engine._release_slot(slot)
-        d.engine.records.clear()
-        d.failed = True
-        d.draining = True
-        self._replace_shards_of(drive_id)
-        for req in failed_out:
-            self._fail_request(req)
-        if not any(x.accepting for x in self.drives):
-            # the LAST drive died with requests still queued: nothing can
-            # ever serve them — fail them out now rather than deadlock
-            while self.queue:
-                self._fail_request(self.queue.popleft())
-        return n + len(retry)
+        with self._lock:
+            d = self.drives[drive_id]
+            if d.failed:
+                return 0
+            retry: List[ClusterRequest] = []
+            failed_out: List[ClusterRequest] = []
+            with d.lock:
+                d.epoch += 1
+                n = self._requeue_unprefilled(d)
+                self.detector.mark_dead(drive_id)
+                if self.watchdog is not None:
+                    self.watchdog.mark_dead(drive_id)
+                self.pull.unquarantine(drive_id)  # dead ≠ suspect: refit
+                # everything still mapped after _requeue_unprefilled is
+                # in-flight in a slot OR finished-but-unabsorbed (its
+                # result rode a heartbeat the epoch bump just made stale
+                # — from the coordinator's view that output never
+                # existed).  Both are lost with the drive: scanning only
+                # active slots would orphan the unabsorbed ones, silently
+                # breaking submitted == ok + shed + failed
+                for local in sorted(d.rid_map,
+                                    key=lambda l: d.rid_map[l]):
+                    grid = d.rid_map.pop(local)
+                    req = self._inflight.get(grid)
+                    if req is None:
+                        continue
+                    pair = self._hedges.get(grid)
+                    if pair is not None and pair[0] == drive_id:
+                        # the hedge copy outlived the primary: promote
+                        # it (it keeps running; no restart, no retry)
+                        self._hedges.pop(grid)
+                        self.stats.hedges_won += 1
+                        continue
+                    if pair is not None and pair[1] == drive_id:
+                        # the hedge copy died with this drive; the
+                        # primary is still serving — abandon the hedge
+                        self._hedges.pop(grid)
+                        self.stats.hedges_lost += 1
+                        continue
+                    if req.retries >= self.max_retries:
+                        failed_out.append(req)
+                        continue
+                    req.retries += 1
+                    self.stats.retries += 1
+                    if self.retry_backoff_s > 0.0:
+                        req.not_before_s = self.clock + \
+                            self.retry_backoff_s * \
+                            (2.0 ** (req.retries - 1))
+                    retry.append(req)
+                    rec = self.records.get(grid)
+                    if rec is not None:
+                        # the retry replays from the prompt:
+                        # admit/first-token re-stamp on the surviving
+                        # drive, but queue wait keeps the ORIGINAL
+                        # submit — the user has been waiting since
+                        # then, whatever the cluster did in between
+                        rec.restart()
+                # slots are scanned in pool order, which is refill order,
+                # not submission order — restore FIFO by global rid before
+                # requeueing (in-flight requests go ahead of the
+                # drive-queued ones _requeue_unprefilled just put back:
+                # they were dispatched earlier)
+                for req in sorted(retry, key=lambda r: r.rid, reverse=True):
+                    self.queue.appendleft(req)
+                # free the dead engine's slots and their KV pages:
+                # in-flight requests (including mid-chunked-prefill ones
+                # with partially spliced pages) were restarted or failed
+                # out above — without this release the dead drive's page
+                # pool leaks its live pages forever (pager.check_balanced()
+                # is the regression gate)
+                for slot in d.engine.slots:
+                    if slot.active:
+                        d.engine._release_slot(slot)
+                d.engine.records.clear()
+                # drop finished-but-undelivered results too: their
+                # requests were just restarted (or failed out) above, so
+                # absorbing a stale copy later would deliver twice
+                d.engine._finished.clear()
+                d.failed = True
+                d.draining = True
+            self._outstanding[drive_id] = 0   # silent commands died with it
+            self._replace_shards_of(drive_id)
+            for req in failed_out:
+                self._fail_request(req)
+            if not any(x.accepting for x in self.drives):
+                # the LAST drive died with requests still queued: nothing
+                # can ever serve them — fail them out now, not deadlock
+                while self.queue:
+                    self._fail_request(self.queue.popleft())
+            return n + len(retry)
 
     def _fail_request(self, req: ClusterRequest) -> None:
         """Terminal failure: the request is out of retries (or out of
@@ -496,7 +618,7 @@ class ClusterEngine:
         drives are quarantined out — a stalled drive must not keep a
         share it cannot serve (the scheduler also drops their ticks)."""
         live = [d.drive_id for d in self.drives if d.accepting
-                and self.detector.health[d.drive_id] != SUSPECT]
+                and self._health[d.drive_id] != SUSPECT]
         if not live:
             live = [d.drive_id for d in self.drives if d.accepting]
         if not live:
@@ -573,15 +695,18 @@ class ClusterEngine:
                             service_s=mean_items / self.pull.rate(d.drive_id),
                             quota=quotas.get(d.drive_id),
                             accepting=d.accepting and
-                            self.detector.health[d.drive_id] != SUSPECT)
+                            self._health[d.drive_id] != SUSPECT)
                      for d in self.drives]
             route = self.router.pick(head.shard_id, loads)
             if route is None:
                 break
             req = self.queue.popleft()
             drive = self.drives[route.drive_id]
-            local = drive.engine.submit(req.prompt, max_new=req.max_new)
-            drive.rid_map[local] = req.rid
+            # under the drive lock: a late worker may still be stepping
+            # this engine (previous tick overran the dispatch timeout)
+            with drive.lock:
+                local = drive.engine.submit(req.prompt, max_new=req.max_new)
+                drive.rid_map[local] = req.rid
             req.spilled_bytes = 0.0
             if route.remote:
                 self.stats.remote_requests += 1
@@ -597,6 +722,100 @@ class ClusterEngine:
             self.queue.extendleft(reversed(deferred))
 
     def step(self) -> List[GenResult]:
+        """One cluster tick.  Serial mode steps every drive in-process
+        under the virtual-clock model; ``concurrent=True`` forks the tick
+        to the per-drive worker threads and joins on their heartbeats —
+        see ``_step_serial`` / ``_step_concurrent``."""
+        if self.concurrent:
+            return self._step_concurrent()
+        return self._step_serial()
+
+    @property
+    def _health(self) -> List[str]:
+        """The cluster's health authority: the heartbeat watchdog when the
+        concurrent runtime is live, else the virtual-clock detector."""
+        if self.concurrent and self.watchdog is not None:
+            return self.watchdog.health
+        return self.detector.health
+
+    def _absorb_tick(self, d: _Drive, finished: List[GenResult], obs,
+                     dt: float, out: List[GenResult],
+                     admit_events: List[int],
+                     first_tok_events: List[int]) -> None:
+        """Fold one drive tick's observations into the shared cluster
+        state: virtual clock, pull-scheduler rates, admit/first-token
+        event mapping, finished results, and hedge settlement.  The
+        winner-commit and loser-cancel of a hedge are decided HERE, under
+        the one cluster lock in concurrent mode — the both-finish race
+        resolves to exactly one delivered result with the loser's burn
+        booked as hedge waste."""
+        self._clocks[d.drive_id] += dt
+        self.pull.observe(d.drive_id, dt, obs.per_step_items)
+        # map engine-local events to global rids BEFORE the finished
+        # loop pops rid_map (a request can admit, emit its first token
+        # and finish in the same tick)
+        for local in obs.admitted_rids:
+            if local in d.rid_map:
+                admit_events.append(d.rid_map[local])
+        for local in obs.first_token_rids:
+            if local in d.rid_map:
+                first_tok_events.append(d.rid_map[local])
+        for r in finished:
+            if r.rid not in d.rid_map:
+                # abandoned by an earlier fail(), or the losing copy of a
+                # hedge whose winner was absorbed first — the loser's
+                # serving time is the availability premium, book it
+                if self._hedge_drops.pop((d.drive_id, r.rid), None):
+                    self.stats.hedge_wasted_s += r.prefill_s + r.decode_s
+                    self.stats.hedge_wasted_s = max(
+                        self.stats.hedge_wasted_s, 0.0)
+                continue
+            grid = d.rid_map.pop(r.rid)
+            pair = self._hedges.pop(grid, None)
+            if pair is not None:
+                self._settle_hedge(grid, winner=d.drive_id, pair=pair)
+            self._inflight.pop(grid, None)
+            r.rid = grid
+            r.drive = d.drive_id
+            out.append(r)
+            self.stats.completed += 1
+
+    def _deliver(self, shed: List[GenResult], out: List[GenResult],
+                 admit_events: List[int],
+                 first_tok_events: List[int]) -> List[GenResult]:
+        """Stamp per-request latency at the post-tick cluster clock and
+        hand back the tick's results (sheds + completions + failouts)."""
+        for grid in admit_events:
+            rec = self.records.get(grid)
+            if rec is not None and not math.isfinite(rec.admit_t):
+                rec.admit_t = self.clock
+        for grid in first_tok_events:
+            rec = self.records.get(grid)
+            if rec is not None and not math.isfinite(rec.first_token_t):
+                rec.first_token_t = self.clock
+        for r in out:
+            rec = self.records.pop(r.rid, None)
+            if rec is None:
+                continue
+            rec.finish_t = self.clock
+            rec.n_tokens = len(r.tokens)
+            rec.status = "ok"
+            self.stats.latency.add(rec)
+            r.priority = rec.priority
+            r.queue_wait_s = rec.queue_wait_s
+            r.ttft_s = rec.ttft_s
+            r.tpot_s = rec.tpot_s
+            r.e2e_s = rec.e2e_s
+        if self._failout:
+            # terminal failures produced this tick (retry budget / last
+            # drive death) ride the tick's result list like sheds do
+            out = out + self._failout
+            self._failout = []
+        out = shed + out
+        self._finished.extend(out)
+        return out
+
+    def _step_serial(self) -> List[GenResult]:
         """One cluster tick: dispatch, then step every drive that has work.
         Each drive's step time advances its virtual clock; the tick costs
         the leading clock's advance (async parallel hardware), and the
@@ -656,36 +875,23 @@ class ClusterEngine:
             t0 = time.perf_counter()
             finished = d.engine.step()
             raw = time.perf_counter() - t0
+            if self.min_tick_s > 0.0:
+                # emulated drive service-time floor (fig9: makes the
+                # serial-vs-concurrent comparison hardware-independent);
+                # really slept so measured wall time includes it
+                pad = self.min_tick_s - raw
+                if pad > 0.0:
+                    time.sleep(pad)
+                    raw += pad
             obs = d.engine.last_tick
             dt = max(raw - obs.compile_s, 0.0) / d.speed
             if self.faults is not None:
                 dt *= self.faults.slowdown(d.drive_id, tick, self.clock)
             dts.append(dt)
             progressed.add(d.drive_id)
-            self._clocks[d.drive_id] += dt
             n_active += 1
-            self.pull.observe(d.drive_id, dt, obs.per_step_items)
-            # map engine-local events to global rids BEFORE the finished
-            # loop pops rid_map (a request can admit, emit its first token
-            # and finish in the same tick)
-            for local in obs.admitted_rids:
-                if local in d.rid_map:
-                    admit_events.append(d.rid_map[local])
-            for local in obs.first_token_rids:
-                if local in d.rid_map:
-                    first_tok_events.append(d.rid_map[local])
-            for r in finished:
-                if r.rid not in d.rid_map:
-                    continue               # abandoned by an earlier fail()
-                grid = d.rid_map.pop(r.rid)
-                pair = self._hedges.pop(grid, None)
-                if pair is not None:
-                    self._settle_hedge(grid, winner=d.drive_id, pair=pair)
-                self._inflight.pop(grid, None)
-                r.rid = grid
-                r.drive = d.drive_id
-                out.append(r)
-                self.stats.completed += 1
+            self._absorb_tick(d, finished, obs, dt, out, admit_events,
+                              first_tok_events)
             # the cluster owns result delivery: drop the engine's internal
             # copy so a long-running server doesn't accumulate one
             # GenResult per request per drive forever
@@ -726,40 +932,221 @@ class ClusterEngine:
         self.stats.health = list(self.detector.health)
         if not dts:
             self._idle_advance(tick)
-        for grid in admit_events:
-            rec = self.records.get(grid)
-            if rec is not None and not math.isfinite(rec.admit_t):
-                rec.admit_t = self.clock
-        for grid in first_tok_events:
-            rec = self.records.get(grid)
-            if rec is not None and not math.isfinite(rec.first_token_t):
-                rec.first_token_t = self.clock
-        for r in out:
-            rec = self.records.pop(r.rid, None)
-            if rec is None:
-                continue
-            rec.finish_t = self.clock
-            rec.n_tokens = len(r.tokens)
-            rec.status = "ok"
-            self.stats.latency.add(rec)
-            r.priority = rec.priority
-            r.queue_wait_s = rec.queue_wait_s
-            r.ttft_s = rec.ttft_s
-            r.tpot_s = rec.tpot_s
-            r.e2e_s = rec.e2e_s
-        if self._failout:
-            # terminal failures produced this tick (retry budget / last
-            # drive death) ride the tick's result list like sheds do
-            out = out + self._failout
-            self._failout = []
-        out = shed + out
-        self._finished.extend(out)
-        return out
+        return self._deliver(shed, out, admit_events, first_tok_events)
+
+    # -- concurrent worker runtime -------------------------------------------
+
+    def _make_step_fn(self, d: _Drive):
+        """The engine-specific half of a worker's tick, run on the worker
+        thread UNDER the drive lock (so fail() and hedge-cancel exclude a
+        mid-step worker).  Shared cluster state is never touched here —
+        the payload is absorbed by the coordinator under the cluster
+        lock."""
+        def run(tick: int, clock: float) -> Optional[dict]:
+            with d.lock:
+                if d.failed or self._stop.is_set() or not d.has_work:
+                    return None
+                if self.faults is not None:
+                    d.engine.pool_clamp_frac = \
+                        self.faults.clamp(d.drive_id, tick, clock)
+                t0 = time.perf_counter()
+                finished = list(d.engine.step())
+                raw = time.perf_counter() - t0
+                obs = d.engine.last_tick
+                # the worker owns result hand-off: clear the engine's
+                # internal copy (same contract as the serial loop)
+                d.engine._finished.clear()
+                return {"finished": finished, "obs": obs, "raw_s": raw}
+        return run
+
+    def _ensure_workers(self) -> None:
+        if self._workers is not None:
+            return
+        if self._closed:
+            raise RuntimeError("cluster engine is closed")
+        self._commands = []
+        self._workers = []
+        for d in self.drives:
+            cq: "queue_mod.Queue[WorkerCommand]" = queue_mod.Queue()
+            w = DriveWorker(
+                d.drive_id, self._make_step_fn(d), cq, self._monitor,
+                self._stop, epoch_of=(lambda dd=d: dd.epoch),
+                faults=self.faults, speed=d.speed,
+                min_tick_s=self.min_tick_s, jitter_s=self.tick_jitter_s,
+                seed=self.jitter_seed * 1009 + d.drive_id)
+            self._commands.append(cq)
+            self._workers.append(w)
+            w.start()
+
+    def close(self) -> None:
+        """Stop and join every worker thread.  Idempotent and race-safe:
+        concurrent close() calls join once; a worker blocked in an
+        injected hang (or sleeping out its service-time pad) is woken by
+        the stop event and joins cleanly mid-tick."""
+        with self._close_lock:
+            self._closed = True
+            workers, self._workers = self._workers, None
+        if not workers:
+            return
+        self._stop.set()
+        for cq in self._commands:
+            cq.put(WorkerCommand("stop"))
+        for w in workers:
+            w.join(timeout=10.0)
+        alive = [w.name for w in workers if w.is_alive()]
+        if alive:
+            raise RuntimeError(f"worker threads failed to join: {alive}")
+
+    # shutdown is close by its production name; the context-manager form
+    # guarantees the join even when a test body raises
+    shutdown = close
+
+    def __enter__(self) -> "ClusterEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def predicted_parallel_s(self) -> float:
+        """The virtual-clock model's prediction of the parallel makespan
+        (leading per-drive clock).  In concurrent mode the clocks advance
+        by each drive's measured busy time while ``stats.cluster_s``
+        accrues MEASURED join wall time — fig9 gates one against the
+        other."""
+        return max(self._clocks)
+
+    def _step_concurrent(self) -> List[GenResult]:
+        """One concurrent cluster tick (fork-join):
+
+        1. under the cluster lock: deliver fault begins, shed, dispatch,
+           then send one tick command to every non-failed drive with work
+           and no unanswered command;
+        2. join: drain the monitor queue until every outstanding command
+           (including stragglers from earlier ticks) is answered or
+           ``dispatch_timeout_s`` of real wall time elapses.  Payloads
+           are absorbed under the cluster lock as they arrive;
+        3. account the tick: the cluster wall clock advances by MEASURED
+           join time (minus the largest reported lazy-compile delta) —
+           overlap is real now, not modeled;
+        4. the watchdog observes reply/progress per drive — silence from
+           a crashed or hung worker accrues real wall time here, so
+           wall-threshold detection converges even while the cluster
+           clock stands still — and DEAD edges run the same fail() path
+           as the serial detector.
+
+        A drive whose command is unanswered is NOT re-dispatched (its
+        ``_outstanding`` stays up), so a straggler can never be stepped
+        twice concurrently; a late same-epoch reply is absorbed next
+        tick and counts as progress."""
+        self._ensure_workers()
+        tick = self._tick
+        self._tick += 1
+        with self._lock:
+            if self.faults is not None:
+                self.stats.faults_injected += \
+                    len(self.faults.begins(tick, self.clock))
+            shed = self._shed_queue()
+            self._dispatch()
+            sent = 0
+            for d in self.drives:
+                if d.failed or self._outstanding[d.drive_id] > 0 \
+                        or not d.has_work:
+                    continue
+                self._commands[d.drive_id].put(
+                    WorkerCommand("tick", tick, self.clock, d.epoch))
+                self._outstanding[d.drive_id] += 1
+                sent += 1
+            waiting = sum(self._outstanding[d.drive_id]
+                          for d in self.drives if not d.failed)
+        out: List[GenResult] = []
+        dts: List[float] = []
+        admit_events: List[int] = []
+        first_tok_events: List[int] = []
+        n_active = 0
+        progressed: set = set()
+        replied: set = set()
+        comp = 0.0
+        t0 = time.perf_counter()
+        deadline = t0 + self.dispatch_timeout_s
+        while waiting > 0:
+            remain = deadline - time.perf_counter()
+            if remain <= 0.0:
+                break
+            try:
+                hb = self._monitor.get(timeout=remain)
+            except queue_mod.Empty:
+                break
+            with self._lock:
+                d = self.drives[hb.drive_id]
+                if d.failed or hb.epoch != d.epoch:
+                    continue        # emitted before a fail(): stale
+                if self._outstanding[hb.drive_id] > 0:
+                    self._outstanding[hb.drive_id] -= 1
+                    waiting -= 1
+                replied.add(hb.drive_id)
+                if hb.kind != "tick_done" or hb.payload is None:
+                    continue        # liveness only (stall / hang wakeup)
+                obs = hb.payload["obs"]
+                dt = max(hb.busy_s - obs.compile_s, 0.0)
+                comp = max(comp, obs.compile_s)
+                self._absorb_tick(d, hb.payload["finished"], obs, dt, out,
+                                  admit_events, first_tok_events)
+                dts.append(dt)
+                n_active += 1
+                progressed.add(hb.drive_id)
+        wall = time.perf_counter() - t0
+        with self._lock:
+            if progressed:
+                # measured parallel wall clock: the join time IS the tick
+                # cost (compiles happen once per process — subtract the
+                # largest reported delta, mirroring the serial model)
+                tick_s = max(wall - comp, 0.0)
+                self._lead = max(self._clocks)
+                self.stats.record_tick(n_active, tick_s, sum(dts))
+                self.clock += tick_s
+                self._idle_grace = 0
+            dead_now: List[int] = []
+            for d in self.drives:
+                if d.failed:
+                    continue
+                old, new = self.watchdog.observe(
+                    d.drive_id, replied=d.drive_id in replied,
+                    progressed=d.drive_id in progressed,
+                    has_work=d.has_work)
+                if new == DEAD and old != DEAD:
+                    dead_now.append(d.drive_id)
+                elif new == SUSPECT and old != SUSPECT:
+                    self.pull.quarantine(d.drive_id)
+                elif new == HEALTHY and old == SUSPECT:
+                    self.pull.unquarantine(d.drive_id)
+            for did in dead_now:
+                self.stats.auto_failed_drives += 1
+                self.fail(did)
+            if self.hedge:
+                self._launch_hedges()
+            self.stats.health = list(self._health)
+            if not progressed and waiting == 0:
+                # nothing stepped and nothing is pending on the channel:
+                # fast-forward stall windows / backoffs / deadlines like
+                # the serial loop (a silent drive keeps waiting > 0, so
+                # real join timeouts — not this path — cover it)
+                self._idle_advance(tick)
+            return self._deliver(shed, out, admit_events, first_tok_events)
 
     def _settle_hedge(self, grid: int, winner: int, pair: tuple) -> None:
         """First finisher wins: cancel the losing copy, free its slot, and
         book the serving time it burned as hedge waste (the availability
-        premium, priced like shed work)."""
+        premium, priced like shed work).
+
+        Called with the winner's rid_map entry already popped, under the
+        cluster lock in concurrent mode — winner-commit and loser-cancel
+        are one atomic decision.  The both-finish-same-instant race (both
+        copies complete inside one joined tick) lands in ``cancel()``
+        returning None because the loser's engine already finished the
+        copy: the loser's rid_map entry is popped here, so when its
+        result arrives it is dropped by ``_absorb_tick`` and its burn is
+        booked via ``_hedge_drops``."""
         primary, hedger = pair
         loser = hedger if winner == primary else primary
         if winner == hedger:
@@ -773,9 +1160,15 @@ class ClusterEngine:
         if local is None:
             return
         ld.rid_map.pop(local)
-        wasted = ld.engine.cancel(local)
+        with ld.lock:                 # exclude the loser's mid-step worker
+            wasted = ld.engine.cancel(local)
         if wasted:
             self.stats.hedge_wasted_s += wasted
+        elif wasted is None:
+            # the copy had ALREADY finished on the loser's engine: its
+            # duplicate result is pending absorption — mark it so the
+            # drop books the loser's serving time as hedge waste
+            self._hedge_drops[(loser, local)] = True
 
     def _launch_hedges(self) -> None:
         """Duplicate the oldest slot-stranded request of each SUSPECT
@@ -783,7 +1176,7 @@ class ClusterEngine:
         per stranded request; the copy pays no spill accounting (it is an
         availability bet, not a placement decision)."""
         for d in self.drives:
-            if d.failed or self.detector.health[d.drive_id] != SUSPECT:
+            if d.failed or self._health[d.drive_id] != SUSPECT:
                 continue
             stranded = sorted(
                 d.rid_map[s.rid] for s in d.engine.slots
@@ -797,13 +1190,14 @@ class ClusterEngine:
                 continue
             targets = [x for x in self.drives
                        if x.drive_id != d.drive_id and x.accepting
-                       and self.detector.health[x.drive_id] == HEALTHY
+                       and self._health[x.drive_id] == HEALTHY
                        and x.load().capacity > 0]
             if not targets:
                 continue
             t = min(targets, key=lambda x: (x.load().load, x.drive_id))
-            local = t.engine.submit(req.prompt, max_new=req.max_new)
-            t.rid_map[local] = grid
+            with t.lock:
+                local = t.engine.submit(req.prompt, max_new=req.max_new)
+                t.rid_map[local] = grid
             self._hedges[grid] = (d.drive_id, t.drive_id)
             self.stats.hedges += 1
 
@@ -841,7 +1235,7 @@ class ClusterEngine:
         if self._idle_grace < 1 and \
                 any(r.not_before_s <= self.clock for r in self.queue) and \
                 any(not d.failed and d.accepting
-                    and self.detector.health[d.drive_id] != SUSPECT
+                    and self._health[d.drive_id] != SUSPECT
                     and d.load().capacity > 0 for d in self.drives):
             # a fail() THIS tick requeued work after dispatch already ran
             # (detection happens post-dispatch by design: dispatch uses

@@ -1,0 +1,121 @@
+"""Seeded stress tier: hammer the concurrent worker runtime with
+randomized workloads, tick jitter, and injected crashes / hangs /
+stalls, asserting the full invariant set EVERY iteration:
+
+  * every submitted rid comes back exactly once (sorted identity);
+  * every "ok" result is token-identical to the fault-free serial
+    oracle (greedy decode: recovery is exactly replayable);
+  * conservation: ``submitted == ok + shed + failed``;
+  * the KV free-list balances on every drive (no leaked pages);
+  * worker threads join cleanly after every iteration.
+
+Iteration count defaults to 50 (the acceptance bar); CI's smoke tier
+sets ``STRESS_ITERS`` lower.  Every iteration is an independent seeded
+cluster, so a failure message's seed reproduces it alone."""
+import dataclasses
+import os
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import reduced_config
+from repro.core.faults import FaultSchedule
+from repro.core.runtime import HeartbeatWatchdog
+from repro.models import model as M
+from repro.train.cluster_loop import ClusterEngine
+from repro.train.serve_loop import ServeEngine
+
+MAX_LEN = 64
+MAX_NEW = 4
+ITERS = int(os.environ.get("STRESS_ITERS", "50"))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def ref_k1(cfg, params):
+    return ServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2, k_block=1,
+                       prewarm=True)
+
+
+@pytest.fixture(scope="module")
+def pool(cfg, ref_k1):
+    """Prompt pool + the serial oracle's tokens for each prompt."""
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, int(n)).tolist()
+               for n in rng.integers(4, 14, 6)]
+    want = [r.tokens for r in ref_k1.generate(prompts, max_new=MAX_NEW)]
+    return prompts, want
+
+
+def _iteration_faults(rng) -> FaultSchedule | None:
+    """none / crash / short hang (recovers) / long hang (killed) / stall,
+    always on drive 1 so drive 0 keeps the cluster alive."""
+    roll = int(rng.integers(0, 5))
+    if roll == 0:
+        return None
+    at = int(rng.integers(0, 5))
+    if roll == 1:
+        spec = {"drive_id": 1, "kind": "crash", "at_tick": at}
+    elif roll == 2:
+        spec = {"drive_id": 1, "kind": "worker_hang", "at_tick": at,
+                "duration": 0.02}
+    elif roll == 3:
+        spec = {"drive_id": 1, "kind": "worker_hang", "at_tick": at,
+                "duration": 5.0}
+    else:
+        spec = {"drive_id": 1, "kind": "stall", "at_tick": at,
+                "duration": int(rng.integers(1, 4))}
+    return FaultSchedule.from_spec([spec])
+
+
+def test_concurrent_stress_seeded_iterations(cfg, params, ref_k1, pool):
+    prompts, want = pool
+    for it in range(ITERS):
+        seed = 1000 + it
+        rng = np.random.default_rng(seed)
+        picks = sorted(rng.choice(len(prompts),
+                                  size=int(rng.integers(3, 6)),
+                                  replace=False).tolist())
+        faults = _iteration_faults(rng)
+        clu = ClusterEngine(
+            cfg, params, jit_donor=ref_k1, n_drives=2, concurrent=True,
+            routing="round_robin", max_len=MAX_LEN, num_slots=2, k_block=1,
+            prewarm=True, faults=faults, max_retries=5,
+            dispatch_timeout_s=0.05,
+            tick_jitter_s=float(rng.uniform(0.0, 0.01)),
+            jitter_seed=seed,
+            watchdog=HeartbeatWatchdog(2, suspect_after_s=0.06,
+                                       suspect_misses=3, dead_after_s=0.5,
+                                       dead_misses=60))
+        try:
+            rids = [clu.submit(prompts[p], max_new=MAX_NEW) for p in picks]
+            res = {r.rid: r for r in clu.run_until_complete()}
+            ctx = f"seed={seed} picks={picks} faults={faults}"
+            assert sorted(res) == rids, ctx
+            for rid, p in zip(rids, picks):
+                if res[rid].status == "ok":
+                    assert res[rid].tokens == want[p], f"{ctx} rid={rid}"
+            ok = sum(1 for r in res.values() if r.status == "ok")
+            shed = sum(1 for r in res.values() if r.status == "shed")
+            failed = sum(1 for r in res.values() if r.status == "failed")
+            assert len(rids) == ok + shed + failed, ctx
+            # the retry budget (5) absorbs any single drive-1 fault
+            assert failed == 0, ctx
+            for d in clu.drives:
+                assert d.engine.pager.num_in_use == 0, ctx
+                d.engine.pager.check_balanced()
+        finally:
+            clu.close()
+        assert not [t for t in threading.enumerate()
+                    if t.name.startswith("drive-worker-")], f"seed={seed}"

@@ -1,0 +1,486 @@
+"""Concurrent-runtime tier: the drive-worker threads, the heartbeat
+watchdog, fault-schedule persistence, race-safe lifecycle, and the
+atomic hedge settlement.
+
+Pure tests (watchdog state machine with an injectable fake clock,
+jsonl round-trips) are fast-marked; the engine-backed tests run a REAL
+two-worker cluster — crashes manifest as thread death (silence on the
+monitor channel), hangs really block the worker — and assert the
+watchdog's verdicts plus token identity against the fault-free serial
+oracle.  Greedy decode makes recovery exactly replayable, so "no work
+lost, invented, or corrupted under concurrency" is a literal token
+comparison, not a statistic."""
+import dataclasses
+import math
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import reduced_config
+from repro.core.faults import (DEAD, HEALTHY, SUSPECT, FaultEvent,
+                               FaultSchedule)
+from repro.core.runtime import HeartbeatWatchdog
+from repro.models import model as M
+from repro.train.cluster_loop import ClusterEngine
+from repro.train.serve_loop import ServeEngine
+
+MAX_LEN = 64
+
+
+# ---------------------------------------------------------------------------
+# pure: heartbeat watchdog state machine
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.mark.fast
+def test_watchdog_miss_counters_suspect_then_dead():
+    clk = FakeClock()
+    wd = HeartbeatWatchdog(2, suspect_after_s=math.inf, suspect_misses=2,
+                           dead_after_s=math.inf, dead_misses=4, clock=clk)
+    assert wd.observe(0, replied=True, progressed=True, has_work=True) == \
+        (HEALTHY, HEALTHY)
+    # silent with work: 2 misses -> SUSPECT, 4 -> DEAD (terminal)
+    assert wd.observe(0, False, False, True) == (HEALTHY, HEALTHY)
+    assert wd.observe(0, False, False, True) == (HEALTHY, SUSPECT)
+    assert wd.suspects == [0]
+    # an "alive"-only beat (replied, no progress) is still a miss: a
+    # stalled drive answers pings without doing work
+    assert wd.observe(0, True, False, True) == (SUSPECT, SUSPECT)
+    assert wd.observe(0, False, False, True) == (SUSPECT, DEAD)
+    assert wd.dead == [0]
+    assert wd.observe(0, True, True, True) == (DEAD, DEAD)  # no resurrection
+    assert wd.health[1] == HEALTHY                 # never observed
+
+
+@pytest.mark.fast
+def test_watchdog_wall_silence_thresholds_and_recovery():
+    clk = FakeClock()
+    wd = HeartbeatWatchdog(1, suspect_after_s=1.0, suspect_misses=10 ** 6,
+                           dead_after_s=3.0, dead_misses=10 ** 6, clock=clk)
+    wd.observe(0, True, True, True)                # productive at t=0
+    clk.t = 0.9
+    assert wd.observe(0, False, False, True)[1] == HEALTHY
+    clk.t = 1.1
+    assert wd.observe(0, False, False, True)[1] == SUSPECT
+    # a productive beat clears suspicion AND re-bases the silence timer
+    clk.t = 1.2
+    assert wd.observe(0, True, True, True)[1] == HEALTHY
+    clk.t = 2.1
+    assert wd.observe(0, False, False, True)[1] == HEALTHY  # silent 0.9
+    clk.t = 4.3
+    assert wd.observe(0, False, False, True)[1] == DEAD     # silent 3.1
+
+
+@pytest.mark.fast
+def test_watchdog_lazy_baseline_judges_doa_drive_by_own_timeline():
+    # a drive crashed before its FIRST beat must not be killed off the
+    # process-start clock: silence is measured from first observation
+    clk = FakeClock()
+    clk.t = 1000.0                                 # long-running process
+    wd = HeartbeatWatchdog(1, suspect_after_s=1.0, suspect_misses=10 ** 6,
+                           dead_after_s=3.0, dead_misses=10 ** 6, clock=clk)
+    assert wd.observe(0, False, False, True)[1] == HEALTHY  # baseline set
+    clk.t = 1002.0
+    assert wd.observe(0, False, False, True)[1] == SUSPECT
+    clk.t = 1004.0
+    assert wd.observe(0, False, False, True)[1] == DEAD
+
+
+@pytest.mark.fast
+def test_watchdog_idle_drives_never_suspected():
+    clk = FakeClock()
+    wd = HeartbeatWatchdog(1, suspect_after_s=0.5, suspect_misses=1,
+                           dead_after_s=2.0, dead_misses=4, clock=clk)
+    for clk.t in (1.0, 50.0, 1000.0):
+        assert wd.observe(0, replied=False, progressed=False,
+                          has_work=False) == (HEALTHY, HEALTHY)
+    # idle re-bases the timer: work arriving later starts from scratch
+    clk.t = 1000.4
+    assert wd.observe(0, False, False, True)[1] == SUSPECT  # misses=1
+
+
+@pytest.mark.fast
+def test_watchdog_validation_and_mark_dead():
+    with pytest.raises(ValueError, match="suspect"):
+        HeartbeatWatchdog(1, suspect_after_s=0.0)
+    with pytest.raises(ValueError, match="dead thresholds"):
+        HeartbeatWatchdog(1, suspect_after_s=1.0, dead_after_s=0.5)
+    with pytest.raises(ValueError, match="at least one"):
+        HeartbeatWatchdog(0)
+    wd = HeartbeatWatchdog(3)
+    assert wd.dead_after_s == pytest.approx(4 * wd.suspect_after_s)
+    assert wd.dead_misses == 4 * wd.suspect_misses
+    wd.mark_dead(1)
+    assert wd.health == [HEALTHY, DEAD, HEALTHY]
+    assert wd.observe(1, True, True, True) == (DEAD, DEAD)
+
+
+# ---------------------------------------------------------------------------
+# pure: fault-schedule persistence + worker-facing queries
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_fault_schedule_jsonl_round_trip(tmp_path):
+    sch = FaultSchedule.from_rates(3, mttf_s=1.0, mttr_s=0.3, seed=5)
+    assert sch.events
+    path = tmp_path / "faults.jsonl"
+    sch.save(path)
+    back = FaultSchedule.load(path)
+    assert [dataclasses.astuple(e) for e in back.events] == \
+        [dataclasses.astuple(e) for e in sch.events]
+    # loaded schedules are fresh: delivery state does not round-trip
+    tick = next((e.at_tick for e in sch.events if e.tick_based), None)
+    if tick is not None:
+        first = sch.begins(tick, 0.0)
+        assert back.begins(tick, 0.0) == first
+
+
+@pytest.mark.fast
+def test_fault_schedule_load_accepts_legacy_json_list(tmp_path):
+    spec = [{"drive_id": 0, "kind": "stall", "at_tick": 2, "duration": 3},
+            {"drive_id": 1, "kind": "crash", "at_s": 1.5}]
+    legacy = tmp_path / "faults.json"
+    legacy.write_text('[{"drive_id": 0, "kind": "stall", "at_tick": 2, '
+                      '"duration": 3}, '
+                      '{"drive_id": 1, "kind": "crash", "at_s": 1.5}]')
+    a = FaultSchedule.load(legacy)
+    assert [dataclasses.astuple(e) for e in a.events] == \
+        [dataclasses.astuple(e) for e in FaultSchedule.from_spec(spec).events]
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    assert FaultSchedule.load(empty).events == []
+
+
+@pytest.mark.fast
+def test_worker_hang_event_and_pure_queries_hide_ground_truth():
+    with pytest.raises(ValueError, match="duration"):
+        FaultEvent(0, "worker_hang", at_tick=1)
+    sch = FaultSchedule.from_spec([
+        {"drive_id": 0, "kind": "worker_hang", "at_tick": 2,
+         "duration": 0.05},
+        {"drive_id": 1, "kind": "crash", "at_tick": 3},
+    ])
+    # pure predicates: repeated calls keep answering (no delivered-set
+    # mutation a worker could leak to the watchdog)
+    for _ in range(3):
+        assert sch.hangs(0, 2, 0.0) == [(0, pytest.approx(0.05))]
+        assert sch.hangs(0, 1, 0.0) == []
+        assert sch.crash_active(1, 3, 0.0)
+        assert not sch.crash_active(1, 2, 0.0)
+    # a hung worker reads as stalled (silence) to the serial loop too
+    assert sch.stalled(0, 2, 0.0) and not sch.stalled(0, 99, 0.0)
+    # ...and the one-shot begins() is untouched by the pure reads
+    assert len(sch.begins(2, 0.0)) == 1
+
+
+# ---------------------------------------------------------------------------
+# engine-backed: a real two-worker cluster
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return dataclasses.replace(reduced_config("yi-9b"), dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def ref_k1(cfg, params):
+    """Prewarmed k_block=1 oracle/donor.  Prewarm matters here: a lazy
+    XLA compile inside a worker's first tick is seconds of real silence
+    on the monitor channel, and the watchdog — correctly — cannot tell a
+    compiling drive from a dead one."""
+    return ServeEngine(cfg, params, max_len=MAX_LEN, num_slots=2, k_block=1,
+                       prewarm=True)
+
+
+@pytest.fixture(scope="module")
+def trace(cfg, ref_k1):
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, n).tolist()
+               for n in (5, 9, 7, 11)]
+    want = [r.tokens for r in ref_k1.generate(prompts, max_new=5)]
+    return prompts, want
+
+
+def make_concurrent(cfg, params, ref_k1, n_drives=2, **kw):
+    """Concurrent cluster with watchdog thresholds fast enough for tests
+    but lenient enough (dead_misses, 0.5s wall) that slow CI machines
+    don't false-kill a healthy-but-scheduling-starved worker.  Drives
+    prewarm at construction (cheap: the donor's jit cache is hot) — a
+    cold drive's first tick is ~0.4s of real silence, which an honest
+    watchdog cannot tell from death."""
+    kw.setdefault("watchdog", HeartbeatWatchdog(
+        n_drives, suspect_after_s=0.06, suspect_misses=3,
+        dead_after_s=0.5, dead_misses=60))
+    kw.setdefault("dispatch_timeout_s", 0.05)
+    kw.setdefault("max_retries", 5)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("k_block", 1)
+    kw.setdefault("routing", "round_robin")
+    kw.setdefault("prewarm", True)
+    return ClusterEngine(cfg, params, jit_donor=ref_k1, n_drives=n_drives,
+                         concurrent=True, **kw)
+
+
+def assert_conserved_and_balanced(clu, res, n_submitted):
+    ok = sum(1 for r in res if r.status == "ok")
+    shed = sum(1 for r in res if r.status == "shed")
+    failed = sum(1 for r in res if r.status == "failed")
+    assert n_submitted == ok + shed + failed
+    for d in clu.drives:
+        if d.failed or not d.has_work:
+            assert d.engine.pager.num_in_use == 0
+            d.engine.pager.check_balanced()
+
+
+def test_concurrent_runtime_matches_serial_oracle(cfg, params, ref_k1,
+                                                  trace):
+    """The tentpole path: real worker threads, measured wall-clock ticks —
+    and the exact tokens of the fault-free serial oracle."""
+    prompts, want = trace
+    with make_concurrent(cfg, params, ref_k1, min_tick_s=0.02) as clu:
+        rids = [clu.submit(p, max_new=5) for p in prompts]
+        res = {r.rid: r for r in clu.run_until_complete()}
+        assert sorted(res) == rids
+        assert [res[r].tokens for r in rids] == want
+        assert all(r.status == "ok" for r in res.values())
+        # ticks are measured wall clock: the two workers genuinely
+        # overlapped, so parallel time beat the summed busy time
+        assert clu.stats.ticks > 0 and clu.stats.cluster_s > 0.0
+        assert clu.stats.cluster_s < clu.stats.serial_s * 0.95
+        # the virtual clocks still run (rate-aware routing + prediction)
+        assert clu.predicted_parallel_s > 0.0
+        assert clu.stats.health == [HEALTHY, HEALTHY]
+        assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+    # context-manager exit joined the workers
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("drive-worker-")]
+
+
+def test_concurrent_silent_crash_detected_by_watchdog(cfg, params, ref_k1,
+                                                      trace):
+    """A crashed worker THREAD DIES — no flag is set anywhere the
+    coordinator can see.  Only its silence on the monitor channel (missed
+    beats + real dispatch timeouts) can convict it."""
+    prompts, want = trace
+    faults = FaultSchedule.from_spec(
+        [{"drive_id": 1, "kind": "crash", "at_tick": 1}])
+    with make_concurrent(cfg, params, ref_k1, faults=faults) as clu:
+        rids = [clu.submit(p, max_new=5) for p in prompts]
+        res = {r.rid: r for r in clu.run_until_complete()}
+        assert sorted(res) == rids
+        assert [res[r].tokens for r in rids] == want
+        assert clu.stats.health == [HEALTHY, DEAD]
+        assert clu.stats.auto_failed_drives == 1
+        assert clu.stats.retries > 0               # in-flight work restarted
+        assert clu.stats.failed_requests == 0
+        assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+        # the dead worker's thread really exited (not just ignored)
+        dead = [w for w in clu._workers if w.drive_id == 1]
+        assert dead and not dead[0].is_alive()
+
+
+def test_concurrent_long_hang_killed_and_close_is_fast(cfg, params, ref_k1,
+                                                       trace):
+    """A worker_hang really blocks the thread mid-protocol: the command it
+    held is lost, the watchdog convicts the silence, survivors replay the
+    work — and close() interrupts the 30s sleep instead of waiting it
+    out."""
+    prompts, want = trace
+    faults = FaultSchedule.from_spec(
+        [{"drive_id": 1, "kind": "worker_hang", "at_tick": 1,
+          "duration": 30.0}])
+    clu = make_concurrent(cfg, params, ref_k1, faults=faults)
+    try:
+        rids = [clu.submit(p, max_new=5) for p in prompts]
+        t0 = time.perf_counter()
+        res = {r.rid: r for r in clu.run_until_complete()}
+        wall = time.perf_counter() - t0
+        assert wall < 15.0                         # did NOT serve the hang
+        assert sorted(res) == rids
+        assert [res[r].tokens for r in rids] == want
+        assert clu.stats.health == [HEALTHY, DEAD]
+        assert clu.stats.auto_failed_drives == 1
+        assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+    finally:
+        t0 = time.perf_counter()
+        clu.close()                                # worker 1 is mid-wait
+        assert time.perf_counter() - t0 < 5.0
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("drive-worker-")]
+
+
+def test_concurrent_short_hang_recovers_without_kill(cfg, params, ref_k1,
+                                                     trace):
+    """A transient hang shorter than the dead threshold: the woken worker
+    announces it lost the command, the coordinator re-dispatches, and the
+    drive finishes its own work — no fail(), no retries."""
+    prompts, want = trace
+    faults = FaultSchedule.from_spec(
+        [{"drive_id": 1, "kind": "worker_hang", "at_tick": 1,
+          "duration": 0.02}])
+    with make_concurrent(cfg, params, ref_k1, faults=faults) as clu:
+        rids = [clu.submit(p, max_new=5) for p in prompts]
+        res = {r.rid: r for r in clu.run_until_complete()}
+        assert sorted(res) == rids
+        assert [res[r].tokens for r in rids] == want
+        assert all(r.status == "ok" for r in res.values())
+        assert clu.stats.auto_failed_drives == 0
+        assert clu.stats.retries == 0
+        assert clu.stats.health == [HEALTHY, HEALTHY]
+        hung = [w for w in clu._workers if w.drive_id == 1]
+        assert hung and hung[0].hangs_served == 1  # it really slept
+        assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+
+
+def test_lifecycle_close_idempotent_and_step_after_close_raises(
+        cfg, params, ref_k1, trace):
+    prompts, want = trace
+    clu = make_concurrent(cfg, params, ref_k1)
+    rids = [clu.submit(p, max_new=5) for p in prompts[:2]]
+    res = {r.rid: r for r in clu.run_until_complete()}
+    assert sorted(res) == rids
+    assert [res[r].tokens for r in rids] == want[:2]
+    clu.close()
+    clu.close()                                    # idempotent
+    clu.shutdown()                                 # alias, also idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        clu.step()
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("drive-worker-")]
+
+
+def test_drain_fail_race_from_other_threads(cfg, params, ref_k1, trace):
+    """drain()/fail() arriving from OTHER threads mid-run: the epoch
+    bump + per-drive locks must keep conservation and leave no orphaned
+    in-flight work, and fail() must be idempotent under the race."""
+    prompts, want = trace
+    with make_concurrent(cfg, params, ref_k1, min_tick_s=0.01) as clu:
+        rids = [clu.submit(p, max_new=5) for p in prompts]
+        outcomes = []
+
+        def killer():
+            time.sleep(0.03)                       # mid-run, mid-tick
+            outcomes.append(clu.fail(1))
+            outcomes.append(clu.fail(1))           # second call: no-op
+            clu.drain(1)                           # drain-after-fail:
+            clu.drain(1)                           # idempotent no-ops
+
+        th = threading.Thread(target=killer)
+        th.start()
+        res = {r.rid: r for r in clu.run_until_complete()}
+        th.join()
+        assert sorted(res) == rids
+        assert len(outcomes) == 2 and outcomes[1] == 0
+        # drive 1 is operator-dead; whatever it held was requeued within
+        # budget and replayed token-identically on drive 0
+        assert clu.stats.health[1] == DEAD
+        for i, rid in enumerate(rids):
+            if res[rid].status == "ok":
+                assert res[rid].tokens == want[i]
+        assert_conserved_and_balanced(clu, list(res.values()), len(rids))
+    assert not [t for t in threading.enumerate()
+                if t.name.startswith("drive-worker-")]
+
+
+def test_hedge_both_finish_same_instant_resolves_atomically(cfg, params,
+                                                            ref_k1, trace):
+    """Satellite regression: BOTH copies of a hedged request complete
+    inside one joined tick.  Whichever absorption order the monitor queue
+    produces, exactly one result is delivered, the loser's burn is booked
+    as hedge waste, and no slot or page leaks."""
+    prompts, want = trace
+    for order in ("primary_first", "hedger_first"):
+        clu = ClusterEngine(cfg, params, jit_donor=ref_k1, n_drives=2,
+                            routing="round_robin", max_len=MAX_LEN,
+                            num_slots=2, k_block=1, hedge=True)
+        rid = clu.submit(prompts[0], max_new=5)
+        clu.step()                                 # admitted on drive 0
+        d0, d1 = clu.drives
+        req = clu._inflight[rid]
+        # hand-build the hedge (the launch path is covered elsewhere;
+        # this test targets the settlement race)
+        local = d1.engine.submit(req.prompt, max_new=req.max_new)
+        d1.rid_map[local] = rid
+        clu._hedges[rid] = (0, 1)
+        clu.stats.hedges += 1
+        # run BOTH engines to completion: the race's worst case, where
+        # the winner settles against an already-finished loser
+        fins = {}
+        for d in (d0, d1):
+            fin = []
+            while d.engine.pending or d.engine.num_active:
+                fin.extend(d.engine.step())
+            fins[d.drive_id] = (fin, d.engine.last_tick)
+            d.engine._finished.clear()
+        first, second = (d0, d1) if order == "primary_first" else (d1, d0)
+        out = []
+        for d in (first, second):
+            fin, obs = fins[d.drive_id]
+            clu._absorb_tick(d, fin, obs, 0.01, out, [], [])
+        assert [r.rid for r in out] == [rid]       # exactly one delivery
+        assert out[0].tokens == want[0]
+        assert out[0].drive == first.drive_id      # first absorbed wins
+        assert clu._hedges == {} and clu._hedge_drops == {}
+        assert clu.stats.hedges_won + clu.stats.hedges_lost == 1
+        assert clu.stats.hedge_wasted_s > 0.0      # loser's burn booked
+        for d in (d0, d1):
+            assert d.engine.num_active == 0
+            assert d.engine.pager.num_in_use == 0
+            d.engine.pager.check_balanced()
+        clu.close()
+
+
+def test_fail_recovers_finished_but_unabsorbed_requests(cfg, params, ref_k1,
+                                                        trace):
+    """Regression: a drive can FINISH a request and die before the
+    coordinator absorbs the result — the reply rides a heartbeat that the
+    fail()-epoch-bump makes stale, so from the coordinator's view that
+    output never existed.  fail() must treat every surviving rid_map
+    entry (not just active slots) as lost in-flight work; before the fix
+    the request vanished — never retried, never failed out — breaking
+    ``submitted == ok + shed + failed`` and making run_until_complete()
+    return []."""
+    prompts, want = trace
+    clu = make_concurrent(cfg, params, ref_k1)
+    try:
+        rid = clu.submit(prompts[0], max_new=5)
+        d = clu.drives[1]
+        # hand-dispatch to drive 1 and run ITS engine to completion: the
+        # slot frees and the result sits undelivered, exactly the state
+        # a discarded late heartbeat leaves behind (no worker threads
+        # exist yet — they spawn lazily on the first cluster step)
+        req = clu.queue.popleft()
+        local = d.engine.submit(req.prompt, max_new=req.max_new)
+        d.rid_map[local] = rid
+        while d.engine.queue or any(s.active for s in d.engine.slots):
+            d.engine.step()
+        assert d.engine._finished
+        assert not any(s.active for s in d.engine.slots)
+        assert clu.fail(1) == 1        # the orphan requeues as a retry
+        assert not d.rid_map and not d.engine._finished
+        res = clu.run_until_complete()
+        assert [r.rid for r in res] == [rid]
+        assert res[0].status == "ok" and res[0].tokens == want[0]
+        assert clu.stats.retries == 1
+        assert_conserved_and_balanced(clu, res, 1)
+    finally:
+        clu.close()
