@@ -45,6 +45,8 @@ import dataclasses
 import json
 import math
 
+from benchmarks._gate import check_payload, retry_gate, scan_nan
+
 ATTEMPTS = 3
 TOKS_BAND = (0.5, 2.0)      # edf/fifo tokens/s ratio sanity band
 GOODPUT_BAND = 0.95         # edf goodput must be >= fifo * band
@@ -179,20 +181,6 @@ def measure(cfg, params, ref, trace, config: dict) -> dict:
     return m
 
 
-def scan_nan(obj, path: str = "") -> list:
-    """Every non-finite float in a (nested) payload, by dotted path."""
-    bad = []
-    if isinstance(obj, dict):
-        for k, v in obj.items():
-            bad += scan_nan(v, f"{path}.{k}" if path else str(k))
-    elif isinstance(obj, (list, tuple)):
-        for i, v in enumerate(obj):
-            bad += scan_nan(v, f"{path}[{i}]")
-    elif isinstance(obj, float) and not math.isfinite(obj):
-        bad.append(path)
-    return bad
-
-
 def run_slo(emit=print, n_requests: int = 40, seed: int = 0,
             load: float = 1.2, json_path=None, strict: bool = True,
             setup=None):
@@ -224,16 +212,18 @@ def run_slo(emit=print, n_requests: int = 40, seed: int = 0,
              f"{m['tokens_per_s']:.1f}")
 
     if strict:
-        # token identity is deterministic — check once, outside the
-        # wall-clock re-measure loop
+        # token identity is deterministic — checked on every measurement
+        # (including re-measures), and a miss raises instead of retrying
+        def measure_checked():
+            r = measure_all()
+            _gate_identity(r["fifo"], r["edf"])
+            return r
+
         _gate_identity(runs["fifo"], runs["edf"])
-        for attempt in range(ATTEMPTS):
-            if _gates_pass(runs["fifo"], runs["edf"]):
-                break
-            emit(f"SLO gate missed, re-measuring "
-                 f"({attempt + 1}/{ATTEMPTS})")
-            runs = measure_all()
-            _gate_identity(runs["fifo"], runs["edf"])
+        runs = retry_gate(runs, measure_checked,
+                          lambda r: _gates_pass(r["fifo"], r["edf"]),
+                          emit, attempts=ATTEMPTS,
+                          describe=lambda r: "SLO gate missed")
         _gate_strict(runs["fifo"], runs["edf"], emit)
 
     payload = {
@@ -335,14 +325,8 @@ def run_smoke(emit=print) -> None:
 
 
 def run_check(path: str, emit=print) -> None:
-    """bench-guard hook: the committed payload must be NaN-free (a NaN
-    means a degenerate run was committed as the reference)."""
-    with open(path) as f:
-        payload = json.load(f)
-    bad = scan_nan(payload)
-    if bad:
-        raise RuntimeError(f"{path} carries NaN metrics: {bad}")
-    emit(f"{path}: NaN-free ({len(payload.get('runs', {}))} runs)")
+    """bench-guard hook: the committed payload must be NaN-free."""
+    check_payload(path, emit=emit)
 
 
 def main(argv=None):

@@ -43,6 +43,8 @@ import dataclasses
 import json
 import math
 
+from benchmarks._gate import check_payload, retry_gate, scan_nan
+
 ATTEMPTS = 3
 # chaos/baseline qps ratio band around the (N-1)/N proportional loss:
 # the lower edge allows detector latency + retry replay waste, the upper
@@ -157,20 +159,6 @@ def measure(cfg, params, ref, prompts, n_drives: int, max_new: int,
     }
 
 
-def scan_nan(obj, path: str = "") -> list:
-    """Every non-finite float in a (nested) payload, by dotted path."""
-    bad = []
-    if isinstance(obj, dict):
-        for k, v in obj.items():
-            bad += scan_nan(v, f"{path}.{k}" if path else str(k))
-    elif isinstance(obj, (list, tuple)):
-        for i, v in enumerate(obj):
-            bad += scan_nan(v, f"{path}[{i}]")
-    elif isinstance(obj, float) and not math.isfinite(obj):
-        bad.append(path)
-    return bad
-
-
 def run_chaos(emit=print, n_drives: int = 4, n_requests: int = 24,
               max_new: int = 8, crash_tick: int = 8, seed: int = 0,
               json_path=None, strict: bool = True, setup=None):
@@ -206,14 +194,18 @@ def run_chaos(emit=print, n_drives: int = 4, n_requests: int = 24,
              f"{m['wall_s']:.3f},{m['wasted_s']:.3f}")
 
     if strict:
+        # recovery gates are deterministic — checked on every measurement
+        # (including re-measures), and a miss raises instead of retrying
+        def measure_checked():
+            r = measure_all()
+            _gate_recovery(r, n_drives)
+            return r
+
         _gate_recovery(runs, n_drives)
-        for attempt in range(ATTEMPTS):
-            if _band_pass(runs, n_drives):
-                break
-            emit(f"goodput band missed, re-measuring "
-                 f"({attempt + 1}/{ATTEMPTS})")
-            runs = measure_all()
-            _gate_recovery(runs, n_drives)
+        runs = retry_gate(runs, measure_checked,
+                          lambda r: _band_pass(r, n_drives),
+                          emit, attempts=ATTEMPTS,
+                          describe=lambda r: "goodput band missed")
         _gate_band(runs, n_drives, emit)
 
     payload = {
@@ -314,14 +306,8 @@ def run_smoke(emit=print) -> None:
 
 
 def run_check(path: str, emit=print) -> None:
-    """bench-guard hook: the committed payload must be NaN-free (a NaN
-    means a degenerate chaos run was committed as the reference)."""
-    with open(path) as f:
-        payload = json.load(f)
-    bad = scan_nan(payload)
-    if bad:
-        raise RuntimeError(f"{path} carries NaN metrics: {bad}")
-    emit(f"{path}: NaN-free ({len(payload.get('runs', {}))} runs)")
+    """bench-guard hook: the committed payload must be NaN-free."""
+    check_payload(path, emit=emit)
 
 
 def main(argv=None):

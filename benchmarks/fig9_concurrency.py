@@ -39,8 +39,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import math
 import time
+
+from benchmarks._gate import check_payload, retry_gate, scan_nan
 
 ATTEMPTS = 3
 SPEEDUP_MIN = 1.8          # 4 drives' floors overlapped vs summed
@@ -90,7 +91,8 @@ def _watchdog(n_drives: int):
 
 
 def measure(cfg, params, ref, prompts, n_drives: int, max_new: int,
-            min_tick_s: float, concurrent: bool, oracle=None) -> dict:
+            min_tick_s: float, concurrent: bool, oracle=None,
+            telemetry=None) -> dict:
     """One closed-loop run; enforces the per-run invariants and returns
     both the real wall time and the engine's measured/modeled clocks."""
     from repro.train.cluster_loop import ClusterEngine
@@ -99,7 +101,8 @@ def measure(cfg, params, ref, prompts, n_drives: int, max_new: int,
                         routing="round_robin", max_len=ref.max_len,
                         num_slots=ref.num_slots, k_block=1, prewarm=True,
                         min_tick_s=min_tick_s, concurrent=concurrent,
-                        watchdog=_watchdog(n_drives) if concurrent else None)
+                        watchdog=_watchdog(n_drives) if concurrent else None,
+                        telemetry=telemetry)
     try:
         rids = [clu.submit(p, max_new=max_new) for p in prompts]
         t0 = time.perf_counter()
@@ -148,53 +151,50 @@ def measure(cfg, params, ref, prompts, n_drives: int, max_new: int,
         clu.close()
 
 
-def scan_nan(obj, path: str = "") -> list:
-    """Every non-finite float in a (nested) payload, by dotted path."""
-    bad = []
-    if isinstance(obj, dict):
-        for k, v in obj.items():
-            bad += scan_nan(v, f"{path}.{k}" if path else str(k))
-    elif isinstance(obj, (list, tuple)):
-        for i, v in enumerate(obj):
-            bad += scan_nan(v, f"{path}[{i}]")
-    elif isinstance(obj, float) and not math.isfinite(obj):
-        bad.append(path)
-    return bad
-
-
 def run_bench(emit=print, n_drives: int = 4, n_requests: int = 16,
               max_new: int = 8, min_tick_ms: float = 12.0, seed: int = 0,
-              json_path=None, strict: bool = True, setup=None):
+              json_path=None, strict: bool = True, setup=None,
+              trace_out=None):
     """Serve the trace serially and concurrently; gate and return the
-    payload."""
+    payload.  With ``trace_out`` the LAST concurrent run is traced through
+    the telemetry hub and the Chrome trace is written even when a gate
+    fails — a failed speedup gate leaves the timeline that explains it."""
     cfg, params, ref = setup if setup is not None else make_setup(seed)
     prompts = build_requests(cfg, n_requests, seed)
     oracle = oracle_tokens(ref, prompts, max_new)
     floor = min_tick_ms / 1e3
+    hub_box = {"hub": None}     # the latest concurrent run's hub
 
     def measure_all():
+        hub = None
+        if trace_out:
+            from repro.core.telemetry import TelemetryHub
+            hub_box["hub"] = hub = TelemetryHub()
         return {
             "serial": measure(cfg, params, ref, prompts, n_drives, max_new,
                               floor, concurrent=False, oracle=oracle),
             "concurrent": measure(cfg, params, ref, prompts, n_drives,
                                   max_new, floor, concurrent=True,
-                                  oracle=oracle),
+                                  oracle=oracle, telemetry=hub),
         }
 
-    runs = measure_all()
-    # warm pass then steady state: the first pass may still trip fresh
-    # splice shapes at this trace's prompt lengths
-    runs = measure_all()
+    try:
+        runs = measure_all()
+        # warm pass then steady state: the first pass may still trip fresh
+        # splice shapes at this trace's prompt lengths
+        runs = measure_all()
 
-    if strict:
-        for attempt in range(ATTEMPTS):
-            if _gates_pass(runs):
-                break
-            emit(f"wall-clock gates missed (speedup {_speedup(runs):.2f}, "
-                 f"prediction ratio {_prediction_ratio(runs):.2f}), "
-                 f"re-measuring ({attempt + 1}/{ATTEMPTS})")
-            runs = measure_all()
-        _gate(runs, emit)
+        if strict:
+            runs = retry_gate(
+                runs, measure_all, _gates_pass, emit, attempts=ATTEMPTS,
+                describe=lambda r: (
+                    f"wall-clock gates missed (speedup {_speedup(r):.2f}, "
+                    f"prediction ratio {_prediction_ratio(r):.2f})"))
+            _gate(runs, emit)
+    finally:
+        if trace_out and hub_box["hub"] is not None:
+            hub_box["hub"].write_chrome_trace(trace_out)
+            emit(f"wrote {trace_out}")
 
     emit("table,mode,ok,ticks,wall_s,cluster_s,serial_s,predicted_s")
     for name, m in runs.items():
@@ -261,28 +261,30 @@ def _gate(runs: dict, emit) -> None:
          f"conservation + free-list balance held in both modes")
 
 
-def run_smoke(emit=print) -> None:
+def run_smoke(emit=print, trace_out=None) -> None:
     """CI concurrency-smoke: 2 drives, a handful of requests through the
     worker runtime — token identity, conservation, and a clean join; no
     wall-clock gates."""
     cfg, params, ref = make_setup()
     prompts = build_requests(cfg, n_requests=6, seed=0)
     oracle = oracle_tokens(ref, prompts, max_new=4)
+    hub = None
+    if trace_out:
+        from repro.core.telemetry import TelemetryHub
+        hub = TelemetryHub()
     m = measure(cfg, params, ref, prompts, n_drives=2, max_new=4,
-                min_tick_s=0.008, concurrent=True, oracle=oracle)
+                min_tick_s=0.008, concurrent=True, oracle=oracle,
+                telemetry=hub)
+    if hub is not None:
+        hub.write_chrome_trace(trace_out)
+        emit(f"wrote {trace_out}")
     emit(f"concurrency-smoke: ok ({m['ok']} ok in {m['ticks']} ticks, "
          f"cluster_s {m['cluster_s']:.3f}s, workers joined)")
 
 
 def run_check(path: str, emit=print) -> None:
-    """bench-guard hook: the committed payload must be NaN-free (a NaN
-    means a degenerate run was committed as the reference)."""
-    with open(path) as f:
-        payload = json.load(f)
-    bad = scan_nan(payload)
-    if bad:
-        raise RuntimeError(f"{path} carries NaN metrics: {bad}")
-    emit(f"{path}: NaN-free ({len(payload.get('runs', {}))} runs)")
+    """bench-guard hook: the committed payload must be NaN-free."""
+    check_payload(path, emit=emit)
 
 
 def main(argv=None):
@@ -301,17 +303,21 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--min-tick-ms", type=float, default=12.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace of the last concurrent run "
+                         "(written even when a gate fails)")
     args = ap.parse_args(argv)
     if args.check:
         run_check(args.json_path)
         return
     if args.smoke:
-        run_smoke()
+        run_smoke(trace_out=args.trace_out)
         return
     run_bench(n_drives=args.drives, n_requests=args.requests,
               max_new=args.max_new, min_tick_ms=args.min_tick_ms,
               seed=args.seed,
-              json_path=args.json_path if args.json else None)
+              json_path=args.json_path if args.json else None,
+              trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

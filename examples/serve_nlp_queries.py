@@ -201,6 +201,46 @@ def main():
         for line in st.summary().splitlines():
             print(f"[faults] {line}")
 
+        # 9. observability: re-run the chaos scenario with the telemetry
+        #    hub attached and read the story back out of the trace —
+        #    request spans (submit -> route -> admit -> decode -> retry ->
+        #    finish), the crash's detection latency per health authority,
+        #    and a Chrome-trace timeline loadable in Perfetto
+        #    (chrome://tracing).  Tracing is opt-in and changes no token;
+        #    each track rides its own clock (per-drive virtual clocks vs
+        #    the cluster wall — compare within a track, not across).
+        from repro.core.telemetry import TelemetryHub
+
+        hub = TelemetryHub()
+        traced = ClusterEngine(cfg, params, n_drives=2,
+                               routing="round_robin", max_len=64,
+                               num_slots=2,
+                               faults=FaultSchedule.from_spec([
+                                   {"drive_id": 1, "kind": "crash",
+                                    "at_tick": 1}]),
+                               detector=FailureDetector(
+                                   2, suspect_ticks=2, dead_ticks=4,
+                                   suspect_after_s=math.inf),
+                               max_retries=3, telemetry=hub,
+                               jit_donor=clu.drives[0].engine)
+        for p in prompts[:6]:
+            traced.submit(p, max_new=6)
+        traced.run_until_complete()
+        m = hub.metrics()
+        spans = {k: v for k, v in m["counters"].items()
+                 if k.startswith("spans.")}
+        print(f"[telemetry] {len(hub.events())} events, span outcomes "
+              f"{spans}, open spans {m['open_spans']}")
+        for key, lat in m["detection_latency"].items():
+            print(f"[telemetry] detection {key}: kind={lat['kind']} "
+                  f"suspect after {lat.get('suspect_s', math.nan):.3f}s, "
+                  f"dead after {lat.get('dead_s', math.nan):.3f}s")
+        trace_path = pathlib.Path("serve_trace.json")
+        hub.write_chrome_trace(str(trace_path))
+        print(f"[telemetry] wrote {trace_path} — load it in Perfetto/"
+              f"chrome://tracing, or: "
+              f"python scripts/trace_report.py {trace_path}")
+
 
 if __name__ == "__main__":
     main()

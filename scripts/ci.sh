@@ -8,14 +8,14 @@
 #                               crash, NaN throughput, paged/strip mismatch or
 #                               paged decode regressing >1.5x behind strip, and
 #                               writes BENCH_fig5.json
-#   scripts/ci.sh bench-guard   re-runs the committed BENCH_fig5.json workload
-#                               and fails if tokens/s drops below 0.8x the
-#                               committed numbers (ratcheted from the old 0.5x
-#                               now that prewarm keeps compile out of decode_s);
-#                               also scans the committed BENCH_fig7_slo.json
-#                               and BENCH_fig8_faults.json for NaN metrics (a
-#                               degenerate run must never be the committed
-#                               reference)
+#   scripts/ci.sh bench-guard   scans EVERY committed BENCH_*.json for NaN
+#                               metrics in one pass (benchmarks/_gate.py —
+#                               a degenerate run must never be the committed
+#                               reference; new payloads are covered the day
+#                               they land), then re-runs the committed
+#                               BENCH_fig5.json workload and fails if
+#                               tokens/s drops below 0.8x the committed
+#                               numbers
 #   scripts/ci.sh slo-smoke     tiny bursty open-loop trace through the EDF
 #                               serve engine; fails on crash, lost requests,
 #                               or non-finite tail-latency stats
@@ -39,6 +39,12 @@
 #                               token divergence, broken conservation,
 #                               leaked KV pages, or worker threads that
 #                               fail to join
+#   scripts/ci.sh obs-smoke     observability tier: the telemetry unit tests,
+#                               then a small concurrent 2-replica serve run
+#                               with --trace-out/--metrics-out whose Chrome
+#                               trace must load through
+#                               scripts/trace_report.py (the same structural
+#                               checks a Perfetto import would trip over)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
@@ -51,9 +57,7 @@ case "${1:-tier1}" in
   nonslow)       exec python -m pytest -x -q -m "not slow" ;;
   perf-smoke)    exec python -m benchmarks.fig5_throughput --engine --json \
                       --requests 4 --max-new 4 --num-slots 2 --k-block 8 ;;
-  bench-guard)   python -m benchmarks.fig7_slo --check
-                 python -m benchmarks.fig8_faults --check
-                 python -m benchmarks.fig9_concurrency --check
+  bench-guard)   python -c "from benchmarks._gate import check_tree; check_tree()"
                  exec python -m benchmarks.fig5_throughput --engine \
                       --guard BENCH_fig5.json --guard-floor 0.8 ;;
   cluster-smoke) exec python -m benchmarks.fig6_cluster --smoke ;;
@@ -64,5 +68,16 @@ case "${1:-tier1}" in
                  STRESS_ITERS=6 python -m pytest -x -q \
                       tests/test_concurrent_stress.py
                  exec python -m benchmarks.fig9_concurrency --smoke ;;
+  obs-smoke)     python -m pytest -x -q tests/test_telemetry.py
+                 obs_dir="$(mktemp -d)"
+                 trap 'rm -rf "$obs_dir"' EXIT
+                 python -m repro.launch.serve --arch yi-9b --smoke \
+                      --requests 6 --max-new 4 --max-len 64 --num-slots 2 \
+                      --k-block 1 --replicas 2 --concurrent --prewarm \
+                      --min-tick-ms 8 \
+                      --trace-out "$obs_dir/trace.json" \
+                      --metrics-out "$obs_dir/metrics.json"
+                 test -s "$obs_dir/metrics.json"
+                 python scripts/trace_report.py "$obs_dir/trace.json" ;;
   tier1|*)       exec python -m pytest -x -q ;;
 esac

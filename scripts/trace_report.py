@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Summarize a Chrome-trace/Perfetto JSON written by the telemetry hub.
+
+Validates the trace structure (the same checks a Perfetto load would
+trip over: a ``traceEvents`` list, numeric ``ts``/``dur``, known phase
+codes, per-track metadata), then prints:
+
+  * the tracks (pid/name pairs) and their event counts;
+  * a per-phase time breakdown over the "X" (complete) events —
+    count, total, mean duration per phase name, grouped by track;
+  * the top-K slowest request spans (track "requests"), with rid,
+    status, duration and the attributes the span carried.
+
+Usage:  python scripts/trace_report.py TRACE.json [--top K]
+
+Exit status is non-zero on a malformed trace, so CI can gate on it
+(``scripts/ci.sh obs-smoke`` does).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+KNOWN_PHASES = {"X", "i", "C", "M", "B", "E"}
+
+
+def load_trace(path: str) -> list:
+    """Load and structurally validate a trace file; raises ValueError on
+    anything Perfetto would refuse."""
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, dict):
+        events = doc.get("traceEvents")
+    elif isinstance(doc, list):           # bare-array form is also legal
+        events = doc
+    else:
+        raise ValueError(f"{path}: not a Chrome trace (dict or list "
+                         f"expected, got {type(doc).__name__})")
+    if not isinstance(events, list):
+        raise ValueError(f"{path}: traceEvents must be a list")
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            raise ValueError(f"{path}: event {i} is not an object")
+        ph = e.get("ph")
+        if ph not in KNOWN_PHASES:
+            raise ValueError(f"{path}: event {i} has unknown phase "
+                             f"{ph!r}")
+        if ph != "M":
+            ts = e.get("ts")
+            if not isinstance(ts, (int, float)) or ts != ts:
+                raise ValueError(f"{path}: event {i} has bad ts {ts!r}")
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur != dur or dur < 0:
+                raise ValueError(f"{path}: event {i} has bad dur {dur!r}")
+    return events
+
+
+def track_names(events: list) -> dict:
+    """pid -> track name from the thread_name/process_name metadata."""
+    names = {}
+    for e in events:
+        if e.get("ph") == "M" and e.get("name") in ("thread_name",
+                                                    "process_name"):
+            names.setdefault(e["pid"], e.get("args", {}).get("name",
+                                                             str(e["pid"])))
+    return names
+
+
+def phase_breakdown(events: list) -> dict:
+    """(track, phase name) -> [count, total_us] over the "X" events."""
+    agg: dict = defaultdict(lambda: [0, 0.0])
+    for e in events:
+        if e.get("ph") == "X":
+            key = (e["pid"], e["name"])
+            agg[key][0] += 1
+            agg[key][1] += float(e.get("dur", 0.0))
+    return agg
+
+
+def slowest_requests(events: list, names: dict, top: int) -> list:
+    """The top-K longest request spans (the "requests" track's complete
+    events), slowest first."""
+    req_pids = {pid for pid, n in names.items() if n == "requests"}
+    spans = [e for e in events
+             if e.get("ph") == "X" and e["pid"] in req_pids]
+    spans.sort(key=lambda e: -float(e.get("dur", 0.0)))
+    return spans[:top]
+
+
+def report(path: str, top: int = 5, out=sys.stdout) -> None:
+    events = load_trace(path)
+    names = track_names(events)
+    print(f"trace: {path} — {len(events)} events, "
+          f"{len(names)} tracks", file=out)
+    counts: dict = defaultdict(int)
+    for e in events:
+        if e.get("ph") != "M":
+            counts[e["pid"]] += 1
+    for pid in sorted(names):
+        print(f"  track [{names[pid]}]: {counts.get(pid, 0)} events",
+              file=out)
+    agg = phase_breakdown(events)
+    if agg:
+        print("per-phase breakdown (X events):", file=out)
+        for (pid, name), (n, tot) in sorted(
+                agg.items(), key=lambda kv: -kv[1][1]):
+            print(f"  {names.get(pid, pid)}/{name}: {n}x, "
+                  f"total {tot / 1e3:.2f} ms, "
+                  f"mean {tot / n / 1e3:.3f} ms", file=out)
+    slow = slowest_requests(events, names, top)
+    if slow:
+        print(f"top {len(slow)} slowest requests:", file=out)
+        for e in slow:
+            a = e.get("args", {})
+            print(f"  {e['name']}: {float(e['dur']) / 1e3:.2f} ms "
+                  f"(rid={a.get('rid')}, status={a.get('status')}, "
+                  f"tokens={a.get('tokens')})", file=out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="summarize a telemetry Chrome-trace JSON")
+    ap.add_argument("trace", help="trace file (launch/serve.py --trace-out)")
+    ap.add_argument("--top", type=int, default=5,
+                    help="slowest request spans to list")
+    args = ap.parse_args(argv)
+    try:
+        report(args.trace, top=args.top)
+    except (ValueError, OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -482,51 +482,103 @@ class ClusterStats:
 
     # -- reporting -----------------------------------------------------------
 
+    def metrics(self) -> dict:
+        """Flat metric dict — the single source ``summary()`` renders from
+        and the telemetry/metrics export publishes, so the printed and
+        the exported cluster numbers can never disagree."""
+        m = {
+            "n_drives": len(self.drives),
+            "completed": self.completed,
+            "tokens": self.tokens,
+            "cluster_s": self.cluster_s,
+            "serial_s": self.serial_s,
+            "tokens_per_s": self.tokens_per_s,
+            "throughput_qps": self.throughput_qps,
+            "ticks": self.ticks,
+            "mean_active": self.mean_active,
+            "energy_j": self.energy_j,
+            "energy_per_query_mj": self.energy_per_query_mj,
+            "mean_power_w": self.mean_power_w,
+            "energy_reduction_vs_host": self.energy_reduction_vs_host,
+            "link_bytes": self.link_bytes,
+            "host_link_bytes": self.host_link_bytes,
+            "link_reduction": self.link_reduction,
+            "kv_bytes": self.ledger.kv_bytes,
+            "kv_dense_bytes": self.baseline.kv_bytes,
+            "kv_reduction": self.kv_reduction,
+            "spill_bytes": self.spill_bytes,
+            "remote_requests": self.remote_requests,
+            "migrated_shards": self.migrated_shards,
+            "shard_migration_bytes": self.shard_migration_bytes,
+            "shed_requests": self.shed_requests,
+            "shed_wasted_s": self.shed_wasted_s,
+            "shed_energy_mj": self.shed_energy_mj,
+            "faults_injected": self.faults_injected,
+            "auto_failed_drives": self.auto_failed_drives,
+            "retries": self.retries,
+            "failed_requests": self.failed_requests,
+            "hedges": self.hedges,
+            "hedges_won": self.hedges_won,
+            "hedges_lost": self.hedges_lost,
+            "hedge_wasted_s": self.hedge_wasted_s,
+            "hedge_energy_mj": self.hedge_energy_mj,
+        }
+        for i, d in enumerate(self.drives):
+            m[f"drive.{i}.requests"] = d.requests
+            m[f"drive.{i}.tokens"] = d.tokens
+            m[f"drive.{i}.busy_s"] = d.prefill_s + d.decode_s
+            m[f"drive.{i}.link_reduction"] = d.link_reduction
+            m[f"drive.{i}.kv_reduction"] = d.kv_reduction
+        return m
+
     def summary(self) -> str:
+        m = self.metrics()
         lines = [
-            f"cluster: {len(self.drives)} drives, {self.completed} requests, "
-            f"{self.tokens} tokens in {self.cluster_s:.2f}s parallel "
-            f"({self.tokens_per_s:.1f} tok/s; serial {self.serial_s:.2f}s)",
-            f"energy: {self.energy_per_query_mj:.1f} mJ/query at "
-            f"{self.mean_active:.2f} mean active drives "
-            f"({self.energy_reduction_vs_host:.0%} vs host-serial)",
-            f"link bytes: {self.link_bytes / 1e6:.2f} MB vs host-only "
-            f"{self.host_link_bytes / 1e6:.2f} MB "
-            f"({self.link_reduction:.0%} never crossed the link; "
-            f"{self.spill_bytes / 1e6:.3f} MB shard spill, "
-            f"{self.remote_requests} remote requests, "
-            f"{self.migrated_shards} shards migrated "
-            f"[{self.shard_migration_bytes / 1e6:.3f} MB])",
+            f"cluster: {m['n_drives']} drives, {m['completed']} requests, "
+            f"{m['tokens']} tokens in {m['cluster_s']:.2f}s parallel "
+            f"({m['tokens_per_s']:.1f} tok/s; serial "
+            f"{m['serial_s']:.2f}s)",
+            f"energy: {m['energy_per_query_mj']:.1f} mJ/query at "
+            f"{m['mean_active']:.2f} mean active drives "
+            f"({m['energy_reduction_vs_host']:.0%} vs host-serial)",
+            f"link bytes: {m['link_bytes'] / 1e6:.2f} MB vs host-only "
+            f"{m['host_link_bytes'] / 1e6:.2f} MB "
+            f"({m['link_reduction']:.0%} never crossed the link; "
+            f"{m['spill_bytes'] / 1e6:.3f} MB shard spill, "
+            f"{m['remote_requests']} remote requests, "
+            f"{m['migrated_shards']} shards migrated "
+            f"[{m['shard_migration_bytes'] / 1e6:.3f} MB])",
         ]
-        if self.baseline.kv_bytes > 0:
-            lines.append(f"KV bytes touched: {self.ledger.kv_bytes / 1e6:.2f}"
-                         f" MB vs dense {self.baseline.kv_bytes / 1e6:.2f} MB"
-                         f" ({self.kv_reduction:.0%} fewer KV reads)")
+        if m["kv_dense_bytes"] > 0:
+            lines.append(f"KV bytes touched: {m['kv_bytes'] / 1e6:.2f}"
+                         f" MB vs dense {m['kv_dense_bytes'] / 1e6:.2f} MB"
+                         f" ({m['kv_reduction']:.0%} fewer KV reads)")
         if self.latency.records:
             lines.append(self.latency.summary())
-        if self.shed_requests:
-            lines.append(f"shed: {self.shed_requests} requests "
-                         f"({self.shed_wasted_s:.3f}s wasted, "
-                         f"{self.shed_energy_mj:.1f} mJ)")
-        if self.faults_injected or self.auto_failed_drives or self.health:
+        if m["shed_requests"]:
+            lines.append(f"shed: {m['shed_requests']} requests "
+                         f"({m['shed_wasted_s']:.3f}s wasted, "
+                         f"{m['shed_energy_mj']:.1f} mJ)")
+        if m["faults_injected"] or m["auto_failed_drives"] or self.health:
             state = ", ".join(self.health) if self.health else "untracked"
-            lines.append(f"faults: {self.faults_injected} injected; "
+            lines.append(f"faults: {m['faults_injected']} injected; "
                          f"health [{state}]; "
-                         f"{self.auto_failed_drives} drives auto-failed "
+                         f"{m['auto_failed_drives']} drives auto-failed "
                          f"by the detector")
-        if self.retries or self.failed_requests:
-            lines.append(f"recovery: {self.retries} retries granted, "
-                         f"{self.failed_requests} requests failed "
+        if m["retries"] or m["failed_requests"]:
+            lines.append(f"recovery: {m['retries']} retries granted, "
+                         f"{m['failed_requests']} requests failed "
                          f"permanently")
-        if self.hedges:
-            lines.append(f"hedges: {self.hedges} launched, "
-                         f"{self.hedges_won} won / {self.hedges_lost} lost "
-                         f"({self.hedge_wasted_s:.3f}s wasted, "
-                         f"{self.hedge_energy_mj:.1f} mJ)")
-        for i, d in enumerate(self.drives):
+        if m["hedges"]:
+            lines.append(f"hedges: {m['hedges']} launched, "
+                         f"{m['hedges_won']} won / {m['hedges_lost']} lost "
+                         f"({m['hedge_wasted_s']:.3f}s wasted, "
+                         f"{m['hedge_energy_mj']:.1f} mJ)")
+        for i in range(len(self.drives)):
             lines.append(
-                f"drive[{i}]: {d.requests} reqs, {d.tokens} tok, "
-                f"busy {d.prefill_s + d.decode_s:.2f}s, "
-                f"link cut {d.link_reduction:.0%}, "
-                f"KV cut {d.kv_reduction:.0%}")
+                f"drive[{i}]: {m[f'drive.{i}.requests']} reqs, "
+                f"{m[f'drive.{i}.tokens']} tok, "
+                f"busy {m[f'drive.{i}.busy_s']:.2f}s, "
+                f"link cut {m[f'drive.{i}.link_reduction']:.0%}, "
+                f"KV cut {m[f'drive.{i}.kv_reduction']:.0%}")
         return "\n".join(lines)

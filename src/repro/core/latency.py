@@ -210,15 +210,39 @@ class LatencyStats:
 
     # -- reporting -----------------------------------------------------------
 
+    def metrics(self, wall_s: Optional[float] = None) -> dict:
+        """Flat metric dict — the single source ``summary()`` (and the
+        telemetry/metrics export) renders from, so printed and exported
+        numbers cannot drift.  ``wall_s`` adds goodput on that clock."""
+        m = {
+            "count": self.count,
+            "shed": self.shed,
+            "failed": self.failed,
+            "tracked": self.count + self.shed + self.failed,
+            "p50_ttft_s": self.p50_ttft_s,
+            "p95_ttft_s": self.p95_ttft_s,
+            "p99_ttft_s": self.p99_ttft_s,
+            "p99_e2e_s": self.p99_e2e_s,
+            "mean_tpot_s": self.mean_tpot_s,
+            "mean_queue_wait_s": self.mean_queue_wait_s,
+            "slo_met": self.slo_met,
+            "slo_attainment": self.slo_attainment,
+        }
+        if wall_s is not None:
+            m["wall_s"] = wall_s
+            m["goodput_qps"] = self.goodput_qps(wall_s)
+        return m
+
     def summary(self) -> str:
-        if self.count + self.shed + self.failed == 0:
+        m = self.metrics()
+        if m["tracked"] == 0:
             return "latency: no completed requests"
-        failed = f" / {self.failed} failed" if self.failed else ""
-        return (f"latency: {self.count} ok / {self.shed} shed{failed}; TTFT "
-                f"p50 {self.p50_ttft_s * 1e3:.1f} / p95 "
-                f"{self.p95_ttft_s * 1e3:.1f} / p99 "
-                f"{self.p99_ttft_s * 1e3:.1f} ms; e2e p99 "
-                f"{self.p99_e2e_s * 1e3:.1f} ms; TPOT "
-                f"{self.mean_tpot_s * 1e3:.2f} ms; queue wait "
-                f"{self.mean_queue_wait_s * 1e3:.1f} ms; SLO met "
-                f"{self.slo_met}/{self.count + self.shed + self.failed}")
+        failed = f" / {m['failed']} failed" if m["failed"] else ""
+        return (f"latency: {m['count']} ok / {m['shed']} shed{failed}; TTFT "
+                f"p50 {m['p50_ttft_s'] * 1e3:.1f} / p95 "
+                f"{m['p95_ttft_s'] * 1e3:.1f} / p99 "
+                f"{m['p99_ttft_s'] * 1e3:.1f} ms; e2e p99 "
+                f"{m['p99_e2e_s'] * 1e3:.1f} ms; TPOT "
+                f"{m['mean_tpot_s'] * 1e3:.2f} ms; queue wait "
+                f"{m['mean_queue_wait_s'] * 1e3:.1f} ms; SLO met "
+                f"{m['slo_met']}/{m['tracked']}")

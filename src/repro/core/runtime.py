@@ -48,6 +48,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from ..core.faults import DEAD, HEALTHY, SUSPECT, FaultSchedule
+from ..core.telemetry import NULL_HUB as _NULL
 
 
 @dataclass(frozen=True)
@@ -99,7 +100,8 @@ class DriveWorker(threading.Thread):
                  epoch_of: Callable[[], int],
                  faults: Optional[FaultSchedule] = None,
                  speed: float = 1.0, min_tick_s: float = 0.0,
-                 jitter_s: float = 0.0, seed: int = 0):
+                 jitter_s: float = 0.0, seed: int = 0,
+                 telemetry=None):
         super().__init__(name=f"drive-worker-{drive_id}", daemon=True)
         self.drive_id = drive_id
         self.step_fn = step_fn
@@ -108,6 +110,12 @@ class DriveWorker(threading.Thread):
         self.stop_event = stop_event
         self.epoch_of = epoch_of
         self.faults = faults
+        # optional telemetry hub: heartbeats become instant events on the
+        # f"worker{d}" track, stamped at the COMMAND's cluster clock (the
+        # worker has no clock of its own; per-track monotonicity follows
+        # from command clocks being monotone per drive)
+        self.tele = telemetry if telemetry is not None else _NULL
+        self._track = f"worker{drive_id}"
         self.speed = float(speed)
         self.min_tick_s = float(min_tick_s)
         self.jitter_s = float(jitter_s)
@@ -126,6 +134,13 @@ class DriveWorker(threading.Thread):
             t0 = time.perf_counter()
             if self.faults is not None:
                 if self.faults.crash_active(self.drive_id, cmd.tick, cmd.clock):
+                    if self.tele.enabled:
+                        # a trace annotation only — the watchdog never
+                        # reads the hub, so ground truth stays hidden
+                        # from detection
+                        self.tele.point(self._track, "worker_exit",
+                                        cmd.clock, tick=cmd.tick,
+                                        reason="crash")
                     return              # a crashed worker dies: pure silence
                 hung = False
                 for idx, dur in self.faults.hangs(self.drive_id, cmd.tick,
@@ -141,19 +156,16 @@ class DriveWorker(threading.Thread):
                 if hung:
                     # woke up: announce liveness so the coordinator clears
                     # the outstanding command and dispatches again
-                    self.monitor.put(Heartbeat(self.drive_id, "alive",
-                                               cmd.tick, cmd.epoch))
+                    self._beat("alive", cmd, reason="hang_wakeup")
                     continue
                 if self.faults.stalled(self.drive_id, cmd.tick, cmd.clock):
-                    self.monitor.put(Heartbeat(self.drive_id, "alive",
-                                               cmd.tick, cmd.epoch))
+                    self._beat("alive", cmd, reason="stalled")
                     continue
             if cmd.epoch != self.epoch_of():
                 continue                # failed while the command flew
             payload = self.step_fn(cmd.tick, cmd.clock)
             if payload is None:
-                self.monitor.put(Heartbeat(self.drive_id, "alive",
-                                           cmd.tick, cmd.epoch))
+                self._beat("alive", cmd, reason="idle")
                 continue
             raw = float(payload.get("raw_s", 0.0))
             compile_s = float(getattr(payload.get("obs"), "compile_s", 0.0))
@@ -170,9 +182,20 @@ class DriveWorker(threading.Thread):
             if pad > 0.0:
                 self.stop_event.wait(pad)   # GIL released: real overlap
             busy = time.perf_counter() - t0
+            if self.tele.enabled:
+                self.tele.point(self._track, "heartbeat", cmd.clock,
+                                kind="tick_done", tick=cmd.tick,
+                                epoch=cmd.epoch, busy_s=busy)
             self.monitor.put(Heartbeat(self.drive_id, "tick_done", cmd.tick,
                                        cmd.epoch, busy_s=busy,
                                        payload=payload))
+
+    def _beat(self, kind: str, cmd: WorkerCommand, reason: str) -> None:
+        """Liveness-only heartbeat + its telemetry point."""
+        if self.tele.enabled:
+            self.tele.point(self._track, "heartbeat", cmd.clock, kind=kind,
+                            tick=cmd.tick, epoch=cmd.epoch, reason=reason)
+        self.monitor.put(Heartbeat(self.drive_id, kind, cmd.tick, cmd.epoch))
 
 
 class HeartbeatWatchdog:

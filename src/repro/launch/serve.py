@@ -186,6 +186,19 @@ def main() -> int:
                          "models still show real tick overlap under "
                          "--concurrent (applied in serial mode too, "
                          "keeping the two comparable)")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write a Chrome-trace/Perfetto JSON timeline of "
+                         "the run (one track per drive worker + the "
+                         "coordinator + queue-depth counters); enables "
+                         "the telemetry hub")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the telemetry metrics registry (counters/"
+                         "gauges/histograms + detection latency + the "
+                         "stats snapshots the summary prints from) as "
+                         "JSON; enables the telemetry hub")
+    ap.add_argument("--events-out", type=str, default=None,
+                    help="write the raw telemetry event ring as jsonl; "
+                         "enables the telemetry hub")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.smoke else get_config(args.arch)
@@ -203,6 +216,11 @@ def main() -> int:
     def admission():
         return AdmissionController(args.num_slots, host_rate=args.host_rate,
                                    csd_rate=args.csd_rate, n_csds=args.csds)
+
+    hub = None
+    if args.trace_out or args.metrics_out or args.events_out:
+        from repro.core.telemetry import TelemetryHub
+        hub = TelemetryHub()
 
     faults = None
     if args.fault_trace:
@@ -231,10 +249,30 @@ def main() -> int:
                                concurrent=args.concurrent,
                                dispatch_timeout_s=args.dispatch_timeout,
                                min_tick_s=args.min_tick_ms / 1e3,
+                               telemetry=hub,
                                **engine_kw)
     else:
-        engine = ServeEngine(cfg, params, admission=admission(), **engine_kw)
+        engine = ServeEngine(cfg, params, admission=admission(),
+                             telemetry=hub, **engine_kw)
     is_cluster = isinstance(engine, ClusterEngine)
+
+    def export_telemetry(wall_s=None) -> None:
+        """Dump the hub after the run: Perfetto trace, metrics JSON (with
+        the same stats snapshots the summary printed from), raw events."""
+        if hub is None:
+            return
+        stats_m = engine.stats.metrics()
+        hub.publish("cluster" if is_cluster else "engine", stats_m)
+        hub.publish("latency", engine.stats.latency.metrics(wall_s=wall_s))
+        if args.trace_out:
+            hub.write_chrome_trace(args.trace_out)
+            print(f"[serve] trace written to {args.trace_out}")
+        if args.metrics_out:
+            hub.write_metrics(args.metrics_out)
+            print(f"[serve] metrics written to {args.metrics_out}")
+        if args.events_out:
+            hub.write_jsonl(args.events_out)
+            print(f"[serve] events written to {args.events_out}")
 
     if args.arrival:
         classes = DEFAULT_CLASSES
@@ -250,19 +288,23 @@ def main() -> int:
         report = replay_open_loop(engine, generate_trace(wl))
         dt = time.perf_counter() - t0
         lat = engine.stats.latency
+        # one source of truth: the goodput/attainment the export carries
+        # are the SAME dict entries printed here (no inline recompute)
+        lm = lat.metrics(wall_s=report.wall_s)
         n_tok = sum(len(r.tokens) for r in report.results)
         print(f"[serve] {args.arch}: open-loop {args.arrival}@{args.rate}/s "
               f"({args.sched}): {report.submitted} requests, {n_tok} tokens "
               f"in {dt:.2f}s wall / {report.wall_s:.2f}s serving clock")
         print(f"[serve] {lat.summary()}")
         print(f"[serve] goodput under SLO: "
-              f"{lat.goodput_qps(report.wall_s):.2f} qps "
-              f"(attainment {lat.slo_attainment:.0%}, "
+              f"{lm['goodput_qps']:.2f} qps "
+              f"(attainment {lm['slo_attainment']:.0%}, "
               f"{report.shed} shed)")
         summary = engine.summary() if is_cluster \
             else engine.stats.summary()
         for line in summary.splitlines():
             print(f"[serve] {line}")
+        export_telemetry(wall_s=report.wall_s)
         if is_cluster:
             engine.close()      # joins worker threads (no-op if serial)
         return 0
@@ -296,7 +338,9 @@ def main() -> int:
     results = engine.run_until_complete()
     dt = time.perf_counter() - t0
 
-    n_tok = sum(len(r.tokens) for r in results)
+    # token count from the stats registry (the same number the metrics
+    # export carries), not recomputed from the result list
+    n_tok = engine.stats.metrics()["tokens"]
     print(f"[serve] {args.arch}: {len(results)} requests, {n_tok} tokens in "
           f"{dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s); "
           f"first: {results[0].tokens[:8]}")
@@ -304,6 +348,7 @@ def main() -> int:
         else engine.stats.summary()
     for line in summary.splitlines():
         print(f"[serve] {line}")
+    export_telemetry(wall_s=dt)
     kvs = engine.kv_stats()                 # cluster: one entry per drive
     for kv in kvs if isinstance(kvs, list) else [kvs]:
         print(f"[serve] KV[{kv['layout']}]: peak "

@@ -84,6 +84,7 @@ from repro.core.latency import LatencyRecord
 from repro.core.runtime import (DriveWorker, Heartbeat, HeartbeatWatchdog,
                                 WorkerCommand)
 from repro.core.scheduler import ClusterAdmission
+from repro.core.telemetry import NULL_HUB
 from repro.train.serve_loop import GenResult, ServeEngine, collect_results
 
 
@@ -178,6 +179,7 @@ class ClusterEngine:
                  tick_jitter_s: float = 0.0,
                  jitter_seed: int = 0,
                  watchdog: Optional[HeartbeatWatchdog] = None,
+                 telemetry=None,
                  **engine_kw):
         if n_drives < 1:
             raise ValueError("need at least one drive")
@@ -197,6 +199,13 @@ class ClusterEngine:
         if any(not (s > 0.0) or not math.isfinite(s) for s in speed_factor):
             raise ValueError(f"speed_factor entries must be finite and "
                              f"positive, got {speed_factor}")
+        # telemetry: the coordinator owns request spans and the
+        # "coordinator" track (cluster wall clock); each drive engine gets
+        # the same hub pointed at its own f"drive{d}" track (per-drive
+        # virtual clock) with request spans OFF — drive-local rids are not
+        # cluster-global rids, and mixing clock domains inside one span
+        # would make durations meaningless
+        self.tele = telemetry if telemetry is not None else NULL_HUB
         self.drives: List[_Drive] = []
         # an AdmissionController is mutable pull state — replicas must not
         # share one; pass admission_factory to configure per-drive admission
@@ -218,6 +227,9 @@ class ClusterEngine:
             if admission_factory is not None:
                 kw["admission"] = admission_factory()
             eng = ServeEngine(cfg, params, jit_donor=donor, **kw)
+            eng.tele = self.tele
+            eng.tele_track = f"drive{d}"
+            eng.tele_requests = False
             self.drives.append(_Drive(drive_id=d, engine=eng,
                                       speed=speed_factor[d]))
         # the cluster-wide pull scheduler: one controller learns every
@@ -374,6 +386,10 @@ class ClusterEngine:
             self.records[rid] = LatencyRecord(rid=rid, priority=priority,
                                               deadline_s=deadline_s,
                                               submit_t=self.clock)
+            if self.tele.enabled:
+                self.tele.open_request(rid, self.clock, priority=priority,
+                                       prompt_len=len(prompt),
+                                       max_new=max_new, shard=shard_id)
             return rid
 
     def advance_clock(self, to_t: float) -> None:
@@ -452,6 +468,11 @@ class ClusterEngine:
             failed_out: List[ClusterRequest] = []
             with d.lock:
                 d.epoch += 1
+                if self.tele.enabled:
+                    self.tele.point("coordinator", "drive_failed",
+                                    self.clock, drive=drive_id,
+                                    epoch=d.epoch)
+                    self.tele.counter("cluster.drive_failures")
                 n = self._requeue_unprefilled(d)
                 self.detector.mark_dead(drive_id)
                 if self.watchdog is not None:
@@ -476,18 +497,30 @@ class ClusterEngine:
                         # it (it keeps running; no restart, no retry)
                         self._hedges.pop(grid)
                         self.stats.hedges_won += 1
+                        if self.tele.enabled:
+                            self.tele.close_span(("hedge", grid),
+                                                 self.clock, "promoted")
                         continue
                     if pair is not None and pair[1] == drive_id:
                         # the hedge copy died with this drive; the
                         # primary is still serving — abandon the hedge
                         self._hedges.pop(grid)
                         self.stats.hedges_lost += 1
+                        if self.tele.enabled:
+                            self.tele.close_span(("hedge", grid),
+                                                 self.clock, "canceled",
+                                                 reason="hedge drive died")
                         continue
                     if req.retries >= self.max_retries:
                         failed_out.append(req)
                         continue
                     req.retries += 1
                     self.stats.retries += 1
+                    if self.tele.enabled:
+                        self.tele.request_point(grid, "retry", self.clock,
+                                                attempt=req.retries,
+                                                from_drive=drive_id)
+                        self.tele.counter("cluster.retries")
                     if self.retry_backoff_s > 0.0:
                         req.not_before_s = self.clock + \
                             self.retry_backoff_s * \
@@ -550,6 +583,9 @@ class ClusterEngine:
             rec.status = "failed"
             self.stats.latency.add(rec)
             res.e2e_s = rec.e2e_s
+        if self.tele.enabled:
+            self.tele.close_request(req.rid, self.clock, "failed",
+                                    retries=req.retries)
         self._failout.append(res)
 
     def _requeue_unprefilled(self, d: _Drive) -> int:
@@ -570,6 +606,11 @@ class ClusterEngine:
                 self._hedges.pop(grid)
                 self.stats.hedges_lost += 1
                 d.engine.records.pop(local.rid, None)
+                if self.tele.enabled:
+                    self.tele.close_span(("hedge", grid), self.clock,
+                                         "canceled",
+                                         reason="hedge still queued on "
+                                                "draining drive")
                 continue
             backed.append(self._inflight[grid])
         for req in reversed(backed):
@@ -654,6 +695,9 @@ class ClusterEngine:
                 rec.status = "shed"
                 self.stats.latency.add(rec)
                 res.e2e_s = rec.e2e_s
+            if self.tele.enabled:
+                self.tele.close_request(req.rid, self.clock, "shed")
+                self.tele.counter("cluster.shed")
             out.append(res)
         self.queue = keep
         return out
@@ -715,6 +759,11 @@ class ClusterEngine:
                     self._spill_bytes_per_el)
                 self.stats.spill_ledger.add("link", req.spilled_bytes,
                                             "remote shard spill")
+            if self.tele.enabled:
+                self.tele.request_point(
+                    req.rid, "route", self.clock, drive=route.drive_id,
+                    policy=self.router.policy, remote=bool(route.remote),
+                    spill_bytes=req.spilled_bytes)
         if deferred:
             # cooling-down retries go back to the FRONT in original order
             # (they are the oldest requests; their backoff, not their
@@ -789,10 +838,14 @@ class ClusterEngine:
             rec = self.records.get(grid)
             if rec is not None and not math.isfinite(rec.admit_t):
                 rec.admit_t = self.clock
+                if self.tele.enabled:
+                    self.tele.request_point(grid, "admit", self.clock)
         for grid in first_tok_events:
             rec = self.records.get(grid)
             if rec is not None and not math.isfinite(rec.first_token_t):
                 rec.first_token_t = self.clock
+                if self.tele.enabled:
+                    self.tele.request_point(grid, "first_token", self.clock)
         for r in out:
             rec = self.records.pop(r.rid, None)
             if rec is None:
@@ -801,6 +854,10 @@ class ClusterEngine:
             rec.n_tokens = len(r.tokens)
             rec.status = "ok"
             self.stats.latency.add(rec)
+            if self.tele.enabled:
+                self.tele.close_request(r.rid, self.clock, "ok",
+                                        drive=r.drive,
+                                        tokens=len(r.tokens))
             r.priority = rec.priority
             r.queue_wait_s = rec.queue_wait_s
             r.ttft_s = rec.ttft_s
@@ -846,8 +903,12 @@ class ClusterEngine:
         tick = self._tick
         self._tick += 1
         if self.faults is not None:
-            self.stats.faults_injected += \
-                len(self.faults.begins(tick, self.clock))
+            begun = self.faults.begins(tick, self.clock)
+            self.stats.faults_injected += len(begun)
+            if self.tele.enabled:
+                for ev in begun:
+                    self.tele.fault_injected(ev.drive_id, ev.kind,
+                                             self.clock, tick)
             for did in self.faults.crashes(tick, self.clock):
                 if not self.drives[did].failed:
                     self.drives[did].crashed = True
@@ -906,6 +967,10 @@ class ClusterEngine:
             self.stats.record_tick(n_active, tick_s, sum(dts))
             self.clock += tick_s
             self._idle_grace = 0
+            if self.tele.enabled and tick_s > 0.0:
+                self.tele.phase("coordinator", "tick",
+                                self.clock - tick_s, tick_s,
+                                tick=tick, active=n_active)
         # failure detection on cluster-VISIBLE evidence only: which drives
         # progressed, and how far the leading clock ran since each drive's
         # last productive tick (ground-truth crash flags never leak here)
@@ -918,6 +983,9 @@ class ClusterEngine:
                 d.drive_id, lead_clock,
                 progressed=d.drive_id in progressed,
                 has_work=d.has_work)
+            if old != new and self.tele.enabled:
+                self.tele.health_transition("detector", d.drive_id,
+                                            old, new, self.clock)
             if new == DEAD and old != DEAD:
                 dead_now.append(d.drive_id)
             elif new == SUSPECT and old != SUSPECT:
@@ -930,6 +998,8 @@ class ClusterEngine:
         if self.hedge:
             self._launch_hedges()
         self.stats.health = list(self.detector.health)
+        if self.tele.enabled:
+            self._publish_tick_metrics(tick)
         if not dts:
             self._idle_advance(tick)
         return self._deliver(shed, out, admit_events, first_tok_events)
@@ -973,7 +1043,8 @@ class ClusterEngine:
                 self._stop, epoch_of=(lambda dd=d: dd.epoch),
                 faults=self.faults, speed=d.speed,
                 min_tick_s=self.min_tick_s, jitter_s=self.tick_jitter_s,
-                seed=self.jitter_seed * 1009 + d.drive_id)
+                seed=self.jitter_seed * 1009 + d.drive_id,
+                telemetry=self.tele)
             self._commands.append(cq)
             self._workers.append(w)
             w.start()
@@ -1044,8 +1115,12 @@ class ClusterEngine:
         self._tick += 1
         with self._lock:
             if self.faults is not None:
-                self.stats.faults_injected += \
-                    len(self.faults.begins(tick, self.clock))
+                begun = self.faults.begins(tick, self.clock)
+                self.stats.faults_injected += len(begun)
+                if self.tele.enabled:
+                    for ev in begun:
+                        self.tele.fault_injected(ev.drive_id, ev.kind,
+                                                 self.clock, tick)
             shed = self._shed_queue()
             self._dispatch()
             sent = 0
@@ -1106,6 +1181,10 @@ class ClusterEngine:
                 self.stats.record_tick(n_active, tick_s, sum(dts))
                 self.clock += tick_s
                 self._idle_grace = 0
+                if self.tele.enabled and tick_s > 0.0:
+                    self.tele.phase("coordinator", "tick",
+                                    self.clock - tick_s, tick_s,
+                                    tick=tick, active=n_active)
             dead_now: List[int] = []
             for d in self.drives:
                 if d.failed:
@@ -1114,6 +1193,9 @@ class ClusterEngine:
                     d.drive_id, replied=d.drive_id in replied,
                     progressed=d.drive_id in progressed,
                     has_work=d.has_work)
+                if old != new and self.tele.enabled:
+                    self.tele.health_transition("watchdog", d.drive_id,
+                                                old, new, self.clock)
                 if new == DEAD and old != DEAD:
                     dead_now.append(d.drive_id)
                 elif new == SUSPECT and old != SUSPECT:
@@ -1126,6 +1208,8 @@ class ClusterEngine:
             if self.hedge:
                 self._launch_hedges()
             self.stats.health = list(self._health)
+            if self.tele.enabled:
+                self._publish_tick_metrics(tick)
             if not progressed and waiting == 0:
                 # nothing stepped and nothing is pending on the channel:
                 # fast-forward stall windows / backoffs / deadlines like
@@ -1133,6 +1217,29 @@ class ClusterEngine:
                 # real join timeouts — not this path — cover it)
                 self._idle_advance(tick)
             return self._deliver(shed, out, admit_events, first_tok_events)
+
+    def _publish_tick_metrics(self, tick: int) -> None:
+        """End-of-tick snapshot into the telemetry registry: cluster wall
+        clock, energy integral, queue depth, per-drive busy time and
+        join-wall-vs-busy utilization.  Only finite values are published
+        (NaN would poison the JSON export and the NaN bench gates)."""
+        t = self.tele
+        t.counter("cluster.ticks")
+        t.gauge("cluster.clock_s", self.clock)
+        t.gauge("cluster.queue_depth", len(self.queue))
+        t.gauge("cluster.in_flight", self.in_flight)
+        if math.isfinite(self.stats.energy_j):
+            t.gauge("cluster.energy_j", self.stats.energy_j)
+        t.counter_sample("coordinator", "queue_depth", self.clock,
+                         len(self.queue))
+        wall = max(self.clock, 1e-9)
+        for d in self.drives:
+            busy = self._clocks[d.drive_id]
+            t.gauge(f"drive.{d.drive_id}.busy_s", busy)
+            # busy time on the drive's virtual clock over the cluster
+            # join wall: >1 means the model claims more busy time than
+            # wall passed (overlapped compile), <1 is idle/straggle
+            t.gauge(f"drive.{d.drive_id}.utilization", busy / wall)
 
     def _settle_hedge(self, grid: int, winner: int, pair: tuple) -> None:
         """First finisher wins: cancel the losing copy, free its slot, and
@@ -1155,13 +1262,28 @@ class ClusterEngine:
             self.stats.hedges_lost += 1
         ld = self.drives[loser]
         if ld.failed:
+            if self.tele.enabled:
+                self.tele.close_span(("hedge", grid), self.clock,
+                                     "ok" if winner == hedger
+                                     else "canceled", hedge_wasted_s=0.0)
             return                    # its copy died with the drive
         local = next((l for l, g in ld.rid_map.items() if g == grid), None)
         if local is None:
+            if self.tele.enabled:
+                self.tele.close_span(("hedge", grid), self.clock,
+                                     "ok" if winner == hedger
+                                     else "canceled", hedge_wasted_s=0.0)
             return
         ld.rid_map.pop(local)
         with ld.lock:                 # exclude the loser's mid-step worker
             wasted = ld.engine.cancel(local)
+        if self.tele.enabled:
+            # the hedge span closes at settlement: "ok" when the hedge
+            # copy won the race, "canceled" when it lost — the loser's
+            # burn is attributed on the span either way
+            self.tele.close_span(("hedge", grid), self.clock,
+                                 "ok" if winner == hedger else "canceled",
+                                 hedge_wasted_s=float(wasted or 0.0))
         if wasted:
             self.stats.hedge_wasted_s += wasted
         elif wasted is None:
@@ -1200,6 +1322,12 @@ class ClusterEngine:
                 t.rid_map[local] = grid
             self._hedges[grid] = (d.drive_id, t.drive_id)
             self.stats.hedges += 1
+            if self.tele.enabled:
+                self.tele.open_span(("hedge", grid), self.clock,
+                                    "requests", f"hedge{grid}", rid=grid,
+                                    primary=d.drive_id,
+                                    hedge_drive=t.drive_id)
+                self.tele.counter("cluster.hedges")
 
     def _idle_advance(self, tick: int) -> None:
         """A tick where nothing stepped: time must still move, or stall

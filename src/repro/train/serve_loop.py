@@ -70,6 +70,7 @@ from repro.core.latency import NAN, LatencyRecord, LatencyStats
 from repro.core.scheduler import (PullScheduler, SchedulerState, make_cluster,
                                   optimal_batch_ratio, rebalance_shares,
                                   split_block_service)
+from repro.core.telemetry import NULL_HUB
 from repro.core.transfer import TransferLedger
 from repro.models import model as M
 
@@ -154,30 +155,59 @@ class ServeStats:
     def steps_per_s(self) -> float:
         return self.decode_steps / max(self.decode_s, 1e-9)
 
+    def metrics(self) -> Dict[str, float]:
+        """Flat metric dict — the single source ``summary()`` renders from
+        and ``launch/serve.py --metrics-out`` exports, so the printed and
+        the exported numbers can never disagree."""
+        m = {
+            "requests": self.requests,
+            "tokens": self.tokens,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "decode_steps": self.decode_steps,
+            "steps_per_s": self.steps_per_s,
+            "compile_s": self.compile_s,
+            "link_bytes": self.link_bytes,
+            "host_link_bytes": self.host_link_bytes,
+            "link_reduction": self.link_reduction,
+            "kv_bytes": self.kv_bytes_touched,
+            "kv_dense_bytes": self.baseline.kv_bytes,
+            "kv_reduction": self.kv_reduction,
+            "shed_requests": self.shed_requests,
+            "shed_wasted_s": self.shed_wasted_s,
+        }
+        for tier in sorted(self.tier_tokens):
+            m[f"tier.{tier}.requests"] = self.tier_requests.get(tier, 0)
+            m[f"tier.{tier}.tokens"] = self.tier_tokens[tier]
+            m[f"tier.{tier}.tok_per_s"] = self.tier_throughput(tier)
+        return m
+
     def summary(self) -> str:
-        lines = [f"requests={self.requests} tokens={self.tokens} "
-                 f"prefill={self.prefill_s:.2f}s decode={self.decode_s:.2f}s "
-                 f"({self.decode_steps} steps, {self.steps_per_s:.1f} "
-                 f"steps/s; compile {self.compile_s:.2f}s separate)"]
+        m = self.metrics()
+        lines = [f"requests={m['requests']} tokens={m['tokens']} "
+                 f"prefill={m['prefill_s']:.2f}s "
+                 f"decode={m['decode_s']:.2f}s "
+                 f"({m['decode_steps']} steps, {m['steps_per_s']:.1f} "
+                 f"steps/s; compile {m['compile_s']:.2f}s separate)"]
         for tier in sorted(self.tier_tokens):
             lines.append(
-                f"tier[{tier}]: {self.tier_requests.get(tier, 0)} reqs, "
-                f"{self.tier_tokens[tier]} tok, "
-                f"{self.tier_throughput(tier):.1f} tok/s")
+                f"tier[{tier}]: {m[f'tier.{tier}.requests']} reqs, "
+                f"{m[f'tier.{tier}.tokens']} tok, "
+                f"{m[f'tier.{tier}.tok_per_s']:.1f} tok/s")
         lines.append(
-            f"link bytes: {self.link_bytes / 1e6:.2f} MB vs host-only "
-            f"{self.host_link_bytes / 1e6:.2f} MB "
-            f"({self.link_reduction:.0%} never crossed the link)")
-        if self.baseline.kv_bytes > 0:
+            f"link bytes: {m['link_bytes'] / 1e6:.2f} MB vs host-only "
+            f"{m['host_link_bytes'] / 1e6:.2f} MB "
+            f"({m['link_reduction']:.0%} never crossed the link)")
+        if m["kv_dense_bytes"] > 0:
             lines.append(
-                f"KV bytes touched: {self.ledger.kv_bytes / 1e6:.2f} MB vs "
-                f"dense {self.baseline.kv_bytes / 1e6:.2f} MB "
-                f"({self.kv_reduction:.0%} fewer KV reads)")
+                f"KV bytes touched: {m['kv_bytes'] / 1e6:.2f} MB vs "
+                f"dense {m['kv_dense_bytes'] / 1e6:.2f} MB "
+                f"({m['kv_reduction']:.0%} fewer KV reads)")
         if self.latency.records:
             lines.append(self.latency.summary())
-        if self.shed_requests:
-            lines.append(f"shed: {self.shed_requests} requests "
-                         f"({self.shed_wasted_s:.3f}s serving time wasted)")
+        if m["shed_requests"]:
+            lines.append(f"shed: {m['shed_requests']} requests "
+                         f"({m['shed_wasted_s']:.3f}s serving time wasted)")
         return "\n".join(lines)
 
 
@@ -326,7 +356,7 @@ class ServeEngine:
                  chunk_prefill: Optional[int] = None, prewarm: bool = False,
                  jit_donor: Optional["ServeEngine"] = None,
                  admission_order: str = "fifo", chunk_budget: int = 1,
-                 shed_expired: bool = True):
+                 shed_expired: bool = True, telemetry=None):
         if kv_layout not in ("paged", "strip"):
             raise ValueError(f"kv_layout must be 'paged' or 'strip', "
                              f"got {kv_layout!r}")
@@ -460,6 +490,13 @@ class ServeEngine:
         # LatencyRecord timestamps live on it
         self.clock = 0.0
         self.records: Dict[int, LatencyRecord] = {}
+        # telemetry: events stamp this engine's virtual clock on
+        # ``tele_track``; the cluster re-points the track per drive and
+        # turns ``tele_requests`` off (drive-local rids would collide with
+        # cluster-global ones — the coordinator owns request spans there)
+        self.tele = telemetry if telemetry is not None else NULL_HUB
+        self.tele_track = "engine"
+        self.tele_requests = True
         # lazy-compile attribution: the first call at a new (site, shape)
         # key is XLA compile, not serving — its wall time goes to
         # stats.compile_s (and the tick observation) instead of
@@ -683,6 +720,9 @@ class ServeEngine:
         self.records[rid] = LatencyRecord(rid=rid, priority=priority,
                                           deadline_s=deadline_s,
                                           submit_t=self.clock)
+        if self.tele.enabled and self.tele_requests:
+            self.tele.open_request(rid, self.clock, priority=priority,
+                                   prompt_len=len(prompt), max_new=max_new)
         return rid
 
     def cancel(self, rid: int) -> Optional[float]:
@@ -696,12 +736,18 @@ class ServeEngine:
             if req.rid == rid:
                 del self.queue[i]
                 self.records.pop(rid, None)
+                if self.tele.enabled and self.tele_requests:
+                    self.tele.close_request(rid, self.clock, "canceled",
+                                            wasted_s=0.0)
                 return 0.0
         for s in self.slots:
             if s.active and s.rid == rid:
                 wasted = s.prefill_s + s.decode_s
                 was_decoding = s.decoding
                 self.records.pop(rid, None)
+                if self.tele.enabled and self.tele_requests:
+                    self.tele.close_request(rid, self.clock, "canceled",
+                                            wasted_s=wasted)
                 self._release_slot(s)
                 if was_decoding and self.k_block > 1:
                     # the fused block keeps liveness on device; a released
@@ -761,6 +807,11 @@ class ServeEngine:
             self.stats.latency.add(rec)
             res.e2e_s = rec.e2e_s
             res.queue_wait_s = rec.queue_wait_s
+        if self.tele.enabled:
+            self.tele.counter("engine.shed")
+            if self.tele_requests:
+                self.tele.close_request(rid, self.clock, "shed",
+                                        wasted_s=wasted_s)
         self._finished.append(res)
 
     # -- bucketing -----------------------------------------------------------
@@ -823,6 +874,14 @@ class ServeEngine:
         if not obs.per_step_items and obs.tokens:
             # prefill-only / K=1 ticks: one aggregate sample
             obs.per_step_items = [obs.tokens]
+        if self.tele.enabled:
+            self.tele.counter(f"{self.tele_track}.ticks")
+            self.tele.counter(f"{self.tele_track}.tokens", obs.tokens)
+            self.tele.gauge(f"{self.tele_track}.clock_s", self.clock)
+            self.tele.counter_sample(self.tele_track, "queue_depth",
+                                     self.clock, len(self.queue))
+            if obs.busy_s > 0:
+                self.tele.observe("tick_busy_s", obs.busy_s)
         return self._finished[n_before:]
 
     def run_until_complete(self) -> List[GenResult]:
@@ -899,6 +958,9 @@ class ServeEngine:
             rec = self.records.get(req.rid)
             if rec is not None:
                 rec.admit_t = self.clock
+            if self.tele.enabled and self.tele_requests:
+                self.tele.request_point(req.rid, "admit", self.clock,
+                                        tier=tier)
             self.stats.requests += 1
             self.stats.tier_requests[tier] = \
                 self.stats.tier_requests.get(tier, 0) + 1
@@ -950,6 +1012,9 @@ class ServeEngine:
         dt += self._serving_time(splice_key, time.perf_counter() - t1)
         self._account_prefill(sum(lengths))
         self.clock += dt               # first tokens are stamped post-prefill
+        if self.tele.enabled:
+            self.tele.phase(self.tele_track, "prefill", self.clock - dt, dt,
+                            batch=b, padded=padded)
         for i, s in enumerate(group):
             s.prefill_s = dt
             s.cur_token = int(nxt[i])
@@ -996,6 +1061,9 @@ class ServeEngine:
         jax.block_until_ready(nxt)
         dt = self._serving_time(("chunk",), time.perf_counter() - t0)
         self.clock += dt
+        if self.tele.enabled:
+            self.tele.phase(self.tele_track, "prefill_chunk",
+                            self.clock - dt, dt, rid=slot.rid, tokens=real)
         for g, cache in new_view.items():
             if isinstance(cache, dict) and "kp" in cache:
                 self.caches[g] = dict(self.caches[g], kp=cache["kp"],
@@ -1048,6 +1116,9 @@ class ServeEngine:
         self.stats.decode_s += dt
         self.stats.decode_steps += 1
         self.clock += dt
+        if self.tele.enabled:
+            self.tele.phase(self.tele_track, "decode", self.clock - dt, dt,
+                            steps=1)
 
         active = [s for s in self.slots if s.decoding]
         self._observe_step(active, dt)
@@ -1120,6 +1191,9 @@ class ServeEngine:
         # per_step sums to dt; pin the block end exactly (fp drift, early
         # break when every slot finished mid-block)
         self.clock = max(self.clock, clock_end)
+        if self.tele.enabled:
+            self.tele.phase(self.tele_track, "decode_block", clock_end - dt,
+                            dt, steps=n_steps)
 
     def _push_token(self, slot: _Slot, tok: int) -> None:
         """Record a generated token and finish/evict the slot if done."""
@@ -1132,6 +1206,8 @@ class ServeEngine:
             if rec is not None and not math.isfinite(rec.first_token_t):
                 rec.first_token_t = self.clock
             self.last_tick.first_token_rids.append(slot.rid)
+            if self.tele.enabled and self.tele_requests:
+                self.tele.request_point(slot.rid, "first_token", self.clock)
         self.stats.tokens += 1
         self.stats.tier_tokens[slot.tier] = \
             self.stats.tier_tokens.get(slot.tier, 0) + 1
@@ -1179,6 +1255,9 @@ class ServeEngine:
             res.ttft_s = rec.ttft_s
             res.tpot_s = rec.tpot_s
             res.e2e_s = rec.e2e_s
+        if self.tele.enabled and self.tele_requests:
+            self.tele.close_request(slot.rid, self.clock, "ok",
+                                    tokens=len(slot.out))
         self._finished.append(res)
         self._release_slot(slot)
 
