@@ -47,10 +47,38 @@ def check_payload(path: str, emit=print) -> None:
     emit(f"{path}: NaN-free ({len(payload.get('runs', {}))} runs)")
 
 
+def check_lint_baseline(path, emit=print) -> None:
+    """bench-guard hook for the committed lint baseline: the payload must
+    be a ``{"version", "rules"}`` object whose rule ids are all known to
+    ``repro.analysis.lint`` and whose suppression counts are non-negative
+    ints — a malformed baseline would silently disable the ratchet."""
+    from repro.analysis.lint import all_rules
+    with open(path) as f:
+        payload = json.load(f)
+    problems = []
+    if not isinstance(payload, dict) or not isinstance(
+            payload.get("rules"), dict):
+        problems.append("not a {'version', 'rules'} object")
+    else:
+        known = set(all_rules())
+        for rule, entry in sorted(payload["rules"].items()):
+            if rule not in known:
+                problems.append(f"unknown rule id {rule!r}")
+            n = entry.get("suppressions") if isinstance(entry, dict) else None
+            if not isinstance(n, int) or isinstance(n, bool) or n < 0:
+                problems.append(f"rule {rule!r}: suppressions must be a "
+                                f"non-negative int, got {n!r}")
+    if problems:
+        raise RuntimeError(f"{path} is malformed: {'; '.join(problems)}")
+    emit(f"{path}: {len(payload['rules'])} rules, structure ok")
+
+
 def check_tree(root: str = ".", emit=print) -> None:
     """Scan EVERY committed ``BENCH_*.json`` under ``root`` and fail with
     the full list of offending paths — one loop instead of one hook per
-    bench, so a new payload is covered the day it is committed."""
+    bench, so a new payload is covered the day it is committed.  Also
+    validates ``LINT_BASELINE.json`` structure when present, so the lint
+    ratchet is guarded by the same tier."""
     paths = sorted(Path(root).glob("BENCH_*.json"))
     if not paths:
         raise RuntimeError(f"bench-guard found no BENCH_*.json under "
@@ -73,6 +101,9 @@ def check_tree(root: str = ".", emit=print) -> None:
         lines = "; ".join(f"{p}: {hits}" for p, hits in sorted(bad.items()))
         raise RuntimeError(f"committed bench payloads carry NaN metrics — "
                            f"{lines}")
+    baseline = Path(root) / "LINT_BASELINE.json"
+    if baseline.exists():
+        check_lint_baseline(baseline, emit=emit)
     emit(f"bench-guard: {len(paths)} payloads NaN-free")
 
 

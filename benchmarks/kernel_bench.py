@@ -15,11 +15,11 @@ from repro.kernels import ops as kops
 def _time(fn, *args, iters=5):
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6      # us
+    return (time.perf_counter() - t0) / iters * 1e6      # us
 
 
 def run(emit=print):

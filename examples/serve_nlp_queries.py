@@ -35,14 +35,14 @@ def main():
 
     # 1. real compute: run one query batch of the app's kernel locally
     rng = np.random.default_rng(0)
-    t0 = time.time()
+    t0 = time.perf_counter()
     if args.app == "recommender":
         ids = recommender_query_batch(rng, n_queries=64)
-        print(f"[compute] top-10 for 64 queries in {time.time()-t0:.2f}s; "
+        print(f"[compute] top-10 for 64 queries in {time.perf_counter()-t0:.2f}s; "
               f"query0 -> movies {ids[0][:5]}...")
     else:
         preds = sentiment_query_batch(rng, n_queries=256)
-        print(f"[compute] 256 sentiment predictions in {time.time()-t0:.2f}s; "
+        print(f"[compute] 256 sentiment predictions in {time.perf_counter()-t0:.2f}s; "
               f"positive frac {preds.mean():.2f}")
 
     # 2. cluster scale-out via the pull scheduler (paper Fig. 5)

@@ -1,50 +1,8 @@
 #!/usr/bin/env bash
-# CI entry points.
-#
-#   scripts/ci.sh               tier-1: the full suite (ROADMAP "Tier-1 verify")
-#   scripts/ci.sh fast          smoke tier: fast unit tests only (-m fast)
-#   scripts/ci.sh nonslow       everything except the multi-minute slow tests
-#   scripts/ci.sh perf-smoke    engine benchmark at a tiny config; fails on
-#                               crash, NaN throughput, paged/strip mismatch or
-#                               paged decode regressing >1.5x behind strip, and
-#                               writes BENCH_fig5.json
-#   scripts/ci.sh bench-guard   scans EVERY committed BENCH_*.json for NaN
-#                               metrics in one pass (benchmarks/_gate.py —
-#                               a degenerate run must never be the committed
-#                               reference; new payloads are covered the day
-#                               they land), then re-runs the committed
-#                               BENCH_fig5.json workload and fails if
-#                               tokens/s drops below 0.8x the committed
-#                               numbers
-#   scripts/ci.sh slo-smoke     tiny bursty open-loop trace through the EDF
-#                               serve engine; fails on crash, lost requests,
-#                               or non-finite tail-latency stats
-#   scripts/ci.sh cluster-smoke 2-replica cluster engine serves a short trace
-#                               for a few ticks; fails on crash, broken
-#                               throughput, or tokens diverging from the
-#                               single-engine serial replay
-#   scripts/ci.sh hetero-smoke  heterogeneous 2-replica cluster (one drive
-#                               modeled 2x slower): the pull scheduler must
-#                               rate both drives (fast > slow) and serving
-#                               must stay token-identical to serial replay
-#   scripts/ci.sh chaos-smoke   2-replica cluster with a seeded mid-trace
-#                               crash of drive 1: the failure detector must
-#                               kill it, retries must recover every request
-#                               token-identically, and no KV page may leak
-#   scripts/ci.sh concurrency-smoke
-#                               worker-runtime tier: a seeded subset of the
-#                               concurrent stress iterations (crashes and
-#                               real thread hangs against the heartbeat
-#                               watchdog) plus the fig9 smoke; fails on
-#                               token divergence, broken conservation,
-#                               leaked KV pages, or worker threads that
-#                               fail to join
-#   scripts/ci.sh obs-smoke     observability tier: the telemetry unit tests,
-#                               then a small concurrent 2-replica serve run
-#                               with --trace-out/--metrics-out whose Chrome
-#                               trace must load through
-#                               scripts/trace_report.py (the same structural
-#                               checks a Perfetto import would trip over)
+# CI entry points.  Run `scripts/ci.sh help` for the tier list — it is
+# generated from the `case` arms below (each arm documents itself with
+# trailing `##` comments), so unlike a hand-maintained header it cannot
+# drift from the real tiers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
@@ -53,22 +11,66 @@ export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 export PYTHONFAULTHANDLER=1
 
 case "${1:-tier1}" in
-  fast)          exec python -m pytest -x -q -m fast ;;
-  nonslow)       exec python -m pytest -x -q -m "not slow" ;;
-  perf-smoke)    exec python -m benchmarks.fig5_throughput --engine --json \
+  fast)          ## smoke tier: fast unit tests only (-m fast)
+                 exec python -m pytest -x -q -m fast ;;
+  nonslow)       ## everything except the multi-minute slow tests
+                 exec python -m pytest -x -q -m "not slow" ;;
+  lint)          ## AST invariant linter (repro.analysis.lint) over
+                 ## src/repro, benchmarks/ and examples/; fails on any
+                 ## error diagnostic or a suppression-count increase vs
+                 ## the committed LINT_BASELINE.json
+                 exec python -m repro.analysis.lint src/repro benchmarks \
+                      examples --json --baseline LINT_BASELINE.json ;;
+  perf-smoke)    ## engine benchmark at a tiny config; fails on crash,
+                 ## NaN throughput, paged/strip mismatch or paged decode
+                 ## regressing >1.5x behind strip, and writes
+                 ## BENCH_fig5.json
+                 exec python -m benchmarks.fig5_throughput --engine --json \
                       --requests 4 --max-new 4 --num-slots 2 --k-block 8 ;;
-  bench-guard)   python -c "from benchmarks._gate import check_tree; check_tree()"
+  bench-guard)   ## scans EVERY committed BENCH_*.json for NaN metrics in
+                 ## one pass (benchmarks/_gate.py — a degenerate run must
+                 ## never be the committed reference; new payloads are
+                 ## covered the day they land) and validates
+                 ## LINT_BASELINE.json structure, then re-runs the
+                 ## committed BENCH_fig5.json workload and fails if
+                 ## tokens/s drops below 0.8x the committed numbers
+                 python -c "from benchmarks._gate import check_tree; check_tree()"
                  exec python -m benchmarks.fig5_throughput --engine \
                       --guard BENCH_fig5.json --guard-floor 0.8 ;;
-  cluster-smoke) exec python -m benchmarks.fig6_cluster --smoke ;;
-  slo-smoke)     exec python -m benchmarks.fig7_slo --smoke ;;
-  hetero-smoke)  exec python -m benchmarks.fig6_cluster --hetero --smoke ;;
-  chaos-smoke)   exec python -m benchmarks.fig8_faults --smoke ;;
+  cluster-smoke) ## 2-replica cluster engine serves a short trace for a
+                 ## few ticks; fails on crash, broken throughput, or
+                 ## tokens diverging from the single-engine serial replay
+                 exec python -m benchmarks.fig6_cluster --smoke ;;
+  slo-smoke)     ## tiny bursty open-loop trace through the EDF serve
+                 ## engine; fails on crash, lost requests, or non-finite
+                 ## tail-latency stats
+                 exec python -m benchmarks.fig7_slo --smoke ;;
+  hetero-smoke)  ## heterogeneous 2-replica cluster (one drive modeled 2x
+                 ## slower): the pull scheduler must rate both drives
+                 ## (fast > slow) and serving must stay token-identical
+                 ## to serial replay
+                 exec python -m benchmarks.fig6_cluster --hetero --smoke ;;
+  chaos-smoke)   ## 2-replica cluster with a seeded mid-trace crash of
+                 ## drive 1: the failure detector must kill it, retries
+                 ## must recover every request token-identically, and no
+                 ## KV page may leak
+                 exec python -m benchmarks.fig8_faults --smoke ;;
   concurrency-smoke)
+                 ## worker-runtime tier: a seeded subset of the
+                 ## concurrent stress iterations (crashes and real thread
+                 ## hangs against the heartbeat watchdog) plus the fig9
+                 ## smoke; fails on token divergence, broken
+                 ## conservation, leaked KV pages, or worker threads that
+                 ## fail to join
                  STRESS_ITERS=6 python -m pytest -x -q \
                       tests/test_concurrent_stress.py
                  exec python -m benchmarks.fig9_concurrency --smoke ;;
-  obs-smoke)     python -m pytest -x -q tests/test_telemetry.py
+  obs-smoke)     ## observability tier: the telemetry unit tests, then a
+                 ## small concurrent 2-replica serve run with
+                 ## --trace-out/--metrics-out whose Chrome trace must
+                 ## load through scripts/trace_report.py (the same
+                 ## structural checks a Perfetto import would trip over)
+                 python -m pytest -x -q tests/test_telemetry.py
                  obs_dir="$(mktemp -d)"
                  trap 'rm -rf "$obs_dir"' EXIT
                  python -m repro.launch.serve --arch yi-9b --smoke \
@@ -79,5 +81,25 @@ case "${1:-tier1}" in
                       --metrics-out "$obs_dir/metrics.json"
                  test -s "$obs_dir/metrics.json"
                  python scripts/trace_report.py "$obs_dir/trace.json" ;;
-  tier1|*)       exec python -m pytest -x -q ;;
+  help)          ## this tier list, generated from the case arms
+                 echo "usage: scripts/ci.sh [tier]   (default: tier1)"
+                 echo
+                 awk '
+                   /^[[:space:]]+[a-zA-Z0-9|*-]+\)/ {
+                     arm = $1; sub(/\).*/, "", arm)
+                     sub(/\|\*$/, "", arm); fresh = 1
+                   }
+                   /^[[:space:]]*##[[:space:]]/ || \
+                   /\)[[:space:]]+##[[:space:]]/ {
+                     d = $0; sub(/.*##[[:space:]]/, "", d)
+                     if (fresh) { printf "  %-14s %s\n", arm, d; fresh = 0 }
+                     else       { printf "  %-14s %s\n", "", d }
+                   }
+                 ' "$0" ;;
+  tier1|*)       ## default tier-1: the lint gate (human-readable
+                 ## output), then the full pytest suite (ROADMAP
+                 ## "Tier-1 verify")
+                 python -m repro.analysis.lint src/repro benchmarks \
+                      examples --baseline LINT_BASELINE.json
+                 exec python -m pytest -x -q ;;
 esac

@@ -1,0 +1,63 @@
+"""repro.analysis.lint — AST-based invariant checker for the serving
+stack.
+
+The concurrent runtime's correctness rests on contracts that used to
+live only in ROADMAP prose: the cluster->drive lock order, the
+one-clock-per-track rule, worker-side fault-predicate purity, the
+NULL_HUB ``enabled`` guard on every instrumentation site, and the
+purity of everything handed to ``jax.jit``/Pallas.  This package turns
+each of those into a CI-failing lint rule.
+
+Run it::
+
+    python -m repro.analysis.lint src/repro            # human output
+    python -m repro.analysis.lint src/repro --json     # machine output
+    python -m repro.analysis.lint --list-rules
+    scripts/ci.sh lint                                 # the CI tier
+
+Suppress a single finding with a trailing comment naming the rule —
+and say why, because the committed ``LINT_BASELINE.json`` pins the
+per-rule suppression counts and CI fails when they grow::
+
+    marker.write_text(str(time.time()))  # persisted wall-clock stamp; lint: disable=banned-api
+
+Adding a checker
+----------------
+
+A rule is a ``Checker`` subclass with ``visit_<NodeType>`` methods,
+registered with the ``@register`` decorator and imported from
+``framework.all_rules``::
+
+    from .framework import Checker, FileContext, register
+
+    @register
+    class NoSleepChecker(Checker):
+        name = "no-sleep"                       # rule id in diagnostics,
+        description = "no time.sleep on ..."    #   --rules filters and
+        contract = "ROADMAP section ..."        #   disable= comments
+
+        def visit_Call(self, node, ctx: FileContext):
+            if ...:
+                self.report_node(ctx, node, "why this is wrong")
+
+The framework runs ONE walk per file and dispatches each node to every
+checker, maintaining ``ctx.ancestors`` (the path from the module node
+to the current node's parent) so rules can answer lexical questions —
+enclosing function/class, dominating ``if``, locks held — without
+their own traversal state.  Per-file hooks ``start_file``/
+``finish_file`` bracket the walk; cross-file rules (lock-order) buffer
+sites and emit from ``finish()`` after every file has been seen.
+Then: add the module to the imports in ``framework.all_rules``, give
+it a fixture test in ``tests/test_lint.py`` (one positive, one
+negative, one suppressed), and regenerate the baseline with
+``--write-baseline`` if the sweep added suppressions.
+"""
+from .framework import (Checker, Diagnostic, FileContext, Report, all_rules,
+                        baseline_payload, check_baseline, load_baseline,
+                        register, run_lint)
+
+__all__ = [
+    "Checker", "Diagnostic", "FileContext", "Report", "all_rules",
+    "baseline_payload", "check_baseline", "load_baseline", "register",
+    "run_lint",
+]

@@ -1,0 +1,72 @@
+"""Small AST helpers shared by the checkers."""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Optional, Tuple
+
+
+def dotted(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """The segments of a Name/Attribute chain: ``self.tele.counter`` ->
+    ('self', 'tele', 'counter').  None for anything that isn't a plain
+    dotted chain (subscripts, calls in the middle, ...)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def dotted_str(node: ast.AST) -> Optional[str]:
+    parts = dotted(node)
+    return ".".join(parts) if parts else None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    """The rightmost segment of the called expression, or None."""
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    return None
+
+
+def contains_attr(node: ast.AST, attr: str) -> bool:
+    """True if any Attribute access named ``attr`` appears under node."""
+    return any(isinstance(n, ast.Attribute) and n.attr == attr
+               for n in ast.walk(node))
+
+
+def on_body_path(ancestors, node: ast.AST, owner: ast.If) -> bool:
+    """True if ``node`` sits inside ``owner.body`` (not orelse/test),
+    given the walk's ancestor path.  ``ancestors`` must contain
+    ``owner``; the element after it (or ``node`` itself) is the child
+    the path descends through."""
+    try:
+        i = ancestors.index(owner)
+    except ValueError:
+        return False
+    child = ancestors[i + 1] if i + 1 < len(ancestors) else node
+    return any(child is stmt or _contains(stmt, child)
+               for stmt in owner.body)
+
+
+def _contains(tree: ast.AST, node: ast.AST) -> bool:
+    return any(n is node for n in ast.walk(tree))
+
+
+def func_params(fn) -> set:
+    """All parameter names of a FunctionDef/AsyncFunctionDef/Lambda."""
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def iter_withitems(node: ast.With) -> Iterable[ast.withitem]:
+    return node.items

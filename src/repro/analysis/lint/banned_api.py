@@ -1,0 +1,77 @@
+"""banned-api: wall-clock time, unseeded module-level RNG, bare except.
+
+Three bans, all grounded in prior sweeps:
+
+  * ``time.time()`` — the PR 6 clock-domain sweep moved every interval
+    measurement to ``time.perf_counter()``; wall-clock reads drift
+    against the monotonic telemetry timebase.  Persisted wall-clock
+    timestamps (checkpoint markers) are the one legitimate use and get
+    a per-line suppression with a justifying comment.
+  * module-level RNG in ``core/``/``train/`` — replayability of the
+    cluster runtime depends on every random draw coming from a seeded
+    generator (``random.Random(seed)`` / ``np.random.default_rng(seed)``);
+    ``random.random()`` or ``np.random.uniform()`` pull from process
+    globals and break token-identical replay.
+  * bare ``except:`` — swallows ``KeyboardInterrupt``/``SystemExit``
+    and hides worker-thread failures the watchdog relies on seeing.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .astutil import dotted
+from .framework import Checker, FileContext, register
+
+# constructors/seeding entry points that are allowed at module scope
+_SEEDED_RANDOM = {"Random", "SystemRandom", "seed", "getstate", "setstate"}
+_SEEDED_NP = {"default_rng", "Generator", "SeedSequence", "RandomState",
+              "PCG64", "Philox", "bit_generator"}
+
+
+def _in_seeded_scope(path: str) -> bool:
+    parts = Path(path).parts
+    return "core" in parts or "train" in parts
+
+
+@register
+class BannedApiChecker(Checker):
+    name = "banned-api"
+    description = ("time.time(), unseeded module-level random/np.random "
+                   "in core//train/, and bare except:")
+    contract = ("ROADMAP clock-domain rule: one timebase per track, "
+                "perf_counter for intervals; seeded generators only on "
+                "the replayable core/train paths")
+
+    def visit_Call(self, node: ast.Call, ctx: FileContext):
+        parts = dotted(node.func)
+        if parts is None:
+            return
+        if parts == ("time", "time"):
+            self.report_node(
+                ctx, node,
+                "time.time() is banned — use time.perf_counter() for "
+                "intervals; a persisted wall-clock timestamp needs a "
+                "justified '# lint: disable=banned-api'")
+            return
+        if not _in_seeded_scope(ctx.path):
+            return
+        if parts[0] == "random" and len(parts) == 2 \
+                and parts[1] not in _SEEDED_RANDOM:
+            self.report_node(
+                ctx, node,
+                f"module-level random.{parts[1]}() draws from the process "
+                f"global RNG — use a seeded random.Random(seed) instance")
+        elif parts[0] in ("np", "numpy") and len(parts) >= 3 \
+                and parts[1] == "random" and parts[2] not in _SEEDED_NP:
+            self.report_node(
+                ctx, node,
+                f"{parts[0]}.random.{parts[2]}() draws from the numpy "
+                f"global RNG — use np.random.default_rng(seed)")
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler, ctx: FileContext):
+        if node.type is None:
+            self.report_node(
+                ctx, node,
+                "bare 'except:' swallows KeyboardInterrupt/SystemExit and "
+                "hides worker failures — catch Exception (or narrower)")

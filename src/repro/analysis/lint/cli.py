@@ -1,0 +1,88 @@
+"""Command-line front end: ``python -m repro.analysis.lint``.
+
+Exit status is the CI contract: 0 when there are no error-severity
+diagnostics and the suppression counts are within the baseline (when
+``--baseline`` is given); 1 otherwise.  ``--json`` emits the full
+machine-readable report on stdout for tooling; the default output is
+one ``path:line:col: severity: [rule] message`` line per finding.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from .framework import (all_rules, baseline_payload, check_baseline,
+                        load_baseline, run_lint)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="AST-based invariant checker for the serving stack")
+    p.add_argument("paths", nargs="*", default=["src/repro"],
+                   help="files or directories to lint (default: src/repro)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit the full report as JSON on stdout")
+    p.add_argument("--rules", default=None,
+                   help="comma-separated rule ids to run (default: all)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="list registered rules and exit")
+    p.add_argument("--baseline", default=None, metavar="FILE",
+                   help="fail if per-rule suppression counts exceed FILE")
+    p.add_argument("--write-baseline", default=None, metavar="FILE",
+                   help="write the current suppression counts to FILE")
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.list_rules:
+        for name, cls in all_rules().items():
+            print(f"{name}: {cls.description}")
+        return 0
+    rules = [r.strip() for r in args.rules.split(",")] if args.rules else None
+    try:
+        report = run_lint(args.paths or ["src/repro"], rules=rules)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    problems: List[str] = []
+    baseline_ok = True
+    if args.baseline:
+        try:
+            baseline = load_baseline(args.baseline)
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append(f"cannot load baseline {args.baseline}: {e}")
+            baseline_ok = False
+        else:
+            problems = check_baseline(report, baseline)
+            baseline_ok = not problems
+
+    if args.write_baseline:
+        with open(args.write_baseline, "w") as f:
+            json.dump(baseline_payload(report), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    failed = bool(report.errors) or not baseline_ok
+    if args.as_json:
+        payload = report.to_json()
+        payload["baseline_ok"] = baseline_ok
+        payload["baseline_problems"] = problems
+        payload["ok"] = not failed
+        print(json.dumps(payload, indent=2))
+    else:
+        for d in report.diagnostics:
+            print(d.format())
+        for p in problems:
+            print(f"baseline: {p}")
+        n_err, n_warn = len(report.errors), len(report.warnings)
+        print(f"{len(report.files)} files, {n_err} errors, {n_warn} "
+              f"warnings, {len(report.suppressed)} suppressed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""fault-purity: worker code may only call pure FaultSchedule predicates.
+
+``FaultSchedule`` exposes two kinds of query (core/faults.py):
+
+  * pure predicates — ``crash_active`` / ``hangs`` / ``stalled`` /
+    ``slowdown`` / ``clamp`` — read-only, callable from anywhere;
+  * delivered-set-mutating queries — ``begins`` / ``crashes`` — which
+    record that the coordinator has *observed* the fault (each fires
+    once per fault).  These are coordinator-only: if a worker thread
+    consumed the one-shot delivery, the coordinator would never see the
+    fault begin, and the chaos tests' ground truth would silently leak
+    into the data path (the ground-truth-leak rule).
+
+The rule is scoped to ``core/runtime.py`` — the drive-worker thread
+body.  Any ``*.begins(...)`` / ``*.crashes(...)`` call there is an
+error, as is any other non-pure method reached through a ``faults``
+receiver (``self.faults.save(...)`` etc. — workers must not construct,
+persist, or mutate schedules).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .astutil import dotted
+from .framework import Checker, FileContext, register
+
+PURE_PREDICATES = {"crash_active", "hangs", "stalled", "slowdown", "clamp"}
+MUTATING_QUERIES = {"begins", "crashes"}
+
+
+@register
+class FaultPurityChecker(Checker):
+    name = "fault-purity"
+    description = ("only pure FaultSchedule predicates may run on the "
+                   "worker thread (core/runtime.py)")
+    contract = ("ground-truth-leak rule: begins()/crashes() mutate the "
+                "delivered set and are coordinator-only")
+
+    def _in_scope(self, ctx: FileContext) -> bool:
+        return Path(ctx.path).name == "runtime.py"
+
+    def visit_Call(self, node: ast.Call, ctx: FileContext):
+        if not self._in_scope(ctx):
+            return
+        func = node.func
+        if not isinstance(func, ast.Attribute):
+            return
+        if func.attr in MUTATING_QUERIES:
+            self.report_node(
+                ctx, node,
+                f"{func.attr}() mutates the fault schedule's delivered set "
+                f"and is coordinator-only — worker code may call the pure "
+                f"predicates only ({', '.join(sorted(PURE_PREDICATES))})")
+            return
+        parts = dotted(func.value)
+        if parts and parts[-1] == "faults" \
+                and func.attr not in PURE_PREDICATES:
+            self.report_node(
+                ctx, node,
+                f"faults.{func.attr}() is not a pure predicate — worker "
+                f"code may call only "
+                f"{', '.join(sorted(PURE_PREDICATES))}")

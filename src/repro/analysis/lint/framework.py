@@ -1,0 +1,348 @@
+"""Core machinery of the invariant linter: checkers, registry, runner.
+
+The linter is one AST walk per file feeding every registered checker.
+A checker is a class with ``visit_<NodeType>`` methods (the walker
+dispatches by node type name, like ``ast.NodeVisitor`` but with a
+shared walk so N rules cost one traversal), plus three lifecycle
+hooks:
+
+  * ``start_file(ctx)`` / ``finish_file(ctx)`` — per-file state;
+  * ``finish()`` — after ALL files, for cross-file rules (the
+    lock-order checker builds its acquisition graph here).
+
+``FileContext`` carries the parsed tree, the raw source, and the
+*ancestor path* of the node currently being visited — checkers use it
+for domination questions ("is this call inside an ``if hub.enabled``
+body?", "which locks are lexically held here?") without maintaining
+their own stacks.
+
+Diagnostics are suppressible per line with ``# lint: disable=RULE`` (or
+``RULE1,RULE2``).  Suppressions are first-class: every disable comment
+is counted per rule (``Report.suppression_sites``) whether or not a
+diagnostic fired on that line, and the committed ``LINT_BASELINE.json``
+pins those counts — adding a suppression without updating the baseline
+fails CI, so silencing a rule is always a reviewed decision.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type
+
+ERROR = "error"
+WARNING = "warning"
+SEVERITIES = (ERROR, WARNING)
+
+_SUPPRESS_RE = re.compile(r"lint:\s*disable=([A-Za-z0-9_,\- ]+)")
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One finding: file/line/col, the rule id, severity, message."""
+    path: str
+    line: int
+    col: int
+    rule: str
+    severity: str
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.severity}: "
+                f"[{self.rule}] {self.message}")
+
+    def to_json(self) -> dict:
+        return {"path": self.path, "line": self.line, "col": self.col,
+                "rule": self.rule, "severity": self.severity,
+                "message": self.message}
+
+
+class FileContext:
+    """Parsed state of one file plus the live ancestor path of the walk."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        # {line -> set(rule ids)} from "# lint: disable=..." comments,
+        # found via tokenize so string literals can't fake a suppression
+        self.suppressions: Dict[int, set] = {}
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                self.suppressions.setdefault(tok.start[0], set()).update(rules)
+        # maintained by the walker: ancestors[0] is the Module, the last
+        # element is the direct parent of the node being visited
+        self.ancestors: List[ast.AST] = []
+
+    # -- ancestor conveniences (valid during visit_* callbacks) -----------
+
+    def parent(self) -> Optional[ast.AST]:
+        return self.ancestors[-1] if self.ancestors else None
+
+    def enclosing(self, *types) -> Optional[ast.AST]:
+        for node in reversed(self.ancestors):
+            if isinstance(node, types):
+                return node
+        return None
+
+    def enclosing_function(self):
+        return self.enclosing(ast.FunctionDef, ast.AsyncFunctionDef)
+
+    def enclosing_class(self) -> Optional[ast.ClassDef]:
+        return self.enclosing(ast.ClassDef)
+
+    def path_pairs(self) -> Iterable[Tuple[ast.AST, ast.AST]]:
+        """(ancestor, child-on-path) pairs, outermost first.  The child of
+        the last ancestor is the node currently being visited, which the
+        caller appends itself."""
+        return zip(self.ancestors, self.ancestors[1:])
+
+
+@dataclass
+class Report:
+    """Everything one lint run produced."""
+    diagnostics: List[Diagnostic] = field(default_factory=list)
+    suppressed: List[Diagnostic] = field(default_factory=list)
+    # rule id -> number of "# lint: disable" comment sites naming it,
+    # counted whether or not a diagnostic fired there (the committed
+    # baseline pins these, so they must be stable across clean runs)
+    suppression_sites: Dict[str, int] = field(default_factory=dict)
+    files: List[str] = field(default_factory=list)
+
+    @property
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == ERROR]
+
+    @property
+    def warnings(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == WARNING]
+
+    def to_json(self) -> dict:
+        return {
+            "files": len(self.files),
+            "errors": len(self.errors),
+            "warnings": len(self.warnings),
+            "diagnostics": [d.to_json() for d in self.diagnostics],
+            "suppressed": [d.to_json() for d in self.suppressed],
+            "suppression_sites": dict(sorted(
+                self.suppression_sites.items())),
+        }
+
+
+class Checker:
+    """Base class for one lint rule.
+
+    Subclasses set ``name`` (the rule id used in diagnostics, CLI
+    ``--rules`` filters and ``# lint: disable=`` comments),
+    ``description`` and ``contract`` (the documented invariant the rule
+    enforces), define ``visit_<NodeType>`` methods, and call
+    ``self.report_node(ctx, node, message)``.  Cross-file rules collect
+    state during the walk and emit from ``finish()`` via
+    ``self.report_at(path, line, col, message)``.
+    """
+
+    name: str = ""
+    description: str = ""
+    contract: str = ""
+    severity: str = ERROR
+
+    def __init__(self):
+        self._sink = None          # bound by the runner
+
+    # lifecycle ------------------------------------------------------------
+    def start_file(self, ctx: FileContext) -> None:
+        pass
+
+    def finish_file(self, ctx: FileContext) -> None:
+        pass
+
+    def finish(self) -> None:
+        pass
+
+    # dispatch -------------------------------------------------------------
+    def visit(self, node: ast.AST, ctx: FileContext) -> None:
+        method = getattr(self, "visit_" + type(node).__name__, None)
+        if method is not None:
+            method(node, ctx)
+
+    # reporting ------------------------------------------------------------
+    def report_node(self, ctx: FileContext, node: ast.AST, message: str,
+                    severity: Optional[str] = None) -> None:
+        self.report_at(ctx.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0), message, severity)
+
+    def report_at(self, path: str, line: int, col: int, message: str,
+                  severity: Optional[str] = None) -> None:
+        self._sink.add(Diagnostic(path=path, line=line, col=col,
+                                  rule=self.name,
+                                  severity=severity or self.severity,
+                                  message=message))
+
+
+# -- registry ---------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[Checker]] = {}
+
+
+def register(cls: Type[Checker]) -> Type[Checker]:
+    """Class decorator adding a checker to the default rule set."""
+    if not cls.name:
+        raise ValueError(f"checker {cls.__name__} has no rule name")
+    if cls.name in _REGISTRY and _REGISTRY[cls.name] is not cls:
+        raise ValueError(f"duplicate rule id {cls.name!r}")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, Type[Checker]]:
+    # rule modules register on import; import here to avoid a cycle
+    from . import banned_api, fault_purity, jit_purity  # noqa: F401
+    from . import lock_order, telemetry_guard           # noqa: F401
+    return dict(sorted(_REGISTRY.items()))
+
+
+# -- runner -----------------------------------------------------------------
+
+class _Sink:
+    """Routes a diagnostic to the report, honoring line suppressions."""
+
+    def __init__(self, report: Report):
+        self.report = report
+        self._supp: Dict[str, Dict[int, set]] = {}
+
+    def register_file(self, ctx: FileContext) -> None:
+        self._supp[ctx.path] = ctx.suppressions
+        for rules in ctx.suppressions.values():
+            for rule in rules:
+                self.report.suppression_sites[rule] = \
+                    self.report.suppression_sites.get(rule, 0) + 1
+
+    def add(self, diag: Diagnostic) -> None:
+        rules = self._supp.get(diag.path, {}).get(diag.line, set())
+        if diag.rule in rules:
+            self.report.suppressed.append(diag)
+        else:
+            self.report.diagnostics.append(diag)
+
+
+def iter_python_files(paths: Sequence[str]) -> List[Path]:
+    """Expand files/directories into a sorted, deduplicated .py list."""
+    out = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(f for f in path.rglob("*.py")
+                              if not any(part.startswith(".")
+                                         for part in f.parts)))
+        elif path.suffix == ".py":
+            out.append(path)
+    seen, files = set(), []
+    for f in out:
+        key = str(f)
+        if key not in seen:
+            seen.add(key)
+            files.append(f)
+    return files
+
+
+def run_lint(paths: Sequence[str],
+             rules: Optional[Sequence[str]] = None) -> Report:
+    """Lint ``paths`` (files or directories) with the selected rules
+    (default: every registered rule).  Returns the full ``Report``;
+    callers decide the exit code (see ``cli.main``)."""
+    registry = all_rules()
+    if rules:
+        unknown = sorted(set(rules) - set(registry))
+        if unknown:
+            raise ValueError(f"unknown rule ids: {unknown}; known: "
+                             f"{sorted(registry)}")
+        registry = {k: v for k, v in registry.items() if k in rules}
+    report = Report()
+    sink = _Sink(report)
+    checkers = []
+    for cls in registry.values():
+        checker = cls()
+        checker._sink = sink
+        checkers.append(checker)
+
+    for file in iter_python_files(paths):
+        path = file.as_posix()
+        try:
+            source = file.read_text()
+            ctx = FileContext(path, source)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            line = getattr(e, "lineno", 1) or 1
+            report.diagnostics.append(Diagnostic(
+                path=path, line=line, col=0, rule="parse-error",
+                severity=ERROR, message=f"cannot parse: {e}"))
+            continue
+        report.files.append(path)
+        sink.register_file(ctx)
+        for c in checkers:
+            c.start_file(ctx)
+        _walk(ctx.tree, ctx, checkers)
+        for c in checkers:
+            c.finish_file(ctx)
+    for c in checkers:
+        c.finish()
+    report.diagnostics.sort(key=lambda d: (d.path, d.line, d.col, d.rule))
+    return report
+
+
+def _walk(node: ast.AST, ctx: FileContext, checkers: List[Checker]) -> None:
+    for c in checkers:
+        c.visit(node, ctx)
+    ctx.ancestors.append(node)
+    try:
+        for child in ast.iter_child_nodes(node):
+            _walk(child, ctx, checkers)
+    finally:
+        ctx.ancestors.pop()
+
+
+# -- baseline ---------------------------------------------------------------
+
+BASELINE_VERSION = 1
+
+
+def baseline_payload(report: Report) -> dict:
+    """The committed-baseline shape: per-rule suppression counts for
+    EVERY registered rule (a rule with zero suppressions is pinned at 0,
+    so the first suppression anyone adds shows up as a diff)."""
+    rules = {}
+    for name in all_rules():
+        rules[name] = {
+            "suppressions": int(report.suppression_sites.get(name, 0))}
+    return {"version": BASELINE_VERSION, "rules": rules}
+
+
+def check_baseline(report: Report, baseline: dict) -> List[str]:
+    """Compare a run against a committed baseline.  Returns problem
+    strings (empty = pass).  Fails on any suppression-count increase —
+    decreases are fine (someone fixed a violation for real) but should
+    be ratcheted into the baseline."""
+    problems = []
+    if not isinstance(baseline, dict) or "rules" not in baseline:
+        return [f"baseline is not a {{'version', 'rules'}} payload"]
+    pinned = baseline["rules"]
+    for rule, n in sorted(report.suppression_sites.items()):
+        allowed = int(pinned.get(rule, {}).get("suppressions", 0))
+        if n > allowed:
+            problems.append(
+                f"rule {rule!r}: {n} suppression sites vs {allowed} in the "
+                f"baseline — fix the violation or ratchet the baseline "
+                f"with --write-baseline (reviewed)")
+    return problems
+
+
+def load_baseline(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

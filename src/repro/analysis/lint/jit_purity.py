@@ -1,0 +1,182 @@
+"""jit-purity: functions handed to jax.jit / lax control flow / Pallas
+must stay free of host-side effects.
+
+A function traced by ``jax.jit``, ``lax.while_loop`` / ``scan`` /
+``fori_loop``, or ``pl.pallas_call`` executes its Python body once at
+trace time and never again — any host-side effect inside it (reading a
+clock, printing, file I/O, taking a lock, emitting telemetry) either
+silently runs once at trace time with a stale value baked into the
+compiled graph, or crashes inside the Pallas lowering.  The serving
+engines therefore keep all instrumentation OUTSIDE the jitted step
+functions and pass data out through the carry.
+
+The checker finds every traced-callable argument (lambda inline,
+``functools.partial(f, ...)`` unwrapped, bare names resolved through
+the enclosing scopes then module scope), walks it — recursing one
+level into same-module callees — and flags calls to ``time.*``,
+``print``/``open``/``input``/``breakpoint``, the ``os``/``io``/
+``socket``/``subprocess``/``threading``/``random`` modules (NOT
+``jax.random``), lock withs/acquires, and hub-ish telemetry
+receivers.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .astutil import dotted
+from .framework import Checker, FileContext, register
+from .lock_order import classify_lock
+from .telemetry_guard import HUB_NAMES
+
+# dotted entry -> indices of traced callable arguments / keyword names
+_ENTRIES: Dict[Tuple[str, ...], Tuple[Tuple[int, ...], Tuple[str, ...]]] = {
+    ("jax", "jit"): ((0,), ("fun",)),
+    ("jit",): ((0,), ("fun",)),
+    ("jax", "pmap"): ((0,), ("fun",)),
+    ("jax", "lax", "while_loop"): ((0, 1), ("cond_fun", "body_fun")),
+    ("lax", "while_loop"): ((0, 1), ("cond_fun", "body_fun")),
+    ("jax", "lax", "scan"): ((0,), ("f",)),
+    ("lax", "scan"): ((0,), ("f",)),
+    ("jax", "lax", "fori_loop"): ((2,), ("body_fun",)),
+    ("lax", "fori_loop"): ((2,), ("body_fun",)),
+    ("pl", "pallas_call"): ((0,), ("kernel",)),
+    ("pallas_call",): ((0,), ("kernel",)),
+    ("jax", "experimental", "pallas", "pallas_call"): ((0,), ("kernel",)),
+}
+
+_BANNED_BARE = {"print", "open", "input", "breakpoint"}
+_BANNED_ROOTS = {"time", "os", "io", "socket", "subprocess", "threading",
+                 "random"}
+
+
+@register
+class JitPurityChecker(Checker):
+    name = "jit-purity"
+    description = ("no host I/O, time.*, locks, or telemetry inside "
+                   "functions traced by jax.jit/lax/*loop/pallas_call")
+    contract = ("traced bodies run once at trace time; host effects bake "
+                "stale values into the compiled graph or break lowering")
+
+    def __init__(self):
+        super().__init__()
+        self._seen_sites: Set[Tuple] = set()
+
+    def visit_Call(self, node: ast.Call, ctx: FileContext):
+        parts = dotted(node.func)
+        if parts is None or parts not in _ENTRIES:
+            return
+        arg_idx, kw_names = _ENTRIES[parts]
+        entry = ".".join(parts)
+        traced: List[ast.AST] = []
+        for i in arg_idx:
+            if i < len(node.args):
+                traced.append(node.args[i])
+        for kw in node.keywords:
+            if kw.arg in kw_names:
+                traced.append(kw.value)
+        for expr in traced:
+            fn = self._resolve(expr, ctx)
+            if fn is not None:
+                self._check_pure(fn, ctx, entry, node.lineno, visited=set())
+
+    # -- resolution --------------------------------------------------------
+
+    def _resolve(self, expr: ast.AST, ctx: FileContext,
+                 scopes: Optional[List[ast.AST]] = None):
+        """Traced arg expr -> a Lambda/FunctionDef node, or None."""
+        if isinstance(expr, ast.Lambda):
+            return expr
+        if isinstance(expr, ast.Call):
+            parts = dotted(expr.func)
+            if parts in (("functools", "partial"), ("partial",)) \
+                    and expr.args:
+                return self._resolve(expr.args[0], ctx, scopes)
+            return None
+        if isinstance(expr, ast.Name):
+            bound = self._lookup(expr.id, ctx, scopes)
+            if isinstance(bound, ast.Call):
+                # name bound to functools.partial(f, ...): unwrap
+                return self._resolve(bound, ctx, scopes)
+            return bound
+        return None
+
+    def _lookup(self, name: str, ctx: FileContext,
+                scopes: Optional[List[ast.AST]] = None):
+        """Find what ``name`` is bound to — a def, a lambda, or a
+        partial(...) call — searching enclosing function bodies
+        innermost-first, then module scope."""
+        if scopes is None:
+            scopes = [a for a in ctx.ancestors
+                      if isinstance(a, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef))]
+        bodies = [fn.body for fn in reversed(scopes)] + [ctx.tree.body]
+        for body in bodies:
+            for stmt in body:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)) \
+                        and stmt.name == name:
+                    return stmt
+                if isinstance(stmt, ast.Assign) \
+                        and len(stmt.targets) == 1 \
+                        and isinstance(stmt.targets[0], ast.Name) \
+                        and stmt.targets[0].id == name \
+                        and isinstance(stmt.value, (ast.Lambda, ast.Call)):
+                    return stmt.value
+        return None
+
+    # -- purity walk -------------------------------------------------------
+
+    def _check_pure(self, fn, ctx: FileContext, entry: str, entry_line: int,
+                    visited: Set[int]):
+        if id(fn) in visited:
+            return
+        visited.add(id(fn))
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                self._check_node(node, ctx, entry, entry_line, visited)
+
+    def _check_node(self, node, ctx, entry, entry_line, visited):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                if classify_lock(ctx.path, item.context_expr) is not None:
+                    self._flag(ctx, item.context_expr, entry, entry_line,
+                               "takes a lock")
+            return
+        if not isinstance(node, ast.Call):
+            return
+        parts = dotted(node.func)
+        if parts is None:
+            return
+        if len(parts) == 1 and parts[0] in _BANNED_BARE:
+            self._flag(ctx, node, entry, entry_line,
+                       f"calls {parts[0]}()")
+        elif len(parts) >= 2 and parts[0] in _BANNED_ROOTS:
+            self._flag(ctx, node, entry, entry_line,
+                       f"calls {'.'.join(parts)}()")
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "acquire" \
+                and classify_lock(ctx.path, node.func.value) is not None:
+            self._flag(ctx, node, entry, entry_line, "takes a lock")
+        elif len(parts) >= 2 and parts[-2] in HUB_NAMES:
+            self._flag(ctx, node, entry, entry_line,
+                       f"emits telemetry ({'.'.join(parts)})")
+        elif len(parts) == 1:
+            # one level of same-module recursion: f() inside the traced
+            # body drags f's effects into the trace too
+            callee = self._lookup(parts[0], ctx, scopes=[])
+            if isinstance(callee, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.Lambda)):
+                self._check_pure(callee, ctx, entry, entry_line, visited)
+
+    def _flag(self, ctx, node, entry, entry_line, what):
+        site = (ctx.path, node.lineno, node.col_offset)
+        if site in self._seen_sites:
+            return
+        self._seen_sites.add(site)
+        self.report_node(
+            ctx, node,
+            f"{what} inside a function traced by {entry} (line "
+            f"{entry_line}) — traced bodies run once at trace time and "
+            f"must stay free of host-side effects")

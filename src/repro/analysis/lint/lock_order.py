@@ -1,0 +1,317 @@
+"""lock-order: the cluster -> drive -> leaf/hub acquisition order.
+
+The runtime's documented locking contract (ROADMAP "Concurrency"):
+
+  * the coordinator takes the cluster lock (``ClusterEngine._lock``)
+    first, then at most one drive lock (``_Drive.lock``);
+  * workers take only their own drive lock;
+  * the telemetry hub lock is terminal — callers call into the hub,
+    the hub never calls back out while holding its lock.
+
+Lock *domains* are classified from the acquired expression's attribute
+name plus the file it lives in: an attribute literally named ``lock``
+is a drive lock; ``_lock`` in ``cluster_loop.py`` is the cluster lock;
+``_lock`` in ``telemetry.py`` is the hub lock; any other ``*_lock`` is
+a leaf (terminal, nothing nests inside it).  Domains are ordered
+cluster(0) < drive(1) < leaf(2) = hub(2): an acquisition is legal only
+if its level is strictly greater than every lock already held — except
+*re-entrance*: re-acquiring the same lock is legal when that lock is
+statically known to be an ``threading.RLock`` (the checker records
+``self.x = threading.RLock()`` assignments and ``x: threading.RLock``
+class annotations).  That covers the two documented re-entrant paths:
+the coordinator holding the cluster RLock calls ``fail`` which
+re-enters it, and ``Router.pick`` -> ``home`` re-enters the router
+RLock.  Re-entering a plain ``Lock`` the same way is a real deadlock
+and is flagged.
+
+Analysis is interprocedural but deliberately conservative: each
+function's direct acquisitions are recorded with the lexically-held
+locks, every call made under a lock is recorded, a may-acquire set is
+propagated to a fixpoint over the resolvable call graph, and a call
+under lock H to a function that may acquire A is flagged when A is not
+allowed under H.  Calls resolve only when unambiguous — bare names to
+same-module functions, ``self.m()`` to the enclosing class, and
+``obj.m()`` only when exactly one analyzed class defines ``m`` —
+anything ambiguous is skipped (false negatives over false positives).
+
+The no-callbacks-out rule: while the hub lock is held, calling a bare
+name that is a *parameter* of the enclosing function (i.e. an injected
+callback) is flagged — that is exactly the shape that lets user code
+re-enter the hub and deadlock.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from .astutil import dotted, func_params
+from .framework import Checker, FileContext, register
+
+CLUSTER, DRIVE, LEAF, HUB = "cluster", "drive", "leaf", "hub"
+LEVEL = {CLUSTER: 0, DRIVE: 1, LEAF: 2, HUB: 2}
+
+_RLOCK_CTORS = {("threading", "RLock"), ("RLock",)}
+
+
+def classify_lock(path: str, expr: ast.AST) -> Optional[str]:
+    """Map an acquired expression to a lock domain, or None if the
+    expression does not look like a lock at all."""
+    parts = dotted(expr)
+    name = parts[-1] if parts else None
+    if name is None:
+        return None
+    if name == "lock":
+        return DRIVE
+    if not name.endswith("_lock"):
+        return None
+    base = Path(path).name
+    if name == "_lock":
+        if base == "cluster_loop.py":
+            return CLUSTER
+        if base == "telemetry.py":
+            return HUB
+    return LEAF
+
+
+@register
+class LockOrderChecker(Checker):
+    name = "lock-order"
+    description = ("lock acquisitions must follow cluster -> drive -> "
+                   "leaf/hub; the hub never calls out under its lock")
+    contract = ("ROADMAP Concurrency: coordinator takes cluster then "
+                "drive; workers take only their drive lock; hub lock "
+                "is terminal (caller->hub, no callbacks out)")
+
+    def __init__(self):
+        super().__init__()
+        # func key -> [(domain, identity, line, col, held_tuple)]
+        self._acquires: Dict[Tuple, List] = {}
+        # func key -> [(ref, line, col, held_tuple)]
+        self._calls: Dict[Tuple, List] = {}
+        self._module_defs: Dict[str, Dict[str, Tuple]] = {}
+        self._class_methods: Dict[Tuple[str, str], Dict[str, Tuple]] = {}
+        self._method_owners: Dict[str, List[Tuple]] = {}
+        # lock identities (path, class-or-None, attr) built as RLock()
+        self._reentrant: Set[Tuple] = set()
+        self._reported: Set[Tuple] = set()
+
+    # -- identities --------------------------------------------------------
+
+    def _identity(self, ctx: FileContext, expr: ast.AST) -> Optional[Tuple]:
+        """Stable identity for a lock expression when we can pin it to a
+        definition site: ``self.x`` -> (path, EnclosingClass, x), a bare
+        module-level name -> (path, None, name).  ``other.lock`` has no
+        resolvable identity (None) and never matches for re-entrance."""
+        parts = dotted(expr)
+        if parts is None:
+            return None
+        if len(parts) == 2 and parts[0] == "self":
+            cls = ctx.enclosing_class()
+            if cls is not None:
+                return (ctx.path, cls.name, parts[1])
+            return None
+        if len(parts) == 1:
+            return (ctx.path, None, parts[0])
+        return None
+
+    def visit_Assign(self, node: ast.Assign, ctx: FileContext):
+        if not (isinstance(node.value, ast.Call)
+                and dotted(node.value.func) in _RLOCK_CTORS):
+            return
+        for target in node.targets:
+            ident = self._identity(ctx, target)
+            if ident is not None:
+                self._reentrant.add(ident)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign, ctx: FileContext):
+        # dataclass-style `lock: threading.RLock = field(...)` in a class
+        if dotted(node.annotation) not in _RLOCK_CTORS:
+            return
+        cls = ctx.enclosing_class()
+        if cls is not None and isinstance(node.target, ast.Name):
+            self._reentrant.add((ctx.path, cls.name, node.target.id))
+
+    def _allowed(self, held: Tuple, acquired: Tuple) -> bool:
+        hdom, hident = held
+        adom, aident = acquired
+        if hident is not None and hident == aident \
+                and hident in self._reentrant:
+            return True            # re-entering a known RLock
+        return LEVEL[adom] > LEVEL[hdom]
+
+    # -- collection --------------------------------------------------------
+
+    def _func_key(self, ctx: FileContext, extra: ast.AST = None):
+        """Identity of the innermost enclosing function: (path, class
+        qualname-or-None, function qualname).  Nested defs get their own
+        key (their acquisitions are not their parent's)."""
+        names, cls = [], None
+        chain = list(ctx.ancestors) + ([extra] if extra is not None else [])
+        for node in chain:
+            if isinstance(node, ast.ClassDef):
+                cls = node.name
+                names = []            # methods key under their class
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                names.append(node.name)
+        if not names:
+            return (ctx.path, cls, "<module>")
+        return (ctx.path, cls, ".".join(names))
+
+    def _held(self, ctx: FileContext, node: ast.AST) -> List[Tuple]:
+        """(domain, identity) of every lock lexically held at ``node``:
+        each ancestor ``with`` whose path continues through its *body*
+        (not the context expression itself)."""
+        held = []
+        chain = list(ctx.ancestors) + [node]
+        for i, anc in enumerate(chain[:-1]):
+            if not isinstance(anc, ast.With):
+                continue
+            child = chain[i + 1]
+            in_body = any(child is stmt or
+                          any(n is child for n in ast.walk(stmt))
+                          for stmt in anc.body)
+            if not in_body:
+                continue
+            for item in anc.items:
+                dom = classify_lock(ctx.path, item.context_expr)
+                if dom is not None:
+                    held.append((dom, self._identity(ctx,
+                                                     item.context_expr)))
+        return held
+
+    def visit_FunctionDef(self, node, ctx: FileContext):
+        key = self._func_key(ctx, extra=node)
+        self._acquires.setdefault(key, [])
+        self._calls.setdefault(key, [])
+        cls = ctx.enclosing_class()
+        fn = ctx.enclosing_function()
+        if fn is None:                      # top-level def or direct method
+            if cls is None:
+                self._module_defs.setdefault(ctx.path, {})[node.name] = key
+            else:
+                self._class_methods.setdefault(
+                    (ctx.path, cls.name), {})[node.name] = key
+                self._method_owners.setdefault(node.name, []).append(key)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_With(self, node: ast.With, ctx: FileContext):
+        key = self._func_key(ctx)
+        held = self._held(ctx, node)
+        for item in node.items:
+            dom = classify_lock(ctx.path, item.context_expr)
+            if dom is None:
+                continue
+            ident = self._identity(ctx, item.context_expr)
+            self._acquires.setdefault(key, []).append(
+                (dom, ident, item.context_expr.lineno,
+                 item.context_expr.col_offset, tuple(held)))
+            held = held + [(dom, ident)]  # later items in this `with` nest
+
+    def visit_Call(self, node: ast.Call, ctx: FileContext):
+        key = self._func_key(ctx)
+        held = self._held(ctx, node)
+        func = node.func
+        # explicit .acquire() counts as taking the lock
+        if isinstance(func, ast.Attribute) and func.attr == "acquire":
+            dom = classify_lock(ctx.path, func.value)
+            if dom is not None:
+                self._acquires.setdefault(key, []).append(
+                    (dom, self._identity(ctx, func.value), node.lineno,
+                     node.col_offset, tuple(held)))
+                return
+        ref = None
+        if isinstance(func, ast.Name):
+            ref = ("bare", func.id)
+        elif isinstance(func, ast.Attribute):
+            base = dotted(func.value)
+            if base == ("self",):
+                cls = ctx.enclosing_class()
+                ref = ("self", cls.name if cls else None, func.attr)
+            else:
+                ref = ("attr", func.attr)
+        if ref is not None:
+            self._calls.setdefault(key, []).append(
+                (ref, node.lineno, node.col_offset, tuple(held)))
+        # no-callbacks-out: a bare-name call to a parameter of the
+        # enclosing function while the hub lock is held
+        if any(dom == HUB for dom, _ in held) and isinstance(func, ast.Name):
+            fn = ctx.enclosing_function()
+            if fn is not None and func.id in func_params(fn):
+                self.report_node(
+                    ctx, node,
+                    f"call to injected callback {func.id!r} while holding "
+                    f"the hub lock — the hub must never call out under its "
+                    f"lock (caller->hub only)")
+
+    # -- cross-file analysis ----------------------------------------------
+
+    def _resolve(self, caller_key: Tuple, ref: Tuple) -> Optional[Tuple]:
+        path = caller_key[0]
+        if ref[0] == "bare":
+            return self._module_defs.get(path, {}).get(ref[1])
+        if ref[0] == "self":
+            _, cls, meth = ref
+            if cls is None:
+                return None
+            return self._class_methods.get((path, cls), {}).get(meth)
+        # obj.m(): only when exactly one analyzed class defines m
+        owners = self._method_owners.get(ref[1], [])
+        return owners[0] if len(owners) == 1 else None
+
+    def finish(self):
+        # direct out-of-order acquisitions
+        for key, acqs in self._acquires.items():
+            for dom, ident, line, col, held in acqs:
+                for h in held:
+                    if not self._allowed(h, (dom, ident)):
+                        self._emit(key[0], line, col,
+                                   f"{dom} lock acquired while holding the "
+                                   f"{h[0]} lock — order is cluster -> "
+                                   f"drive -> leaf/hub")
+        # may-acquire fixpoint over the resolvable call graph
+        may: Dict[Tuple, Set[Tuple]] = {
+            key: {(dom, ident) for dom, ident, *_ in acqs}
+            for key, acqs in self._acquires.items()}
+        edges: Dict[Tuple, Set[Tuple]] = {}
+        for key, calls in self._calls.items():
+            for ref, _line, _col, _held in calls:
+                callee = self._resolve(key, ref)
+                if callee is not None and callee != key:
+                    edges.setdefault(key, set()).add(callee)
+        changed = True
+        while changed:
+            changed = False
+            for key, callees in edges.items():
+                cur = may.setdefault(key, set())
+                for callee in callees:
+                    extra = may.get(callee, set()) - cur
+                    if extra:
+                        cur |= extra
+                        changed = True
+        # calls under a lock into functions that may acquire a lower domain
+        for key, calls in self._calls.items():
+            for ref, line, col, held in calls:
+                if not held:
+                    continue
+                callee = self._resolve(key, ref)
+                if callee is None:
+                    continue
+                for acq in sorted(may.get(callee, ()),
+                                  key=lambda a: (a[0], str(a[1]))):
+                    for h in held:
+                        if self._allowed(h, acq):
+                            continue
+                        name = ref[-1]
+                        self._emit(key[0], line, col,
+                                   f"call to {name!r} (may acquire the "
+                                   f"{acq[0]} lock) while holding the "
+                                   f"{h[0]} lock — order is cluster -> "
+                                   f"drive -> leaf/hub")
+
+    def _emit(self, path, line, col, message):
+        dedup = (path, line, col, message)
+        if dedup not in self._reported:
+            self._reported.add(dedup)
+            self.report_at(path, line, col, message)

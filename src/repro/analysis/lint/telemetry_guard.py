@@ -1,0 +1,120 @@
+"""telemetry-guard: every hub event call must sit behind an ``enabled``
+check.
+
+The instrumentation convention (ROADMAP "Observability"): the hot
+paths — ``serve_loop.py``, ``cluster_loop.py``, ``runtime.py`` — hold
+a hub reference (``self.tele``, defaulting to ``NULL_HUB``) and guard
+every event emission with ``if self.tele.enabled:`` so the disabled
+path costs exactly one attribute test, never a method call with
+argument construction.  This checker makes the convention mechanical:
+any call through a hub-ish receiver (``tele`` / ``telemetry`` / ``hub``
+/ ``_hub``, or a local alias assigned from one) in those three files
+must be *dominated* by an ``.enabled`` check — either an enclosing
+``if``/ternary whose test reads ``.enabled`` (with the call on the
+true path), or an earlier early-return guard in the same function
+(``if not t.enabled: return``).
+
+The hub's own methods (core/telemetry.py) are out of scope by
+construction — the hub may call itself freely; the guard discipline is
+for its callers.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Optional, Set
+
+from .astutil import contains_attr, dotted, on_body_path
+from .framework import Checker, FileContext, register
+
+SCOPED_FILES = {"serve_loop.py", "cluster_loop.py", "runtime.py"}
+HUB_NAMES = {"tele", "telemetry", "hub", "_hub"}
+
+
+def _hubish(node: ast.AST, aliases: Set[str]) -> bool:
+    parts = dotted(node)
+    if not parts:
+        return False
+    return parts[-1] in HUB_NAMES or (len(parts) == 1
+                                      and parts[0] in aliases)
+
+
+def _is_terminal(stmt: ast.stmt) -> bool:
+    return isinstance(stmt, (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+@register
+class TelemetryGuardChecker(Checker):
+    name = "telemetry-guard"
+    description = ("hub event calls in serve_loop/cluster_loop/runtime "
+                   "must be dominated by an .enabled check")
+    contract = ("NULL_HUB convention: the disabled telemetry path costs "
+                "one attribute test, never an event-call's argument "
+                "construction")
+
+    def __init__(self):
+        super().__init__()
+        self._alias_cache = {}
+
+    def _aliases(self, fn) -> Set[str]:
+        """Local names assigned from a hub-ish expression inside ``fn``
+        (``t = self.tele`` makes ``t`` hub-ish for the function)."""
+        if fn is None:
+            return set()
+        cached = self._alias_cache.get(id(fn))
+        if cached is not None:
+            return cached
+        out: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                parts = dotted(node.value)
+                if parts and parts[-1] in HUB_NAMES:
+                    out.add(node.targets[0].id)
+        self._alias_cache[id(fn)] = out
+        return out
+
+    def visit_Call(self, node: ast.Call, ctx: FileContext):
+        if Path(ctx.path).name not in SCOPED_FILES:
+            return
+        func = node.func
+        if not isinstance(func, ast.Attribute):
+            return
+        fn = ctx.enclosing_function()
+        aliases = self._aliases(fn)
+        if not _hubish(func.value, aliases):
+            return
+        if self._dominated(node, ctx, fn):
+            return
+        recv = ".".join(dotted(func.value) or ("<hub>",))
+        self.report_node(
+            ctx, node,
+            f"{recv}.{func.attr}(...) is not dominated by an .enabled "
+            f"check — wrap it in 'if {recv}.enabled:' (or add an early "
+            f"'if not {recv}.enabled: return') so the disabled path stays "
+            f"one attribute test")
+
+    def _dominated(self, node: ast.Call, ctx: FileContext, fn) -> bool:
+        # 1. enclosing if/ternary testing .enabled, call on the true path
+        for anc in ctx.ancestors:
+            if isinstance(anc, ast.If) and contains_attr(anc.test, "enabled"):
+                if on_body_path(ctx.ancestors, node, anc):
+                    return True
+            if isinstance(anc, ast.IfExp) \
+                    and contains_attr(anc.test, "enabled"):
+                return True
+        # 2. earlier early-return guard in the same function:
+        #    if not <...>.enabled: return/raise/continue/break
+        if fn is None:
+            return False
+        for stmt in fn.body:
+            if stmt.lineno >= node.lineno:
+                break
+            if isinstance(stmt, ast.If) \
+                    and isinstance(stmt.test, ast.UnaryOp) \
+                    and isinstance(stmt.test.op, ast.Not) \
+                    and contains_attr(stmt.test.operand, "enabled") \
+                    and stmt.body and all(_is_terminal(s)
+                                          for s in stmt.body):
+                return True
+        return False

@@ -103,7 +103,10 @@ def save_checkpoint(directory, step: int, tree, *, host: str = "host0",
     tmp_dir.rmdir()
     done = directory / f"step_{step:09d}.done"
     marker = directory / f".tmp_done_{step:09d}_{host}"
-    marker.write_text(str(time.time()))
+    # persisted wall-clock stamp: the .done marker records WHEN the
+    # checkpoint landed for humans/tooling comparing runs across restarts;
+    # perf_counter has no epoch and would be meaningless on disk
+    marker.write_text(str(time.time()))  # lint: disable=banned-api
     os.replace(marker, done)                       # atomic commit
     return step_dir
 

@@ -50,13 +50,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: pathlib.Path,
     plan = make_plan(mesh, cfg, fsdp=fsdp)
     recipe = make_recipe(plan, cfg, shape)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     fn, args = S.jitted_step_for(cfg, shape, recipe)
     with mesh:
         lowered = fn.lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()

@@ -39,10 +39,10 @@ def supervise(cmd: Sequence[str], *, max_restarts: int = 3,
     if env:
         full_env.update(env)
     while True:
-        t0 = time.time()
+        t0 = time.perf_counter()
         proc = subprocess.run(list(cmd), env=full_env, timeout=timeout_s)
         log.append(f"attempt={restarts} rc={proc.returncode} "
-                   f"dur={time.time() - t0:.1f}s")
+                   f"dur={time.perf_counter() - t0:.1f}s")
         if proc.returncode == 0:
             return SupervisorResult(restarts, 0, log)
         restarts += 1

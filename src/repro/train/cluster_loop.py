@@ -1224,6 +1224,8 @@ class ClusterEngine:
         join-wall-vs-busy utilization.  Only finite values are published
         (NaN would poison the JSON export and the NaN bench gates)."""
         t = self.tele
+        if not t.enabled:
+            return
         t.counter("cluster.ticks")
         t.gauge("cluster.clock_s", self.clock)
         t.gauge("cluster.queue_depth", len(self.queue))

@@ -110,10 +110,10 @@ def train(cfg: ModelConfig, data_cfg: DataConfig, tcfg: TrainConfig,
         while state.step < tcfg.steps and not stop["now"]:
             batch_np = loader.global_batch_at(state.step)
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            t0 = time.time()
+            t0 = time.perf_counter()
             params, opt, metrics = step_fn(state.params, state.opt_state, batch)
             metrics = {k: float(v) for k, v in metrics.items()}
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             state = TrainState(params=params, opt_state=opt, step=state.step + 1)
 
             # straggler rebalancing (multi-host: times come from peers)

@@ -1,0 +1,473 @@
+"""Tests for repro.analysis.lint: the framework, each of the five
+rules (one positive, one negative, one suppressed fixture case each),
+the CLI contract (error -> nonzero exit, --json diagnostics carry
+file/line/rule-id), the baseline ratchet, and the self-check that the
+shipped tree is clean under the committed LINT_BASELINE.json.
+
+Fixture files are written under tmp_path with the basenames the scoped
+rules key on (``cluster_loop.py``, ``telemetry.py``, ``runtime.py``):
+the checkers classify by file name + shape, not by import resolution,
+so a tiny snippet in a temp dir exercises exactly the production
+logic.
+"""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import (all_rules, baseline_payload, check_baseline,
+                                 load_baseline, run_lint)
+from repro.analysis.lint.cli import main as lint_main
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+pytestmark = pytest.mark.fast
+
+
+def lint_snippet(tmp_path, name, source, rules=None):
+    f = tmp_path / name
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(source))
+    return run_lint([str(f)], rules=rules)
+
+
+def rules_fired(report):
+    return {d.rule for d in report.diagnostics}
+
+
+# -- banned-api -------------------------------------------------------------
+
+def test_banned_api_positive(tmp_path):
+    report = lint_snippet(tmp_path, "core/thing.py", """\
+        import random, time
+
+        def f():
+            t0 = time.time()
+            x = random.random()
+            try:
+                pass
+            except:
+                pass
+            return t0, x
+        """)
+    msgs = [d for d in report.diagnostics if d.rule == "banned-api"]
+    assert len(msgs) == 3
+    assert {d.line for d in msgs} == {4, 5, 8}
+    assert all(d.severity == "error" for d in msgs)
+
+
+def test_banned_api_negative(tmp_path):
+    report = lint_snippet(tmp_path, "core/thing.py", """\
+        import random, time
+
+        def f(seed):
+            rng = random.Random(seed)
+            t0 = time.perf_counter()
+            try:
+                pass
+            except ValueError:
+                pass
+            return rng.random(), t0
+        """)
+    assert "banned-api" not in rules_fired(report)
+
+
+def test_banned_api_rng_rule_scoped_to_core_train(tmp_path):
+    # the unseeded-RNG ban only bites on the replayable core/train paths
+    report = lint_snippet(tmp_path, "tools/thing.py", """\
+        import random
+        x = random.random()
+        """)
+    assert "banned-api" not in rules_fired(report)
+
+
+def test_banned_api_suppressed(tmp_path):
+    report = lint_snippet(tmp_path, "core/thing.py", """\
+        import time
+        stamp = time.time()  # wall-clock on purpose; lint: disable=banned-api
+        """)
+    assert "banned-api" not in rules_fired(report)
+    assert [d.rule for d in report.suppressed] == ["banned-api"]
+    assert report.suppression_sites == {"banned-api": 1}
+
+
+# -- lock-order -------------------------------------------------------------
+
+def test_lock_order_positive_direct_and_interprocedural(tmp_path):
+    report = lint_snippet(tmp_path, "cluster_loop.py", """\
+        import threading
+
+        class ClusterEngine:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def take_cluster(self):
+                with self._lock:
+                    pass
+
+            def bad_direct(self, d):
+                with d.lock:
+                    with self._lock:
+                        pass
+
+            def bad_via_call(self, d):
+                with d.lock:
+                    self.take_cluster()
+        """)
+    msgs = [d for d in report.diagnostics if d.rule == "lock-order"]
+    # the nested `with self._lock` (cluster under drive) and the call
+    # into take_cluster (may acquire cluster) under the drive lock
+    assert {d.line for d in msgs} == {13, 18}
+
+
+def test_lock_order_negative_cluster_then_drive_and_rlock_reentry(tmp_path):
+    report = lint_snippet(tmp_path, "cluster_loop.py", """\
+        import threading
+
+        class ClusterEngine:
+            def __init__(self):
+                self._lock = threading.RLock()
+
+            def fail(self):
+                with self._lock:
+                    pass
+
+            def step(self, d):
+                with self._lock:
+                    with d.lock:
+                        pass
+                    self.fail()
+        """)
+    assert "lock-order" not in rules_fired(report)
+
+
+def test_lock_order_plain_lock_reentry_is_flagged(tmp_path):
+    # same shape as the RLock case, but re-entering a plain Lock
+    # self-deadlocks — the re-entrance exemption must not apply
+    report = lint_snippet(tmp_path, "router.py", """\
+        import threading
+
+        class Router:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def home(self):
+                with self._lock:
+                    return 1
+
+            def pick(self):
+                with self._lock:
+                    return self.home()
+        """)
+    msgs = [d for d in report.diagnostics if d.rule == "lock-order"]
+    assert [d.line for d in msgs] == [13]
+
+
+def test_lock_order_hub_no_callbacks_out(tmp_path):
+    report = lint_snippet(tmp_path, "telemetry.py", """\
+        import threading
+
+        class Hub:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def emit(self, on_event):
+                with self._lock:
+                    on_event()
+        """)
+    msgs = [d for d in report.diagnostics if d.rule == "lock-order"]
+    assert [d.line for d in msgs] == [9]
+    assert "hub" in msgs[0].message
+
+
+def test_lock_order_suppressed(tmp_path):
+    report = lint_snippet(tmp_path, "cluster_loop.py", """\
+        import threading
+
+        class ClusterEngine:
+            def bad(self, d):
+                with d.lock:
+                    with self._lock:  # lint: disable=lock-order
+                        pass
+        """)
+    assert "lock-order" not in rules_fired(report)
+    assert [d.rule for d in report.suppressed] == ["lock-order"]
+
+
+# -- fault-purity -----------------------------------------------------------
+
+def test_fault_purity_positive(tmp_path):
+    report = lint_snippet(tmp_path, "runtime.py", """\
+        class DriveWorker:
+            def run(self, tick):
+                if self.faults.begins(tick, self.drive_id):
+                    return True
+                self.faults.save("schedule.json")
+        """)
+    msgs = [d for d in report.diagnostics if d.rule == "fault-purity"]
+    assert {d.line for d in msgs} == {3, 5}
+
+
+def test_fault_purity_negative(tmp_path):
+    report = lint_snippet(tmp_path, "runtime.py", """\
+        class DriveWorker:
+            def run(self, tick):
+                if self.faults.crash_active(tick, self.drive_id):
+                    return True
+                return self.faults.hangs(tick, self.drive_id)
+        """)
+    assert "fault-purity" not in rules_fired(report)
+
+
+def test_fault_purity_only_scoped_to_runtime(tmp_path):
+    # the coordinator (cluster_loop.py) legitimately consumes begins()
+    report = lint_snippet(tmp_path, "cluster_loop.py", """\
+        class ClusterEngine:
+            def step(self, tick):
+                return self.faults.begins(tick, 0)
+        """)
+    assert "fault-purity" not in rules_fired(report)
+
+
+def test_fault_purity_suppressed(tmp_path):
+    report = lint_snippet(tmp_path, "runtime.py", """\
+        class DriveWorker:
+            def run(self, tick):
+                return self.faults.begins(tick, 0)  # lint: disable=fault-purity
+        """)
+    assert "fault-purity" not in rules_fired(report)
+    assert [d.rule for d in report.suppressed] == ["fault-purity"]
+
+
+# -- telemetry-guard --------------------------------------------------------
+
+def test_telemetry_guard_positive(tmp_path):
+    report = lint_snippet(tmp_path, "runtime.py", """\
+        class DriveWorker:
+            def run(self):
+                self.tele.counter("worker.ticks")
+        """)
+    msgs = [d for d in report.diagnostics if d.rule == "telemetry-guard"]
+    assert [d.line for d in msgs] == [3]
+    assert "enabled" in msgs[0].message
+
+
+def test_telemetry_guard_negative_guard_forms(tmp_path):
+    report = lint_snippet(tmp_path, "serve_loop.py", """\
+        class ServeEngine:
+            def wrapped(self):
+                if self.tele.enabled:
+                    self.tele.counter("a")
+
+            def early_return(self):
+                t = self.tele
+                if not t.enabled:
+                    return
+                t.counter("b")
+                t.gauge("c", 1.0)
+
+            def compound_test(self):
+                if self.tele.enabled and self.tele_requests:
+                    self.tele.open_request("r0")
+        """)
+    assert "telemetry-guard" not in rules_fired(report)
+
+
+def test_telemetry_guard_else_branch_not_dominated(tmp_path):
+    # the else branch of an enabled check is exactly the disabled path —
+    # an emission there must still be flagged
+    report = lint_snippet(tmp_path, "runtime.py", """\
+        class DriveWorker:
+            def run(self):
+                if self.tele.enabled:
+                    pass
+                else:
+                    self.tele.counter("oops")
+        """)
+    msgs = [d for d in report.diagnostics if d.rule == "telemetry-guard"]
+    assert [d.line for d in msgs] == [6]
+
+
+def test_telemetry_guard_suppressed(tmp_path):
+    report = lint_snippet(tmp_path, "runtime.py", """\
+        class DriveWorker:
+            def run(self):
+                self.tele.counter("t")  # lint: disable=telemetry-guard
+        """)
+    assert "telemetry-guard" not in rules_fired(report)
+    assert [d.rule for d in report.suppressed] == ["telemetry-guard"]
+
+
+# -- jit-purity -------------------------------------------------------------
+
+def test_jit_purity_positive(tmp_path):
+    report = lint_snippet(tmp_path, "engine.py", """\
+        import time
+        import jax
+
+        def step(x):
+            t0 = time.perf_counter()
+            print(x)
+            return x * t0
+
+        fn = jax.jit(step)
+        body = jax.lax.while_loop(lambda s: s < 3,
+                                  lambda s: s + int(time.time()), 0)
+        """)
+    msgs = [d for d in report.diagnostics if d.rule == "jit-purity"]
+    assert {d.line for d in msgs} == {5, 6, 11}
+
+
+def test_jit_purity_negative(tmp_path):
+    report = lint_snippet(tmp_path, "engine.py", """\
+        import functools
+        import jax
+        import jax.numpy as jnp
+
+        def _kernel(q_ref, o_ref, *, scale):
+            o_ref[...] = q_ref[...] * scale
+
+        def build(scale):
+            kernel = functools.partial(_kernel, scale=scale)
+            return pl.pallas_call(kernel, out_shape=None)
+
+        def step(x):
+            key = jax.random.PRNGKey(0)     # jax.random is traced, fine
+            return x + jax.random.normal(key)
+
+        fn = jax.jit(step)
+        """)
+    assert "jit-purity" not in rules_fired(report)
+
+
+def test_jit_purity_partial_unwrapped_and_telemetry(tmp_path):
+    # functools.partial around the kernel must not hide its effects,
+    # and hub-ish receivers count as host effects
+    report = lint_snippet(tmp_path, "engine.py", """\
+        import functools
+
+        def _kernel(q_ref, o_ref, *, hub):
+            hub.counter("inner")
+            o_ref[...] = q_ref[...]
+
+        def build(hub):
+            kernel = functools.partial(_kernel, hub=hub)
+            return pl.pallas_call(kernel, out_shape=None)
+        """)
+    msgs = [d for d in report.diagnostics if d.rule == "jit-purity"]
+    assert [d.line for d in msgs] == [4]
+    assert "telemetry" in msgs[0].message
+
+
+def test_jit_purity_suppressed(tmp_path):
+    report = lint_snippet(tmp_path, "engine.py", """\
+        import time
+        import jax
+
+        def step(x):
+            return x * time.perf_counter()  # trace-time const; lint: disable=jit-purity
+
+        fn = jax.jit(step)
+        """)
+    assert "jit-purity" not in rules_fired(report)
+    assert [d.rule for d in report.suppressed] == ["jit-purity"]
+
+
+# -- framework --------------------------------------------------------------
+
+def test_suppression_sites_counted_without_a_firing(tmp_path):
+    # a disable comment is counted even when no diagnostic fires on the
+    # line — the baseline pins comment sites, not fired-and-silenced hits
+    report = lint_snippet(tmp_path, "clean.py", """\
+        x = 1  # lint: disable=banned-api
+        """)
+    assert report.diagnostics == []
+    assert report.suppression_sites == {"banned-api": 1}
+
+
+def test_unknown_rule_filter_raises(tmp_path):
+    with pytest.raises(ValueError, match="unknown rule ids"):
+        lint_snippet(tmp_path, "x.py", "x = 1\n", rules=["no-such-rule"])
+
+
+def test_parse_error_is_a_diagnostic(tmp_path):
+    report = lint_snippet(tmp_path, "bad.py", "def broken(:\n")
+    assert [d.rule for d in report.diagnostics] == ["parse-error"]
+    assert report.diagnostics[0].severity == "error"
+
+
+def test_registry_has_the_five_rules():
+    assert set(all_rules()) == {"banned-api", "fault-purity", "jit-purity",
+                                "lock-order", "telemetry-guard"}
+
+
+# -- CLI --------------------------------------------------------------------
+
+def test_cli_json_exit_and_diagnostic_shape(tmp_path, capsys):
+    bad = tmp_path / "core" / "bad.py"
+    bad.parent.mkdir()
+    bad.write_text("import time\nt = time.time()\n")
+    rc = lint_main([str(bad), "--json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["ok"] is False and payload["errors"] == 1
+    (diag,) = payload["diagnostics"]
+    assert diag["path"].endswith("bad.py")
+    assert diag["line"] == 2
+    assert diag["rule"] == "banned-api"
+    assert diag["severity"] == "error"
+
+
+def test_cli_clean_tree_exits_zero(tmp_path, capsys):
+    good = tmp_path / "good.py"
+    good.write_text("import time\nt = time.perf_counter()\n")
+    assert lint_main([str(good), "--json"]) == 0
+    assert json.loads(capsys.readouterr().out)["ok"] is True
+
+
+def test_cli_baseline_ratchet(tmp_path, capsys):
+    f = tmp_path / "core" / "x.py"
+    f.parent.mkdir()
+    f.write_text("import time\nt = time.time()  # lint: disable=banned-api\n")
+    baseline = tmp_path / "BASE.json"
+    # no baseline entry for the suppression -> ratchet fails
+    empty = lint_main([str(tmp_path / "nothing"), "--write-baseline",
+                       str(baseline)])
+    assert empty == 0
+    capsys.readouterr()                    # drop the human-format output
+    rc = lint_main([str(f), "--json", "--baseline", str(baseline)])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert payload["errors"] == 0          # nothing fired...
+    assert payload["baseline_ok"] is False  # ...but the ratchet trips
+    # ratcheting the baseline to the current counts makes it pass
+    assert lint_main([str(f), "--write-baseline", str(baseline)]) == 0
+    assert lint_main([str(f), "--baseline", str(baseline)]) == 0
+
+
+# -- shipped tree -----------------------------------------------------------
+
+def test_shipped_tree_is_clean_under_committed_baseline():
+    paths = [str(REPO_ROOT / p) for p in
+             ("src/repro", "benchmarks", "examples")]
+    report = run_lint(paths)
+    assert report.errors == [], "\n".join(
+        d.format() for d in report.errors)
+    baseline = load_baseline(str(REPO_ROOT / "LINT_BASELINE.json"))
+    assert check_baseline(report, baseline) == []
+    # and the committed baseline is exactly what --write-baseline would
+    # produce today (no stale counts)
+    assert baseline == baseline_payload(report)
+
+
+def test_committed_baseline_structure_via_bench_gate():
+    from benchmarks._gate import check_lint_baseline
+    check_lint_baseline(REPO_ROOT / "LINT_BASELINE.json", emit=lambda *a: None)
+    with pytest.raises(RuntimeError, match="unknown rule id"):
+        import tempfile
+        with tempfile.NamedTemporaryFile("w", suffix=".json",
+                                         delete=False) as f:
+            json.dump({"version": 1,
+                       "rules": {"no-such-rule": {"suppressions": 0}}}, f)
+        check_lint_baseline(f.name, emit=lambda *a: None)
